@@ -1,0 +1,60 @@
+"""Communication load optimality (paper Remark 5).
+
+Claim: any scheme must move >= s field symbols from workers to master
+(cut-set bound); coded FFT moves EXACTLY s (m workers x s/m symbols) --
+optimal.  We count symbols analytically per strategy AND verify the
+distributed runtime's lowering: the single all-gather in the shard_map
+program carries exactly s complex symbols.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CodedFFT, coded_fft_threshold, repetition_threshold, short_dot_threshold
+
+
+def run() -> list[str]:
+    lines = ["bench_comm_load: worker->master symbols (input length s, "
+             "cut-set bound = s)"]
+    lines.append(f"{'N':>4} {'m':>3} {'s':>7} | {'coded':>8} {'short-dot':>10} "
+                 f"{'repetition':>11}")
+    for n, m, s in [(16, 4, 1 << 14), (64, 8, 1 << 16), (256, 16, 1 << 20)]:
+        coded = coded_fft_threshold(n, m) * (s // m)          # = s exactly
+        sd = short_dot_threshold(n, m) * (s // m)
+        rep = repetition_threshold(n, m) * (s // m)
+        lines.append(f"{n:>4} {m:>3} {s:>7} | {coded:>8} {sd:>10} {rep:>11}"
+                     f"   (coded/s = {coded / s:.2f}, optimal)")
+
+    # verify in the lowered distributed program (needs >= 2 local devices
+    # only for mesh construction; with 1 device we lower a 1-axis mesh)
+    ndev = jax.device_count()
+    if ndev >= 2:
+        from repro.distributed import DistributedCodedFFT, test_mesh
+
+        s, m, n = 4096, 4, ndev
+        mesh = test_mesh((ndev,), ("workers",))
+        plan = CodedFFT(s=s, m=m, n_workers=n)
+        d = DistributedCodedFFT(plan, mesh)
+        txt = d.lower().compile().as_text()
+        import re
+
+        ag = re.findall(r"c64\[([0-9,]+)\][^ ]* all-gather", txt)
+        tot = 0
+        for dims in ag:
+            prod = 1
+            for x in dims.split(","):
+                prod *= int(x)
+            tot += prod
+        lines.append(f"lowered shard_map program: all-gather carries {tot} "
+                     f"c64 symbols for s={s} (N x s/N view of the same s "
+                     f"coded symbols; bound s={s})")
+    else:
+        lines.append("(single device: skipping lowered-collective check; "
+                     "see tests/test_coded_runtime.py)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,96 @@
+"""Pallas kernels vs jnp oracles + v5e roofline estimates.
+
+The kernels run in interpret mode on CPU (this container has no TPU), so
+wall-clock here is NOT kernel performance -- correctness is checked
+against the pure-jnp oracle and we report the ANALYTIC roofline for the
+kernel shapes on v5e (197 TFLOP/s bf16-ish MXU, 819 GB/s HBM): the
+four-step worker FFT is intentionally matmul-rich so its arithmetic
+intensity lands in the compute-bound regime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.recombine import recombine as recombine_oracle
+from repro.kernels import ops
+
+
+def _roofline(flops: float, bytes_: float) -> str:
+    ct = flops / 197e12
+    mt = bytes_ / 819e9
+    dom = "compute" if ct > mt else "memory"
+    return (f"flops {flops:.2e}, bytes {bytes_:.2e}, AI "
+            f"{flops / bytes_:6.1f} F/B -> {dom}-bound "
+            f"(c {ct * 1e6:.1f}us vs m {mt * 1e6:.1f}us)")
+
+
+def run() -> list[str]:
+    lines = ["bench_kernels: Pallas (interpret) vs jnp oracle + v5e roofline"]
+    key = jax.random.PRNGKey(0)
+
+    # four-step worker FFT: L = A x B two-matmul formulation
+    for L in (4096, 16384):
+        x = (jax.random.normal(key, (8, L)) + 1j * jax.random.normal(key, (8, L))
+             ).astype(jnp.complex64)
+        got = ops.fft_fourstep(x)
+        want = jnp.fft.fft(x, axis=-1)
+        err = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+        a, b = ops.split_factor(L)
+        # planar complex: 2 matmuls x (3 real matmuls, karatsuba) per row batch
+        flops = 8 * 3 * 2 * L * (a + b)
+        bytes_ = 8 * L * 4 * 2 * 3  # read+write f32 planes through 3 stages
+        lines.append(f"  fourstep L={L} ({a}x{b}) rel err {err:.2e}; "
+                     + _roofline(flops * 1.0, bytes_ * 1.0))
+        assert err < 1e-3
+
+    # MDS encode/decode apply as complex matmul kernel
+    g = jnp.asarray(jax.random.normal(key, (8, 4)) + 1j, jnp.complex64)
+    c = (jax.random.normal(key, (4, 2048)) + 0j).astype(jnp.complex64)
+    got = ops.mds_apply(g, c)
+    want = jnp.einsum("nm,ml->nl", g, c)
+    err = float(jnp.max(jnp.abs(got - want)))
+    lines.append(f"  cmatmul (8,4)x(4,2048) abs err {err:.2e}; "
+                 + _roofline(3 * 2 * 8 * 4 * 2048, (8 * 4 + 4 * 2048 + 8 * 2048) * 8))
+    assert err < 1e-3
+
+    # fused recombine (twiddle + length-m DFT)
+    m, ell = 4, 2048
+    ch = (jax.random.normal(key, (m, ell)) + 1j * jax.random.normal(key, (m, ell))
+          ).astype(jnp.complex64)
+    got = ops.recombine_fused(ch, m * ell)
+    want = recombine_oracle(ch, m * ell)
+    err = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    lines.append(f"  recombine m={m} s={m * ell} rel err {err:.2e}; "
+                 + _roofline(3 * 2 * m * m * ell + 6 * m * ell,
+                             (2 * m * ell + m * ell) * 8))
+    assert err < 1e-3
+
+    # WKV recurrence kernel (RWKV-6): state resident in VMEM
+    from repro.kernels.wkv import wkv_pallas
+    from repro.models.rwkv6 import wkv_scan_reference
+
+    b, h, t, kd = 1, 2, 64, 32
+    ks = jax.random.split(key, 6)
+    mk = lambda i, sh: jax.random.normal(ks[i], sh, jnp.float32)
+    r, kk, vv = (mk(i, (b, t, h, kd)) for i in range(3))
+    lw = jnp.maximum(-jnp.abs(mk(3, (b, t, h, kd))), -8.0)
+    u = mk(4, (h, kd))
+    s0 = mk(5, (b, h, kd, kd))
+    fl = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, t, kd)
+    o, _ = wkv_pallas(fl(r), fl(kk), fl(vv), fl(lw), jnp.tile(u, (b, 1)),
+                      s0.reshape(b * h, kd, kd), interpret=True)
+    o_ref, _ = wkv_scan_reference(r, kk, vv, lw, u, s0)
+    err = float(jnp.max(jnp.abs(o - fl(o_ref))))
+    # per (bh): dots 2*T*K*K x3-ish; bytes: 4 inputs + 1 output streamed once
+    flops = b * h * (3 * 2 * t * kd * kd)
+    bytes_ = b * h * 5 * t * kd * 4
+    lines.append(f"  wkv (BH={b * h}, T={t}, K={kd}) abs err {err:.2e}; "
+                 + _roofline(float(flops), float(bytes_)))
+    assert err < 5e-3
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

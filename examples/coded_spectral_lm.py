@@ -1,0 +1,55 @@
+"""Coded FFT inside a model: a spectral long-conv mixer whose sequence FFT
+runs under the paper's coded computation plan.
+
+The mixer computes y = irfft(rfft(x) * rfft(h)) per channel; because the
+DFT is linear, running it through the (N, m)-MDS coded plan gives the
+layer straggler tolerance for free (paper §III-B linearity argument).  We
+knock out N - m workers mid-"training" and show the layer's output -- and
+its gradients -- are unchanged.
+
+Run:  PYTHONPATH=src python examples/coded_spectral_lm.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CodedFFT
+from repro.models.spectral import (
+    decaying_filter_init,
+    spectral_apply,
+    spectral_apply_coded,
+)
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    d_model, seq, filt = 32, 96, 32
+    p = decaying_filter_init(key, d_model, filt)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, seq, d_model))
+
+    # plain spectral mixer (what an FNO/Hyena-style block computes)
+    y_plain = spectral_apply(p, x)
+
+    # the same mixer, FFT executed via the coded plan with 2/6 workers dead
+    plan = CodedFFT(s=256, m=4, n_workers=6)
+    mask = jnp.asarray([True, False, True, True, False, True])
+    y_coded = spectral_apply_coded(p, x, plan, mask=mask)
+
+    err = float(jnp.max(jnp.abs(y_plain - y_coded)))
+    print(f"[spectral] coded vs plain mixer output err: {err:.2e} "
+          f"(2/{plan.n_workers} workers down)")
+    assert err < 1e-3
+
+    # gradients flow through the coded path identically
+    loss_plain = lambda pp: (spectral_apply(pp, x) ** 2).mean()
+    loss_coded = lambda pp: (spectral_apply_coded(pp, x, plan, mask=mask) ** 2).mean()
+    g1 = jax.grad(loss_plain)(p)["h"]
+    g2 = jax.grad(loss_coded)(p)["h"]
+    gerr = float(jnp.max(jnp.abs(g1 - g2)))
+    print(f"[spectral] filter-gradient err coded vs plain: {gerr:.2e}")
+    assert gerr < 1e-4
+    print("[spectral] straggler-tolerant spectral layer: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""The paper's own application end-to-end: a straggler-tolerant FFT service.
+
+Submits a stream of transform requests; each request's workers draw
+shifted-exponential latencies, the service answers after the fastest m,
+and every answer is verified against jnp.fft.  With 8 local devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) the worker compute
+runs under shard_map across a real device mesh; with 1 device it runs the
+same math locally.
+
+Run:  PYTHONPATH=src python examples/fft_service_demo.py
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+          PYTHONPATH=src python examples/fft_service_demo.py --mesh
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.straggler import StragglerModel
+from repro.serving import FFTService, FFTServiceConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true",
+                    help="run workers under shard_map (needs >= 8 devices)")
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.distributed import test_mesh
+
+        mesh = test_mesh((8,), ("workers",))
+        print(f"[demo] shard_map over {jax.device_count()} devices")
+
+    svc = FFTService(
+        FFTServiceConfig(s=4096, m=4, n_workers=8,
+                         straggler=StragglerModel(t0=1.0, mu=1.0)),
+        mesh=mesh)
+
+    key = jax.random.PRNGKey(0)
+    for i in range(args.requests):
+        key, k1, k2 = jax.random.split(key, 3)
+        x = (jax.random.normal(k1, (4096,))
+             + 1j * jax.random.normal(k2, (4096,))).astype(jnp.complex64)
+        y = svc.submit(x)
+        err = float(jnp.max(jnp.abs(y - jnp.fft.fft(x))))
+        assert err < 1e-2, err
+    st = svc.stats.summary()
+    print(f"[demo] {st['requests']} requests all correct")
+    print(f"[demo] mean latency: coded {st['mean_coded_latency']:.3f}s, "
+          f"wait-for-all {st['mean_uncoded_latency']:.3f}s "
+          f"-> {st['speedup']:.2f}x faster")
+    print(f"[demo] stragglers tolerated (worker-requests never waited on): "
+          f"{st['stragglers_tolerated']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["AsyncCheckpointer", "gc_checkpoints", "latest_step",
+           "restore_checkpoint", "save_checkpoint"]

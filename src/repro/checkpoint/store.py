@@ -1,0 +1,197 @@
+"""Atomic sharded checkpointing with auto-resume.
+
+Layout per step::
+
+    <dir>/step_000123/
+        shard_00000.npz        flattened leaf arrays (this host's slice)
+        MANIFEST.json          treedef paths, shapes, dtypes, host count,
+                               written LAST -> presence == checkpoint complete
+
+Writes go to ``step_XXX.tmp.<pid>`` and are renamed into place only after
+the manifest is fsynced, so a killed writer can never leave a checkpoint
+that ``latest_step`` would pick up -- restart-safe by construction.
+Multi-host: each process writes its own ``shard_<proc>.npz``; process 0
+writes the manifest after a barrier (single-host here, but the layout and
+the completeness protocol are the production ones).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer", "gc_checkpoints"]
+
+_MANIFEST = "MANIFEST.json"
+
+# numpy's .npz cannot round-trip ml_dtypes extension types (they load back
+# as raw void); store them viewed as same-width uints, restore via manifest.
+_EXT_DTYPES = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _to_disk(a: np.ndarray) -> np.ndarray:
+    name = a.dtype.name
+    if name in _EXT_DTYPES:
+        return a.view(_EXT_DTYPES[name][0])
+    return a
+
+
+def _from_disk(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return a.view(_EXT_DTYPES[dtype_name][1])
+    return a
+
+
+def _paths_and_leaves(tree) -> tuple[list[str], list[Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [jax.tree_util.keystr(k) for k, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def save_checkpoint(directory: str, step: int, tree, *, metadata: Optional[dict] = None,
+                    process_index: int = 0, keep_last: Optional[int] = None) -> str:
+    """Write ``tree`` atomically; returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = _step_dir(directory, step)
+    tmp = f"{final}.tmp.{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    paths, leaves = _paths_and_leaves(tree)
+    np_leaves = [np.asarray(v) for v in leaves]
+    arrays = {f"leaf_{i}": _to_disk(v) for i, v in enumerate(np_leaves)}
+    np.savez(os.path.join(tmp, f"shard_{process_index:05d}.npz"), **arrays)
+
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "shapes": [list(np.shape(v)) for v in np_leaves],
+        "dtypes": [v.dtype.name for v in np_leaves],
+        "process_count": 1,
+        "metadata": metadata or {},
+    }
+    mpath = os.path.join(tmp, _MANIFEST)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    if keep_last is not None:
+        gc_checkpoints(directory, keep_last)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest step with a complete manifest (ignores torn .tmp writes)."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(("tmp",)) and "." not in name:
+            if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like, *, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like``.  Returns (step, tree).
+
+    ``tree_like`` provides the treedef (values may be arrays or
+    ShapeDtypeStructs); leaf order must match the saved flattening order.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    cdir = _step_dir(directory, step)
+    with open(os.path.join(cdir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(cdir, "shard_00000.npz"))
+
+    paths, _ = _paths_and_leaves(tree_like)
+    if paths != manifest["paths"]:
+        raise ValueError(
+            "checkpoint tree structure mismatch:\n"
+            f"  saved    : {manifest['paths'][:5]}... ({len(manifest['paths'])} leaves)\n"
+            f"  restoring: {paths[:5]}... ({len(paths)} leaves)")
+    leaves = [
+        jnp.asarray(_from_disk(data[f"leaf_{i}"], manifest["dtypes"][i]))
+        for i in range(len(paths))
+    ]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def gc_checkpoints(directory: str, keep_last: int) -> None:
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_") and "." not in n
+        and os.path.exists(os.path.join(directory, n, _MANIFEST)))
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
+    # also clear torn tmp dirs
+    for n in os.listdir(directory):
+        if ".tmp." in n:
+            shutil.rmtree(os.path.join(directory, n), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint writes with the next training steps.
+
+    ``save`` snapshots to host memory synchronously (device_get), then a
+    daemon thread does the (slow) disk write; ``wait`` joins before the
+    next save or at shutdown, so at most one write is in flight and a save
+    is never silently dropped.
+    """
+
+    def __init__(self, directory: str, keep_last: Optional[int] = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                metadata=metadata, keep_last=self.keep_last)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

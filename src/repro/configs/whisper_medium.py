@@ -1,0 +1,45 @@
+"""Whisper-medium [audio] — enc-dec, 24+24L d_model=1024 16H (kv=16)
+d_ff=4096 vocab=51865.  Conv frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, T, d) per the assignment instructions.
+[arXiv:2212.04356]
+
+Pre-LN transformer, LayerNorm (not RMS), GELU MLP, learned/sinusoidal
+positions, no RoPE.  decode_32k / prefill_32k use a synthetic 32k-frame
+encoder sequence (the real model caps at 1500 frames — backbone-only
+benchmark, documented in DESIGN.md §4).
+"""
+
+import dataclasses
+
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,                 # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    mlp_variant="gelu",
+    norm="ln",
+    tie_embeddings=True,
+    frontend="audio_frames",
+    notes="enc-dec; conv frontend stubbed to precomputed frame embeddings",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    name="whisper-medium-reduced",
+    n_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+)

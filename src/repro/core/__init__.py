@@ -1,0 +1,59 @@
+"""Coded FFT core library (Yu, Maddah-Ali, Avestimehr 2017).
+
+The paper's primary contribution: straggler-optimal coded computation of
+discrete Fourier transforms.  See DESIGN.md §1 for the construction.
+"""
+
+from repro.core.coded_fft import CodedFFT, CodedFFTND, plan_factors
+from repro.core.fault_tolerance import RobustCodedFFT, robust_decode
+from repro.core.interleave import (
+    deinterleave,
+    deinterleave_nd,
+    interleave,
+    interleave_nd,
+)
+from repro.core.mds import (
+    decode_from_subset,
+    decode_masked,
+    encode,
+    encode_dft,
+    first_available,
+    rs_generator,
+    rs_nodes,
+)
+from repro.core.multi_input import CodedFFTMultiInput
+from repro.core.recombine import dft_matrix, recombine, recombine_nd, twiddle
+from repro.core.strategies import (
+    UncodedRepetitionFFT,
+    coded_fft_threshold,
+    repetition_threshold,
+    short_dot_threshold,
+)
+
+__all__ = [
+    "CodedFFT",
+    "CodedFFTND",
+    "CodedFFTMultiInput",
+    "RobustCodedFFT",
+    "robust_decode",
+    "plan_factors",
+    "interleave",
+    "deinterleave",
+    "interleave_nd",
+    "deinterleave_nd",
+    "rs_generator",
+    "rs_nodes",
+    "encode",
+    "encode_dft",
+    "decode_from_subset",
+    "decode_masked",
+    "first_available",
+    "recombine",
+    "recombine_nd",
+    "dft_matrix",
+    "twiddle",
+    "UncodedRepetitionFFT",
+    "coded_fft_threshold",
+    "repetition_threshold",
+    "short_dot_threshold",
+]

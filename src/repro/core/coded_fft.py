@@ -1,0 +1,223 @@
+"""Coded FFT -- the paper's optimal computation strategy (Theorem 1).
+
+Pipeline (§III-B):
+
+  1. ``interleave``     : x -> (c_0, ..., c_{m-1}),  c_i[j] = x[i + j*m]
+  2. ``encode``         : (N, m)-MDS code over the shards -> a_0..a_{N-1}
+  3. ``worker_compute`` : b_k = DFT_{s/m}(a_k)   (linearity => the b_k carry
+                          the same MDS code over the C_i = DFT(c_i))
+  4. ``decode``         : any m of the b_k -> all C_i  (MDS inversion)
+  5. ``recombine``      : twiddle + length-m DFTs -> X  (eq. 23/24)
+
+Recovery threshold is exactly ``m`` -- the master never needs more than the
+fastest ``m`` workers, which is information-theoretically optimal (Thm 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mds
+from repro.core.interleave import deinterleave_nd, interleave, interleave_nd
+from repro.core.recombine import recombine, recombine_nd
+
+__all__ = ["CodedFFT", "CodedFFTND", "plan_factors"]
+
+
+def _default_fft(a: jax.Array) -> jax.Array:
+    """Reference worker computation: length-L FFT along the last axis."""
+    return jnp.fft.fft(a, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedFFT:
+    """1-D coded FFT computation strategy.
+
+    Args:
+      s: transform length.
+      m: storage fraction parameter -- each worker stores/processes s/m.
+      n_workers: N >= m workers.
+      dtype: complex dtype of the computation.
+      worker_fn: the per-worker DFT implementation (default: jnp.fft along
+        the last axis; the Pallas four-step kernel plugs in here).
+    """
+
+    s: int
+    m: int
+    n_workers: int
+    dtype: jnp.dtype = jnp.complex64
+    worker_fn: Callable[[jax.Array], jax.Array] = _default_fft
+
+    def __post_init__(self):
+        if self.s % self.m != 0:
+            raise ValueError(f"m={self.m} must divide s={self.s}")
+        if self.n_workers < self.m:
+            raise ValueError(
+                f"need N >= m for recoverability, got N={self.n_workers} m={self.m}"
+            )
+
+    @property
+    def shard_len(self) -> int:
+        return self.s // self.m
+
+    @property
+    def recovery_threshold(self) -> int:
+        """Theorem 1: K* = m."""
+        return self.m
+
+    @property
+    def generator(self) -> jax.Array:
+        return mds.rs_generator(self.n_workers, self.m, self.dtype)
+
+    # -- stage 1+2: master-side encoding ------------------------------------
+    def encode(self, x: jax.Array) -> jax.Array:
+        """Input vector -> (N, s/m) coded shards (one row per worker)."""
+        c = interleave(x.astype(self.dtype), self.m)
+        return mds.encode(self.generator, c)
+
+    def encode_fast(self, x: jax.Array) -> jax.Array:
+        """O(N log N)-per-column encode via the zero-padded DFT identity."""
+        c = interleave(x.astype(self.dtype), self.m)
+        return mds.encode_dft(c, self.n_workers).astype(self.dtype)
+
+    # -- stage 3: worker computation -----------------------------------------
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        """Each worker FFTs its own coded shard.  ``a``: (N, s/m)."""
+        return self.worker_fn(a)
+
+    # -- stage 4+5: master-side decoding -------------------------------------
+    def decode(
+        self,
+        b: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Recover X from worker results ``b`` (N, s/m).
+
+        Exactly one of ``subset`` (indices of the m responders) or ``mask``
+        (boolean availability, first m available are used) may be given;
+        with neither, workers 0..m-1 are used.
+        """
+        if subset is not None and mask is not None:
+            raise ValueError("pass at most one of subset / mask")
+        if subset is None:
+            if mask is not None:
+                subset = mds.first_available(mask, self.m)
+            else:
+                subset = jnp.arange(self.m)
+        c_hat = mds.decode_from_subset(self.generator, b, subset)
+        return recombine(c_hat, self.s)
+
+    # -- end-to-end -----------------------------------------------------------
+    def run(
+        self,
+        x: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        b = self.worker_compute(self.encode(x))
+        return self.decode(b, subset=subset, mask=mask)
+
+
+def plan_factors(shape: tuple[int, ...], m: int) -> tuple[int, ...]:
+    """Pick per-axis interleave factors with prod(m_k) = m, m_k | s_k.
+
+    Greedy: peel prime factors of m off the largest remaining axis that
+    admits them.  Raises if m cannot be factored across the axes.
+    """
+    remaining = m
+    factors = [1] * len(shape)
+    caps = list(shape)
+    primes = []
+    d, r = 2, remaining
+    while d * d <= r:
+        while r % d == 0:
+            primes.append(d)
+            r //= d
+        d += 1
+    if r > 1:
+        primes.append(r)
+    for p in sorted(primes, reverse=True):
+        # place p on the axis with the largest remaining quotient divisible by p
+        best = None
+        for k in range(len(shape)):
+            if caps[k] % (factors[k] * p) == 0:
+                q = caps[k] // (factors[k] * p)
+                if best is None or q > best[1]:
+                    best = (k, q)
+        if best is None:
+            raise ValueError(f"cannot split m={m} across shape {shape}")
+        factors[best[0]] *= p
+    assert math.prod(factors) == m
+    return tuple(factors)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedFFTND:
+    """n-D coded FFT (Theorem 3).  ``factors[k]`` divides ``shape[k]`` and
+    ``prod(factors) = m``."""
+
+    shape: tuple[int, ...]
+    factors: tuple[int, ...]
+    n_workers: int
+    dtype: jnp.dtype = jnp.complex64
+
+    def __post_init__(self):
+        for sk, mk in zip(self.shape, self.factors):
+            if sk % mk != 0:
+                raise ValueError(f"factor {mk} must divide dim {sk}")
+        if self.n_workers < self.m:
+            raise ValueError("need N >= m")
+
+    @property
+    def m(self) -> int:
+        return math.prod(self.factors)
+
+    @property
+    def shard_shape(self) -> tuple[int, ...]:
+        return tuple(sk // mk for sk, mk in zip(self.shape, self.factors))
+
+    @property
+    def recovery_threshold(self) -> int:
+        return self.m
+
+    @property
+    def generator(self) -> jax.Array:
+        return mds.rs_generator(self.n_workers, self.m, self.dtype)
+
+    def encode(self, t: jax.Array) -> jax.Array:
+        c = interleave_nd(t.astype(self.dtype), self.factors)
+        return mds.encode(self.generator, c)
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        """n-D FFT of each worker's coded tensor: (N, *shard_shape)."""
+        axes = tuple(range(1, len(self.shape) + 1))
+        return jnp.fft.fftn(a, axes=axes)
+
+    def decode(
+        self,
+        b: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        if subset is None:
+            if mask is not None:
+                subset = mds.first_available(mask, self.m)
+            else:
+                subset = jnp.arange(self.m)
+        c_hat = mds.decode_from_subset(self.generator, b, subset)
+        return recombine_nd(c_hat, self.shape, self.factors)
+
+    def run(
+        self,
+        t: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        b = self.worker_compute(self.encode(t))
+        return self.decode(b, subset=subset, mask=mask)

@@ -1,0 +1,203 @@
+"""Byzantine fault detection/correction for coded FFT (paper Remark 3).
+
+Because the worker results form an (N, m)-MDS codeword (per payload column),
+receiving ``k`` results allows *detecting* up to ``k - m`` arbitrarily wrong
+workers and *correcting* up to ``floor((k - m) / 2)`` of them -- the classic
+MDS-distance argument, which the paper points out carries over to coded FFT.
+
+Over F = C with Vandermonde/RS codes, error location is done with Prony's
+method on the syndrome sequence (the complex-field analogue of
+Berlekamp-Massey):
+
+* generalized-RS syndromes at arbitrary distinct nodes ``{a_j}``:
+      S_r = sum_j  r_j * u_j * a_j^r ,   r < k - m,
+      u_j = 1 / prod_{l != j} (a_j - a_l)
+  vanish for every valid codeword (divided-difference identity: the r-th
+  syndrome is the leading coefficient of the degree-(k-1) interpolant of
+  ``x^r * p(x)``, zero whenever ``deg p < m`` and ``r < k - m``).
+* with ``e`` errors the syndromes become a sum of ``e`` exponentials
+  ``S_r = sum_t w_t z_t^r`` whose Prony annihilator roots ``z_t`` are the
+  error nodes; 2e syndromes determine them, hence ``e <= (k - m)/2``.
+
+Decoding is master-side and tiny (k <= N), so this module is plain
+jnp/ndarray code without jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mds
+from repro.core.coded_fft import CodedFFT
+
+__all__ = [
+    "lagrange_weights",
+    "syndromes",
+    "detect_errors",
+    "locate_errors",
+    "correct_errors",
+    "RobustDecodeResult",
+    "robust_decode",
+    "RobustCodedFFT",
+]
+
+
+def lagrange_weights(nodes: np.ndarray) -> np.ndarray:
+    """u_j = 1 / prod_{l != j}(a_j - a_l) for distinct nodes."""
+    diff = nodes[:, None] - nodes[None, :]
+    np.fill_diagonal(diff, 1.0)
+    return 1.0 / np.prod(diff, axis=1)
+
+
+def syndromes(nodes: np.ndarray, received: np.ndarray, m: int) -> np.ndarray:
+    """Syndrome matrix, shape ``(k - m, L)`` for received values ``(k, L)``."""
+    k = nodes.shape[0]
+    u = lagrange_weights(nodes)
+    powers = np.vander(nodes, N=k - m, increasing=True).T  # (k-m, k)
+    return (powers * u[None, :]) @ received
+
+
+def detect_errors(
+    nodes: np.ndarray, received: np.ndarray, m: int, tol: float = 1e-6
+) -> bool:
+    """True iff the received rows are NOT a valid codeword (some worker lied).
+
+    Detects up to ``k - m`` arbitrary errors (any fewer errors cannot produce
+    another codeword, by MDS distance).
+    """
+    s = syndromes(nodes, received, m)
+    scale = max(np.abs(received).max(), 1.0)
+    return bool(np.abs(s).max() > tol * scale)
+
+
+def locate_errors(
+    nodes: np.ndarray,
+    received: np.ndarray,
+    m: int,
+    tol: float = 1e-6,
+) -> Optional[np.ndarray]:
+    """Return indices (into the received subset) of erroneous workers.
+
+    Tries error counts e = 0, 1, ..., floor((k-m)/2) and returns the first
+    hypothesis whose corrected word passes the syndrome check; None if no
+    consistent hypothesis exists (more errors than correctable).
+    """
+    k = nodes.shape[0]
+    n_syn = k - m
+    e_max = n_syn // 2
+    syn = syndromes(nodes, received, m)  # (n_syn, L)
+    scale = max(np.abs(received).max(), 1.0)
+    if np.abs(syn).max() <= tol * scale:
+        return np.zeros((0,), dtype=np.int64)
+    # random projection across payload columns -> scalar syndrome sequence;
+    # error positions are column-independent so a generic projection keeps them.
+    rng = np.random.default_rng(0)
+    rho = rng.normal(size=syn.shape[1]) + 1j * rng.normal(size=syn.shape[1])
+    s = syn @ rho  # (n_syn,)
+    for e in range(1, e_max + 1):
+        if n_syn < 2 * e:
+            break
+        # Prony: solve Hankel system for monic annihilator Lambda of degree e
+        rows = n_syn - e
+        a_mat = np.stack([s[i : i + e] for i in range(rows)])  # (rows, e)
+        rhs = -s[e : e + rows]
+        coeffs, *_ = np.linalg.lstsq(a_mat, rhs, rcond=None)
+        # Lambda(x) = x^e + coeffs[e-1] x^{e-1} + ... + coeffs[0]
+        poly = np.concatenate([[1.0 + 0j], coeffs[::-1]])
+        roots = np.roots(poly)
+        # match roots to nearest received node
+        idx = np.unique(np.argmin(np.abs(roots[:, None] - nodes[None, :]), axis=1))
+        if idx.shape[0] != e:
+            continue
+        # hypothesis check: solve error values per column, verify residual
+        basis = np.vander(nodes[idx], N=n_syn, increasing=True).T  # (n_syn, e)
+        u = lagrange_weights(nodes)
+        design = basis * u[idx][None, :]
+        vals, *_ = np.linalg.lstsq(design, syn, rcond=None)  # (e, L)
+        resid = syn - design @ vals
+        if np.abs(resid).max() <= max(tol * scale, 1e-9):
+            return idx.astype(np.int64)
+    return None
+
+
+def correct_errors(
+    nodes: np.ndarray,
+    received: np.ndarray,
+    m: int,
+    tol: float = 1e-6,
+) -> Optional[np.ndarray]:
+    """Return corrected received rows, or None if uncorrectable."""
+    err_idx = locate_errors(nodes, received, m, tol)
+    if err_idx is None:
+        return None
+    if err_idx.shape[0] == 0:
+        return received
+    k = nodes.shape[0]
+    n_syn = k - m
+    syn = syndromes(nodes, received, m)
+    u = lagrange_weights(nodes)
+    basis = np.vander(nodes[err_idx], N=n_syn, increasing=True).T
+    design = basis * u[err_idx][None, :]
+    weighted_err, *_ = np.linalg.lstsq(design, syn, rcond=None)  # (e, L)
+    corrected = received.copy()
+    corrected[err_idx] -= weighted_err
+    return corrected
+
+
+@dataclasses.dataclass
+class RobustDecodeResult:
+    output: Optional[np.ndarray]
+    n_errors_corrected: int
+    error_worker_indices: np.ndarray  # global worker ids found erroneous
+    ok: bool
+
+
+def robust_decode(
+    strategy: CodedFFT,
+    b: jnp.ndarray,
+    recv_idx: np.ndarray,
+    tol: float = 1e-6,
+) -> RobustDecodeResult:
+    """Decode coded-FFT worker results with Byzantine workers present.
+
+    ``b``: (N, L) results, of which only rows ``recv_idx`` (k of them)
+    arrived; up to floor((k - m)/2) of those may be arbitrarily corrupted.
+    """
+    nodes = np.asarray(mds.rs_nodes(strategy.n_workers, jnp.complex128))[recv_idx]
+    received = np.asarray(b, dtype=np.complex128)[recv_idx]
+    corrected = correct_errors(nodes, received, strategy.m, tol)
+    if corrected is None:
+        return RobustDecodeResult(None, 0, np.zeros(0, np.int64), ok=False)
+    err_local = locate_errors(nodes, received, strategy.m, tol)
+    n_err = 0 if err_local is None else int(err_local.shape[0])
+    # decode from the first m *clean* received rows (global indexing)
+    clean_local = [i for i in range(len(recv_idx)) if err_local is None or i not in set(err_local.tolist())]
+    use_local = np.asarray(clean_local[: strategy.m])
+    subset = jnp.asarray(recv_idx[use_local])
+    b_full = np.array(b, dtype=np.complex128)
+    b_full[recv_idx] = corrected
+    x = strategy.decode(jnp.asarray(b_full).astype(strategy.dtype), subset=subset)
+    err_global = recv_idx[err_local] if (err_local is not None and n_err) else np.zeros(0, np.int64)
+    return RobustDecodeResult(np.asarray(x), n_err, err_global, ok=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustCodedFFT:
+    """Coded FFT with Byzantine-fault correction layered on top (Remark 3)."""
+
+    strategy: CodedFFT
+    tol: float = 1e-6
+
+    def max_correctable(self, k_received: int) -> int:
+        return (k_received - self.strategy.m) // 2
+
+    def max_detectable(self, k_received: int) -> int:
+        return k_received - self.strategy.m
+
+    def run(self, x: jnp.ndarray, recv_idx: np.ndarray) -> RobustDecodeResult:
+        b = self.strategy.worker_compute(self.strategy.encode(x))
+        return robust_decode(self.strategy, b, recv_idx, self.tol)

@@ -1,0 +1,84 @@
+"""Interleaving (decimation-in-time) for coded FFT.
+
+1-D (paper eq. 20):   ``c_i[j] = x[i + j*m]``  for ``i < m``, ``j < s/m``.
+
+n-D (paper eq. 28, with the index typo fixed -- the stride along axis ``k``
+is ``m_k``, not ``m``):
+
+    c_{(i_0..i_{n-1})}[j_0..j_{n-1}] = t[(i_0 + j_0*m_0), ..., (i_{n-1} + j_{n-1}*m_{n-1})]
+
+The ``prod(m_k) = m`` interleaved tensors are stacked along a leading shard
+axis in row-major order of ``(i_0, ..., i_{n-1})``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "interleave",
+    "deinterleave",
+    "interleave_nd",
+    "deinterleave_nd",
+]
+
+
+def interleave(x: jax.Array, m: int) -> jax.Array:
+    """Split ``x`` (length ``s``, trailing batch dims allowed *before* the
+    transform axis is NOT supported -- transform axis must be axis 0) into
+    ``m`` interleaved vectors.  Returns shape ``(m, s // m)``."""
+    s = x.shape[0]
+    if s % m != 0:
+        raise ValueError(f"m={m} must divide s={s}")
+    # x[i + j*m] == x.reshape(s//m, m)[j, i]  ->  transpose to (m, s//m)
+    return jnp.swapaxes(x.reshape((s // m, m) + x.shape[1:]), 0, 1)
+
+
+def deinterleave(c: jax.Array) -> jax.Array:
+    """Inverse of :func:`interleave`: ``(m, L, *rest) -> (m*L, *rest)``."""
+    m, ell = c.shape[0], c.shape[1]
+    return jnp.swapaxes(c, 0, 1).reshape((m * ell,) + c.shape[2:])
+
+
+def interleave_nd(t: jax.Array, factors: tuple[int, ...]) -> jax.Array:
+    """Interleave an n-D tensor by ``m_k`` along axis ``k``.
+
+    ``t``: shape ``(s_0, ..., s_{n-1})``; ``factors``: ``(m_0, ..., m_{n-1})``
+    with ``m_k | s_k``.  Returns shape ``(m, s_0/m_0, ..., s_{n-1}/m_{n-1})``
+    where ``m = prod(m_k)`` and the shard axis enumerates ``(i_0..i_{n-1})``
+    in row-major order.
+    """
+    n = len(factors)
+    if t.ndim != n:
+        raise ValueError(f"tensor rank {t.ndim} != len(factors) {n}")
+    shape = []
+    for sk, mk in zip(t.shape, factors):
+        if sk % mk != 0:
+            raise ValueError(f"factor {mk} must divide dim {sk}")
+        shape.extend([sk // mk, mk])
+    # reshape to (L_0, m_0, L_1, m_1, ...) then move all m_k axes to front
+    r = t.reshape(shape)
+    m_axes = [2 * k + 1 for k in range(n)]
+    l_axes = [2 * k for k in range(n)]
+    r = jnp.transpose(r, m_axes + l_axes)  # (m_0..m_{n-1}, L_0..L_{n-1})
+    m = math.prod(factors)
+    ells = tuple(sk // mk for sk, mk in zip(t.shape, factors))
+    return r.reshape((m,) + ells)
+
+
+def deinterleave_nd(
+    c: jax.Array, factors: tuple[int, ...], out_shape: tuple[int, ...]
+) -> jax.Array:
+    """Inverse of :func:`interleave_nd`."""
+    n = len(factors)
+    ells = tuple(sk // mk for sk, mk in zip(out_shape, factors))
+    r = c.reshape(tuple(factors) + ells)
+    # (m_0..m_{n-1}, L_0..L_{n-1}) -> (L_0, m_0, L_1, m_1, ...)
+    perm = []
+    for k in range(n):
+        perm.extend([n + k, k])
+    r = jnp.transpose(r, perm)
+    return r.reshape(out_shape)

@@ -1,0 +1,138 @@
+"""Complex Reed-Solomon MDS codes for coded computation.
+
+The paper (§III-B) requires an arbitrary ``(N, m)``-MDS code over a field
+with a primitive root of unity.  Working over ``F = C`` we use a Vandermonde
+generator evaluated at the ``N``-th roots of unity::
+
+    G[k, i] = alpha_k ** i,   alpha_k = exp(-2j * pi * k / N),   i < m
+
+Properties exploited here:
+
+* every ``m x m`` submatrix of ``G`` is a Vandermonde matrix on distinct
+  unit-circle nodes, hence invertible -> the code is MDS and the recovery
+  threshold is exactly ``m`` (Theorem 1);
+* nodes on the unit circle give the best-conditioned subset inverses among
+  Vandermonde choices over C, which matters for float decoding;
+* encoding equals evaluating the degree-``(m-1)`` message polynomial at the
+  roots of unity, i.e. a zero-padded length-``N`` DFT -- the paper's
+  Reed-Solomon suggestion (§III-C) specialised to C.
+
+All functions are jit-compatible and batched over trailing axes: message
+``c`` has shape ``(m, *payload)`` and codeword ``a`` has ``(n, *payload)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rs_nodes",
+    "rs_generator",
+    "encode",
+    "decode_from_subset",
+    "subset_decode_matrix",
+    "first_available",
+    "decode_masked",
+    "encode_dft",
+]
+
+
+def rs_nodes(n: int, dtype=jnp.complex64) -> jax.Array:
+    """The ``n`` evaluation nodes: ``exp(-2j*pi*k/n)`` for ``k < n``."""
+    k = jnp.arange(n)
+    return jnp.exp(-2j * jnp.pi * k / n).astype(dtype)
+
+
+def rs_generator(n: int, m: int, dtype=jnp.complex64) -> jax.Array:
+    """``(n, m)`` Vandermonde generator ``G[k, i] = alpha_k**i``."""
+    if m > n:
+        raise ValueError(f"need n >= m, got n={n} m={m}")
+    nodes = rs_nodes(n, dtype)
+    powers = jnp.arange(m)
+    return (nodes[:, None] ** powers[None, :]).astype(dtype)
+
+
+def _flatten_payload(c: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    payload = c.shape[1:]
+    return c.reshape(c.shape[0], -1), payload
+
+
+def encode(generator: jax.Array, c: jax.Array) -> jax.Array:
+    """Encode ``m`` message shards into ``n`` coded shards: ``a = G @ c``.
+
+    ``c``: ``(m, *payload)`` -> returns ``(n, *payload)``.
+    """
+    flat, payload = _flatten_payload(c)
+    coded = generator.astype(flat.dtype) @ flat
+    return coded.reshape((generator.shape[0],) + payload)
+
+
+def encode_dft(c: jax.Array, n: int) -> jax.Array:
+    """Fast encode for the roots-of-unity generator.
+
+    Evaluating the message polynomial at all ``n`` roots of unity is a
+    zero-padded length-``n`` DFT along the shard axis:
+    ``a_k = sum_i c_i * omega_n^{ki}`` = ``fft(pad(c, n), axis=0)[k]``.
+    O(n log n) per payload element instead of O(n*m).
+    """
+    m = c.shape[0]
+    if n < m:
+        raise ValueError(f"need n >= m, got n={n} m={m}")
+    pad = [(0, n - m)] + [(0, 0)] * (c.ndim - 1)
+    return jnp.fft.fft(jnp.pad(c, pad), axis=0)
+
+
+def subset_decode_matrix(generator: jax.Array, subset: jax.Array) -> jax.Array:
+    """Inverse of the ``m x m`` generator submatrix picked by ``subset``."""
+    sub = jnp.take(generator, subset, axis=0)
+    return jnp.linalg.inv(sub)
+
+
+def decode_from_subset(
+    generator: jax.Array, b: jax.Array, subset: jax.Array
+) -> jax.Array:
+    """Recover the ``m`` message shards from the coded results in ``subset``.
+
+    ``b``: ``(n, *payload)`` worker results (rows outside ``subset`` are
+    ignored, so stragglers may hold garbage).  ``subset``: ``(m,)`` integer
+    indices of the workers that responded.  Static-shape, jit-safe.
+    """
+    m = generator.shape[1]
+    if subset.shape[0] != m:
+        raise ValueError(f"subset must have exactly m={m} entries")
+    flat, payload = _flatten_payload(b)
+    rows = jnp.take(flat, subset, axis=0)
+    sub = jnp.take(generator, subset, axis=0).astype(flat.dtype)
+    decoded = jnp.linalg.solve(sub, rows)
+    return decoded.reshape((m,) + payload)
+
+
+def first_available(mask: jax.Array, m: int) -> jax.Array:
+    """Indices of the first ``m`` available workers (stable order).
+
+    ``mask``: boolean ``(n,)``, True = result arrived.  The master waits for
+    the *fastest* m workers; inside one SPMD program we model arrival order
+    by the mask and pick the first m set entries.  Shapes stay static.
+    """
+    # argsort of (not mask) is stable: available indices first, in order.
+    order = jnp.argsort(jnp.logical_not(mask), stable=True)
+    return order[:m]
+
+
+def decode_masked(generator: jax.Array, b: jax.Array, mask: jax.Array) -> jax.Array:
+    """Decode from whichever ``m`` workers are available per ``mask``."""
+    m = generator.shape[1]
+    subset = first_available(mask, m)
+    return decode_from_subset(generator, b, subset)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _condition_numbers(n: int, m: int) -> jax.Array:  # pragma: no cover - util
+    """Condition number of every contiguous m-subset (diagnostic helper)."""
+    g = rs_generator(n, m, jnp.complex128)
+    idx = (jnp.arange(n)[:, None] + jnp.arange(m)[None, :]) % n
+    subs = g[idx]  # (n, m, m)
+    return jnp.linalg.cond(subs)

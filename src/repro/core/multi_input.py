@@ -1,0 +1,118 @@
+"""Coded FFT with multiple inputs (paper §VI, Theorem 5).
+
+``q`` input tensors of shape ``s_0 x ... x s_{n-1}``; each worker stores a
+``1/m`` fraction of the *total* ``q*s`` elements, with ``m = m_tilde *
+prod(m_k)``, ``m_tilde | q`` and ``m_k | s_k``.
+
+Strategy: bundle the q inputs into ``m_tilde`` disjoint subsets of size
+``q/m_tilde``; within a subset, all interleaved tensors sharing an index
+tuple ``(i_0..i_{n-1})`` form one message symbol.  The resulting ``m``
+symbols are encoded with an (N, m)-MDS code; every worker FFTs all coded
+tensors in its symbol.  Any ``m`` responders suffice (K* = m, Thm 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mds
+from repro.core.interleave import interleave_nd
+from repro.core.recombine import recombine_nd
+
+__all__ = ["CodedFFTMultiInput"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedFFTMultiInput:
+    q: int
+    shape: tuple[int, ...]
+    m_tilde: int
+    factors: tuple[int, ...]
+    n_workers: int
+    dtype: jnp.dtype = jnp.complex64
+
+    def __post_init__(self):
+        if self.q % self.m_tilde != 0:
+            raise ValueError("m_tilde must divide q")
+        for sk, mk in zip(self.shape, self.factors):
+            if sk % mk != 0:
+                raise ValueError(f"factor {mk} must divide dim {sk}")
+        if self.n_workers < self.m:
+            raise ValueError("need N >= m")
+
+    @property
+    def m_spatial(self) -> int:
+        return math.prod(self.factors)
+
+    @property
+    def m(self) -> int:
+        return self.m_tilde * self.m_spatial
+
+    @property
+    def recovery_threshold(self) -> int:
+        return self.m
+
+    @property
+    def group_size(self) -> int:
+        return self.q // self.m_tilde
+
+    @property
+    def shard_shape(self) -> tuple[int, ...]:
+        return tuple(sk // mk for sk, mk in zip(self.shape, self.factors))
+
+    @property
+    def generator(self) -> jax.Array:
+        return mds.rs_generator(self.n_workers, self.m, self.dtype)
+
+    def encode(self, t: jax.Array) -> jax.Array:
+        """``t``: (q, *shape) -> coded symbols (N, q/m_tilde, *shard_shape)."""
+        if t.shape != (self.q,) + tuple(self.shape):
+            raise ValueError(f"expected {(self.q,) + tuple(self.shape)}, got {t.shape}")
+        c = jax.vmap(lambda u: interleave_nd(u, self.factors))(t.astype(self.dtype))
+        # (q, m_sp, *shard) -> (m_tilde, group, m_sp, *shard)
+        c = c.reshape((self.m_tilde, self.group_size, self.m_spatial) + self.shard_shape)
+        # symbols axis = (m_tilde, m_sp) row-major -> (m, group, *shard)
+        c = jnp.swapaxes(c, 1, 2).reshape(
+            (self.m, self.group_size) + self.shard_shape
+        )
+        return mds.encode(self.generator, c)
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        axes = tuple(range(2, 2 + len(self.shape)))
+        return jnp.fft.fftn(a, axes=axes)
+
+    def decode(
+        self,
+        b: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Worker results (N, group, *shard) -> output tensors (q, *shape)."""
+        if subset is None:
+            if mask is not None:
+                subset = mds.first_available(mask, self.m)
+            else:
+                subset = jnp.arange(self.m)
+        sym = mds.decode_from_subset(self.generator, b, subset)
+        # (m, group, *shard) -> (m_tilde, m_sp, group, *shard) -> (q, m_sp, *shard)
+        sym = sym.reshape(
+            (self.m_tilde, self.m_spatial, self.group_size) + self.shard_shape
+        )
+        sym = jnp.swapaxes(sym, 1, 2).reshape(
+            (self.q, self.m_spatial) + self.shard_shape
+        )
+        return jax.vmap(lambda u: recombine_nd(u, self.shape, self.factors))(sym)
+
+    def run(
+        self,
+        t: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        b = self.worker_compute(self.encode(t))
+        return self.decode(b, subset=subset, mask=mask)

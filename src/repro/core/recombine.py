@@ -1,0 +1,78 @@
+"""Master-side recombination for coded FFT (paper eq. 23/24).
+
+Given the decoded sub-transforms ``C`` with ``C[k] = DFT_{s/m}(c_k)``,
+the final output is
+
+    X[i + j*(s/m)] = sum_k C[k, i] * omega_s^{ik} * omega_m^{jk}
+
+i.e. an elementwise *twiddle* ``C[k, i] * omega_s^{ik}`` followed by a batch
+of ``s/m`` independent length-``m`` DFTs along the shard axis.  This is the
+final butterfly stage of Cooley-Tukey, expressed as a dense length-``m``
+DFT so it maps onto an MXU matmul (see kernels/recombine.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["twiddle", "dft_matrix", "recombine", "recombine_nd"]
+
+
+def dft_matrix(m: int, dtype=jnp.complex64, sign: float = -1.0) -> jax.Array:
+    """Dense ``m x m`` DFT matrix ``F[j, k] = exp(sign*2j*pi*j*k/m)``."""
+    jk = jnp.outer(jnp.arange(m), jnp.arange(m))
+    return jnp.exp(sign * 2j * jnp.pi * jk / m).astype(dtype)
+
+
+def twiddle(s: int, m: int, dtype=jnp.complex64) -> jax.Array:
+    """Twiddle plane ``W[k, i] = omega_s^{ik}``, shape ``(m, s/m)``."""
+    ell = s // m
+    ki = jnp.outer(jnp.arange(m), jnp.arange(ell))
+    return jnp.exp(-2j * jnp.pi * ki / s).astype(dtype)
+
+
+def recombine(c_hat: jax.Array, s: int) -> jax.Array:
+    """``(m, s/m)`` decoded sub-transforms -> length-``s`` output ``X``."""
+    m = c_hat.shape[0]
+    w = twiddle(s, m, c_hat.dtype)
+    x_mat = dft_matrix(m, c_hat.dtype) @ (c_hat * w)  # (m, s/m)
+    return x_mat.reshape(s)
+
+
+def recombine_nd(
+    c_hat: jax.Array, shape: tuple[int, ...], factors: tuple[int, ...]
+) -> jax.Array:
+    """n-D recombination (paper eq. 31).
+
+    ``c_hat``: ``(m, L_0, ..., L_{n-1})`` decoded sub-transforms indexed by
+    the row-major shard tuple ``(k_0..k_{n-1})``;  returns the full n-D
+    transform ``T`` of shape ``shape``.
+
+    T[..., i_d + j_d*L_d, ...] = sum_{k_0..k} C[(k), (i)] *
+        prod_d omega_{s_d}^{i_d k_d} * omega_{m_d}^{j_d k_d}
+    """
+    n = len(shape)
+    ells = tuple(sd // md for sd, md in zip(shape, factors))
+    c = c_hat.reshape(tuple(factors) + ells)  # (m_0..m_{n-1}, L_0..L_{n-1})
+    for d in range(n):
+        md, sd, ld = factors[d], shape[d], ells[d]
+        # twiddle along (k_d, i_d): omega_{s_d}^{i_d * k_d}
+        tw = jnp.exp(
+            -2j * jnp.pi * jnp.outer(jnp.arange(md), jnp.arange(ld)) / sd
+        ).astype(c_hat.dtype)
+        bshape = [1] * (2 * n)
+        bshape[d] = md
+        bshape[n + d] = ld
+        c = c * tw.reshape(bshape)
+        # length-m_d DFT along axis d:  k_d -> j_d
+        f = dft_matrix(md, c_hat.dtype)
+        c = jnp.tensordot(f, c, axes=([1], [d]))
+        c = jnp.moveaxis(c, 0, d)
+    # now c[(j_0..j_{n-1}), (i_0..i_{n-1})] holds T[..., i_d + j_d*L_d, ...].
+    # That layout is an interleave of T with factors L_d (outer index j in m_d,
+    # inner index i in L_d), so invert it with deinterleave_nd(factors=ells).
+    from repro.core.interleave import deinterleave_nd
+
+    c = jnp.transpose(c, list(range(n, 2 * n)) + list(range(n)))  # (i.., j..)
+    return deinterleave_nd(c.reshape((-1,) + tuple(factors)), ells, shape)

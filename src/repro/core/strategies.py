@@ -1,0 +1,159 @@
+"""Baseline computation strategies compared against coded FFT (Remark 4).
+
+The paper's comparison:
+
+* **coded FFT** (this work):          K* = m
+* **uncoded repetition**:             K  = N - N/m^2 + 1
+* **short-dot / short-MDS [9],[13]**: K  = N - N/m + m
+
+Uncoded repetition is implemented in full: without exploiting the DFT's
+recursive structure, the generic approach block-partitions the DFT *matrix*
+into an m x m grid -- worker w stores one contiguous input chunk ``x_j``
+(1/m of the input) and returns one partial product ``P_ij = F_ij @ x_j``
+(s/m outputs).  The master must collect ALL m^2 distinct blocks; with each
+block replicated N/m^2 times, an adversary can erase every copy of one
+block using only N/m^2 erasures, so the worst-case threshold is
+``N - N/m^2 + 1`` exactly.
+
+Short-dot is reported analytically (the sparse-code construction of Dutta
+et al. [13]; we cite the threshold rather than re-implement that paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "UncodedRepetitionFFT",
+    "coded_fft_threshold",
+    "repetition_threshold",
+    "short_dot_threshold",
+]
+
+
+def coded_fft_threshold(n: int, m: int) -> int:
+    """Theorem 1: K* = m."""
+    return m
+
+
+def repetition_threshold(n: int, m: int) -> int:
+    """Remark 4: uncoded repetition needs N - N/m^2 + 1 (worst case)."""
+    assert n % (m * m) == 0, "repetition baseline needs m^2 | N"
+    return n - n // (m * m) + 1
+
+
+def short_dot_threshold(n: int, m: int) -> int:
+    """Remark 4: short-dot / short-MDS [9],[13] needs N - N/m + m."""
+    assert n % m == 0
+    return n - n // m + m
+
+
+@dataclasses.dataclass(frozen=True)
+class UncodedRepetitionFFT:
+    """Generic block-partitioned DFT with replication (no coding).
+
+    N workers, m^2 | N.  Worker ``w`` is assigned block
+    ``(i, j) = divmod(w % m^2, m)`` -- it stores input chunk ``x_j``
+    (contiguous, length s/m) and computes ``P_ij = F[i-block, j-block] @ x_j``.
+    """
+
+    s: int
+    m: int
+    n_workers: int
+    dtype: jnp.dtype = jnp.complex64
+
+    def __post_init__(self):
+        if self.s % self.m != 0:
+            raise ValueError("m | s required")
+        if self.n_workers % (self.m * self.m) != 0:
+            raise ValueError("m^2 | N required for the repetition baseline")
+
+    @property
+    def shard_len(self) -> int:
+        return self.s // self.m
+
+    @property
+    def n_blocks(self) -> int:
+        return self.m * self.m
+
+    @property
+    def replicas(self) -> int:
+        return self.n_workers // self.n_blocks
+
+    def block_of_worker(self, w: int) -> tuple[int, int]:
+        return divmod(w % self.n_blocks, self.m)
+
+    def _dft_block(self, i: int, j: int) -> jax.Array:
+        ell = self.shard_len
+        rows = jnp.arange(i * ell, (i + 1) * ell)
+        cols = jnp.arange(j * ell, (j + 1) * ell)
+        return jnp.exp(-2j * jnp.pi * jnp.outer(rows, cols) / self.s).astype(self.dtype)
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        """Worker storage: (N, s/m) -- worker w stores contiguous chunk x_{j_w}."""
+        chunks = x.astype(self.dtype).reshape(self.m, self.shard_len)
+        j_idx = jnp.asarray([self.block_of_worker(w)[1] for w in range(self.n_workers)])
+        return chunks[j_idx]
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        """Worker w returns F_{i_w, j_w} @ x_{j_w}  (an s/m-vector)."""
+        outs = []
+        for w in range(self.n_workers):
+            i, j = self.block_of_worker(w)
+            outs.append(self._dft_block(i, j) @ a[w])
+        return jnp.stack(outs)
+
+    def decodable(self, mask: np.ndarray) -> bool:
+        """Master can finish iff every (i, j) block has >= 1 live replica."""
+        got = set()
+        for w in np.nonzero(np.asarray(mask))[0]:
+            got.add(self.block_of_worker(int(w)))
+        return len(got) == self.n_blocks
+
+    def decode(self, b: jax.Array, mask: np.ndarray) -> jax.Array:
+        """Sum one replica of every block row-group; requires decodable(mask)."""
+        if not self.decodable(mask):
+            raise ValueError("not enough workers responded: some block missing")
+        ell = self.shard_len
+        x_out = jnp.zeros((self.s,), self.dtype)
+        seen = set()
+        for w in np.nonzero(np.asarray(mask))[0]:
+            i, j = self.block_of_worker(int(w))
+            if (i, j) in seen:
+                continue
+            seen.add((i, j))
+            x_out = x_out.at[i * ell : (i + 1) * ell].add(b[int(w)])
+        return x_out
+
+    def run(self, x: jax.Array, mask: Optional[np.ndarray] = None) -> jax.Array:
+        if mask is None:
+            mask = np.ones(self.n_workers, bool)
+        return self.decode(self.worker_compute(self.encode(x)), mask)
+
+    # -- empirical threshold verification ------------------------------------
+    def worst_case_threshold(self) -> int:
+        """Smallest k such that EVERY k-subset is decodable.
+
+        Exact by construction: the adversary kills all replicas of one block
+        (N/m^2 workers); with those gone, N - N/m^2 responders still miss a
+        block, so threshold = N - N/m^2 + 1.  Verified empirically for small
+        N in tests via exhaustive subsets.
+        """
+        return self.n_workers - self.replicas + 1
+
+    def is_k_recoverable(self, k: int, subsets: Optional[Iterable] = None) -> bool:
+        """Check decodability of every k-subset (exhaustive -- small N only)."""
+        if subsets is None:
+            subsets = itertools.combinations(range(self.n_workers), k)
+        for sub in subsets:
+            mask = np.zeros(self.n_workers, bool)
+            mask[list(sub)] = True
+            if not self.decodable(mask):
+                return False
+        return True

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, make_pipeline
+
+__all__ = ["SyntheticLMData", "make_pipeline"]

@@ -1,0 +1,95 @@
+"""Deterministic synthetic data pipeline (shard-aware).
+
+Real deployments swap in a tokenized corpus reader behind the same
+interface; what the framework needs from the pipeline layer is (1) a
+deterministic step->batch map so checkpoint/restart resumes mid-epoch
+without data loss or duplication, (2) host-sharded reads so each process
+only materializes its slice, (3) the modality stubs for the audio/vlm
+architectures (precomputed frame/patch embeddings per the assignment).
+
+Tokens are drawn from a counter-based generator (threefry on (step, index))
+so ``batch(step)`` is random-access -- no iterator state to checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, ShapeConfig
+
+__all__ = ["SyntheticLMData", "make_pipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    """Random-access synthetic LM batches: ``tokens``/``labels`` (+stubs)."""
+
+    cfg: ArchConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # host sharding: this process holds rows [row_start, row_start+rows)
+    row_start: int = 0
+    rows: Optional[int] = None
+
+    @property
+    def local_rows(self) -> int:
+        return self.rows if self.rows is not None else self.global_batch
+
+    def _tokens(self, step: int, rows: int, offset: int) -> np.ndarray:
+        # counter-based AND row-addressed: row r of the GLOBAL batch is a
+        # pure function of (seed, step, r), so any host-sharding of rows
+        # yields exactly the rows the single-host run would produce --
+        # elasticity can re-partition mid-run without changing the data.
+        out = np.empty((rows, self.seq_len + 1), np.int32)
+        for i in range(rows):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, offset + i]))
+            out[i] = rng.integers(0, self.cfg.vocab_size,
+                                  size=self.seq_len + 1, dtype=np.int64)
+        return out
+
+    def batch(self, step: int) -> dict:
+        """Batch for ``step`` (local slice only)."""
+        cfg = self.cfg
+        toks = self._tokens(step, self.local_rows, self.row_start)
+        out = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed + 7, step, self.row_start]))
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((self.local_rows, self.seq_len, cfg.d_model))
+                .astype(np.float32), dtype=jnp.bfloat16)
+        if cfg.family == "vlm" and cfg.num_prefix_tokens:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed + 13, step, self.row_start]))
+            out["patches"] = jnp.asarray(
+                rng.standard_normal(
+                    (self.local_rows, cfg.num_prefix_tokens, cfg.d_model))
+                .astype(np.float32), dtype=jnp.bfloat16)
+            # backbone sees [patches ; tokens]: trim text so total = seq_len
+            text = self.seq_len - cfg.num_prefix_tokens
+            out["tokens"] = out["tokens"][:, :text]
+            out["labels"] = out["labels"][:, :text]
+        return out
+
+
+def make_pipeline(cfg: ArchConfig, shape: ShapeConfig, *, seed: int = 0,
+                  process_index: int = 0, process_count: int = 1,
+                  global_batch: Optional[int] = None) -> SyntheticLMData:
+    """Host-sharded pipeline: each process reads its contiguous row block."""
+    gb = global_batch if global_batch is not None else shape.global_batch
+    assert gb % process_count == 0, (gb, process_count)
+    rows = gb // process_count
+    return SyntheticLMData(
+        cfg=cfg, seq_len=shape.seq_len, global_batch=gb, seed=seed,
+        row_start=process_index * rows, rows=rows,
+    )

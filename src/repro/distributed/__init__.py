@@ -1,0 +1,31 @@
+"""Distribution substrate: logical sharding rules, meshes, coded runtime."""
+
+from repro.distributed.coded_runtime import DistributedCodedFFT
+from repro.distributed.elastic import reshard, reshard_like
+from repro.distributed.mesh import test_mesh
+from repro.distributed.sharding import (
+    MULTI_POD_RULES,
+    SINGLE_POD_RULES,
+    current_mesh,
+    logical_spec,
+    lshard,
+    named_sharding,
+    use_rules,
+)
+from repro.distributed.straggler import StragglerModel, expected_kth_completion
+
+__all__ = [
+    "DistributedCodedFFT",
+    "MULTI_POD_RULES",
+    "SINGLE_POD_RULES",
+    "StragglerModel",
+    "current_mesh",
+    "expected_kth_completion",
+    "logical_spec",
+    "lshard",
+    "named_sharding",
+    "reshard",
+    "reshard_like",
+    "test_mesh",
+    "use_rules",
+]

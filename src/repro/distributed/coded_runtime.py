@@ -1,0 +1,188 @@
+"""shard_map execution of the coded FFT over a device mesh.
+
+The paper's master/worker topology mapped to SPMD (DESIGN.md §3):
+
+* **encode** -- each device holds the (replicated) input block, computes
+  only ITS coded shard: ``a_k = sum_i G[k,i] c_i`` (no collective; G row is
+  selected by ``axis_index``).
+* **worker compute** -- per-device FFT of its own shard, the hot loop.  On
+  TPU this is the Pallas four-step kernel; on CPU the jnp oracle.
+* **straggler mask** -- an explicit boolean input.  In production the
+  launcher populates it from collective timeouts; in tests/benchmarks the
+  straggler simulator does.  Masked workers' outputs are *zeroed then
+  ignored* by decode (decode reads only the first-m-available rows), so a
+  straggler may return garbage without affecting the result (verified in
+  tests by feeding NaNs).
+* **decode** -- all-gather the worker results along the axis (the paper's
+  fan-in to the master: exactly s coded symbols on the wire, the cut-set
+  optimum of Remark 5), then every device runs the same masked MDS solve +
+  recombine.  Replicated decode wastes no wall-clock vs a physical master
+  because the all-gather is the critical path either way.
+
+``n_local = N // axis_size`` coded shards live on each device, so N need
+not equal the device count (e.g. N=8 code on a 4-device axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import mds
+from repro.core.coded_fft import CodedFFT
+from repro.core.recombine import recombine
+
+__all__ = ["DistributedCodedFFT"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedCodedFFT:
+    """Run a ``CodedFFT`` plan across a mesh axis with straggler masking."""
+
+    plan: CodedFFT
+    mesh: Mesh
+    axis: str = "workers"
+
+    def __post_init__(self):
+        size = self.mesh.shape[self.axis]
+        if self.plan.n_workers % size != 0:
+            raise ValueError(
+                f"N={self.plan.n_workers} must be a multiple of axis "
+                f"size {size}")
+
+    @property
+    def n_local(self) -> int:
+        return self.plan.n_workers // self.mesh.shape[self.axis]
+
+    # ------------------------------------------------------------------
+    def _worker_body(self, c: jax.Array, mask: jax.Array) -> jax.Array:
+        """Per-device: encode own shards from replicated c, FFT them.
+
+        c: (m, L) replicated message shards; mask: (N,) replicated.
+        Returns this device's (n_local, L) results, zeroed if masked out.
+        """
+        plan = self.plan
+        idx = jax.lax.axis_index(self.axis)
+        rows = idx * self.n_local + jnp.arange(self.n_local)
+        g_rows = jnp.take(plan.generator, rows, axis=0)          # (n_local, m)
+        a_local = jnp.einsum("nm,ml->nl", g_rows.astype(c.dtype), c)
+        b_local = plan.worker_fn(a_local)                         # (n_local, L)
+        alive = jnp.take(mask, rows)                              # (n_local,)
+        return jnp.where(alive[:, None], b_local, 0)
+
+    def run(self, x: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+        """End-to-end coded FFT of ``x`` (length s) under the mesh.
+
+        ``mask``: bool (N,) worker availability (>= m True). Default: all up.
+        """
+        plan = self.plan
+        if mask is None:
+            mask = jnp.ones((plan.n_workers,), bool)
+
+        from repro.core.interleave import interleave
+
+        c = interleave(x.astype(plan.dtype), plan.m)              # (m, L)
+
+        @partial(
+            shard_map, mesh=self.mesh,
+            in_specs=(P(), P()),
+            out_specs=P(self.axis),
+            check_rep=False,
+        )
+        def workers(c_rep, mask_rep):
+            return self._worker_body(c_rep, mask_rep)
+
+        b = workers(c, mask)                                      # (N, L) sharded
+
+        @partial(
+            shard_map, mesh=self.mesh,
+            in_specs=(P(self.axis), P()),
+            out_specs=P(),
+            check_rep=False,
+        )
+        def master(b_local, mask_rep):
+            # the paper's fan-in: gather the coded results to the master
+            b_all = jax.lax.all_gather(b_local, self.axis, tiled=True)
+            subset = mds.first_available(mask_rep, plan.m)
+            c_hat = mds.decode_from_subset(plan.generator, b_all, subset)
+            return recombine(c_hat, plan.s)
+
+        return master(b, mask)
+
+    # ------------------------------------------------------------------
+    def run_sharded(self, x: jax.Array, mask: Optional[jax.Array] = None
+                    ) -> jax.Array:
+        """Optimized pipeline (§Perf cell C): sharded-output decode.
+
+        The baseline ``run`` realizes the paper's master literally: every
+        chip all-gathers all N coded results (N/m x s symbols per chip)
+        and runs the full decode.  But no consumer needs X replicated --
+        so instead each chip receives only its OUTPUT COLUMNS of every
+        worker's result via one all-to-all (s symbols total per chip,
+        N/m x less wire), decodes the (m, L/P) column block, and
+        recombines locally (twiddles depend on the absolute column index,
+        taken from ``axis_index``).
+
+        Returns the Cooley-Tukey output matrix ``Xmat`` of shape
+        ``(m, s/m)``, column-sharded over the worker axis;
+        ``X = Xmat.reshape(s)`` (row-major), since
+        ``Xmat[j, i] = X[j*(s/m) + i]``.
+        """
+        plan = self.plan
+        p_sz = self.mesh.shape[self.axis]
+        ell = plan.shard_len
+        if ell % p_sz != 0:
+            raise ValueError(f"s/m={ell} must divide over {p_sz} devices")
+        if mask is None:
+            mask = jnp.ones((plan.n_workers,), bool)
+
+        from repro.core.recombine import dft_matrix
+
+        @partial(
+            shard_map, mesh=self.mesh,
+            in_specs=(P(), P()),
+            out_specs=P(None, self.axis),
+            check_rep=False,
+        )
+        def pipeline(x_rep, mask_rep):
+            # fused interleave+encode: c[i, l] = x[i + l*m] is just the
+            # transposed view of x.reshape(L, m), so the coded shard is one
+            # strided einsum over x -- the materialized interleave copy
+            # (2x s symbols of pure data movement) never exists (§Perf C2)
+            idx = jax.lax.axis_index(self.axis)
+            rows = idx * self.n_local + jnp.arange(self.n_local)
+            g_rows = jnp.take(plan.generator, rows, axis=0)   # (n_local, m)
+            xr = x_rep.astype(plan.dtype).reshape(ell, plan.m)
+            a_local = jnp.einsum("lm,nm->nl", xr, g_rows.astype(plan.dtype))
+            b_local = plan.worker_fn(a_local)                 # (n_local, L)
+            alive = jnp.take(mask_rep, rows)
+            b_local = jnp.where(alive[:, None], b_local, 0)
+            # row-shards -> column-shards: THE one collective of the
+            # optimized path (s symbols per chip vs N/m x s for all-gather)
+            b_cols = jax.lax.all_to_all(
+                b_local, self.axis, split_axis=1, concat_axis=0, tiled=True
+            )                                                  # (N, L/P)
+            subset = mds.first_available(mask_rep, plan.m)
+            c_cols = mds.decode_from_subset(plan.generator, b_cols, subset)
+            idx = jax.lax.axis_index(self.axis)
+            cols = idx * (ell // p_sz) + jnp.arange(ell // p_sz)
+            ki = jnp.outer(jnp.arange(plan.m), cols)
+            w = jnp.exp(-2j * jnp.pi * ki / plan.s).astype(c_cols.dtype)
+            f_m = dft_matrix(plan.m, c_cols.dtype)
+            return f_m @ (c_cols * w)                          # (m, L/P)
+
+        return pipeline(x.astype(plan.dtype), mask)
+
+    # ------------------------------------------------------------------
+    def lower(self, s_dtype=jnp.complex64, *, sharded: bool = False):
+        """Lower for compile inspection (collective accounting)."""
+        x = jax.ShapeDtypeStruct((self.plan.s,), s_dtype)
+        mask = jax.ShapeDtypeStruct((self.plan.n_workers,), jnp.bool_)
+        fn = self.run_sharded if sharded else self.run
+        return jax.jit(fn).lower(x, mask)

@@ -1,0 +1,33 @@
+"""Mesh helpers for tests and small-scale runs.
+
+``launch/mesh.py`` owns the production meshes; this module only provides
+CPU-friendly fakes: ``test_mesh(shape, axes)`` builds a mesh over however
+many host devices exist (tests set ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` via their own env guard, never globally).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["test_mesh", "device_count_at_least"]
+
+
+def device_count_at_least(n: int) -> bool:
+    return jax.device_count() >= n
+
+
+def test_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"test mesh {shape} needs {need} devices, have {len(devs)} "
+            "(run under XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    arr = np.asarray(devs[:need]).reshape(shape)
+    return Mesh(arr, axes)

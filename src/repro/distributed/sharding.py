@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole framework.
+
+Model code annotates activations/params with *logical* axis names; a rules
+table maps those to physical mesh axes.  Outside a mesh context every
+annotation is a no-op, so the same model code runs on 1 CPU device (smoke
+tests) and on the 512-chip production mesh (dry-run) unchanged.
+
+Activation axes:
+  batch      -> (pod, data)     sequence stays unsharded
+  heads/kv_heads/mlp/vocab/experts -> model   (tensor parallelism)
+Param axes:
+  p_fsdp     -> data            (ZeRO-3: gathered per-layer inside the scan)
+  p_heads/p_kv/p_mlp/p_vocab/p_experts -> model
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "SINGLE_POD_RULES",
+    "MULTI_POD_RULES",
+    "use_rules",
+    "current_rules",
+    "current_mesh",
+    "logical_spec",
+    "lshard",
+    "named_sharding",
+]
+
+AxisRules = dict[str, Optional[object]]
+
+# Physical axes: ("data", "model") or ("pod", "data", "model").
+SINGLE_POD_RULES: AxisRules = {
+    "batch": "data",
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": None,   # KV-cache context parallelism (enabled by build_rules
+                      # when kv_heads cannot shard the model axis)
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,   # expert-internal ff dim (EP owns "model")
+    "expert_cap": None,
+    "tokens": "data",     # flattened (batch*seq) token axis in MoE dispatch
+    "state": None,
+    "layers": None,
+    "p_fsdp": "data",
+    "p_heads": "model",
+    "p_kv": "model",
+    "p_mlp": "model",
+    "p_vocab": "model",
+    "p_experts": "model",
+    "p_expert_mlp": None,
+    "p_none": None,
+    "workers": "data",  # coded-FFT worker axis in the FFT service
+}
+
+MULTI_POD_RULES: AxisRules = dict(
+    SINGLE_POD_RULES,
+    batch=("pod", "data"),
+    tokens=("pod", "data"),
+)
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.rules: Optional[AxisRules] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[AxisRules] = None):
+    """Activate a mesh + logical-rules table for model annotations."""
+    if rules is None and mesh is not None:
+        rules = MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    prev = (_STATE.rules, _STATE.mesh)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _STATE.rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def logical_spec(axes: tuple, rules: Optional[AxisRules] = None) -> P:
+    """Logical axis names -> PartitionSpec under the active rules."""
+    rules = rules if rules is not None else _STATE.rules
+    if rules is None:
+        return P()
+    resolved = []
+    for name in axes:
+        if name is None:
+            resolved.append(None)
+        else:
+            resolved.append(rules.get(name))
+    return P(*resolved)
+
+
+def named_sharding(axes: tuple, mesh: Optional[Mesh] = None,
+                   rules: Optional[AxisRules] = None) -> Optional[NamedSharding]:
+    mesh = mesh if mesh is not None else _STATE.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(axes, rules))
+
+
+def lshard(x: jax.Array, *axes) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical ``axes``.
+
+    No-op when no mesh is active (single-device tests).
+    """
+    sh = named_sharding(tuple(axes))
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,59 @@
+"""Shifted-exponential straggler model + strategy completion times.
+
+Standard model in the coded-computation literature (Lee et al. 2015, and
+the model the paper's Remark 4 comparisons presume): a worker processing a
+``w`` fraction of the input finishes at
+
+    T_i = w * (t0 + X_i),    X_i ~ Exp(rate mu)   i.i.d.
+
+``t0`` is the deterministic per-unit work, ``1/mu`` the expected tail.  A
+strategy that waits for the k-th fastest of N workers completes at the
+k-th order statistic; its expectation has the closed form
+
+    E[T_(k)] = w * (t0 + (H_N - H_{N-k}) / mu),   H_n = sum_{i<=n} 1/i.
+
+These drive benchmarks/bench_latency.py: coded FFT (k=m, w=1/m) vs
+uncoded (k=N partitions, w=1/N) vs repetition / short-dot thresholds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["StragglerModel", "harmonic", "expected_kth_completion",
+           "empirical_completion"]
+
+
+def harmonic(n: int) -> float:
+    return float(np.sum(1.0 / np.arange(1, n + 1))) if n > 0 else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    t0: float = 1.0      # deterministic seconds per unit workload
+    mu: float = 1.0      # exponential rate of the tail
+
+    def sample(self, n: int, workload: float, rng: np.random.Generator
+               ) -> np.ndarray:
+        """Finish times of n workers each processing ``workload`` units."""
+        return workload * (self.t0 + rng.exponential(1.0 / self.mu, size=n))
+
+    def expected_kth(self, n: int, k: int, workload: float) -> float:
+        return expected_kth_completion(self.t0, self.mu, n, k, workload)
+
+
+def expected_kth_completion(t0: float, mu: float, n: int, k: int,
+                            workload: float) -> float:
+    """E[k-th order statistic of n shifted-exponential finish times]."""
+    if k > n:
+        return float("inf")
+    return workload * (t0 + (harmonic(n) - harmonic(n - k)) / mu)
+
+
+def empirical_completion(latencies: np.ndarray, k: int) -> float:
+    """Completion time waiting for the k fastest workers."""
+    if k > latencies.shape[-1]:
+        return float("inf")
+    return float(np.sort(latencies, axis=-1)[..., k - 1])

@@ -1,0 +1,33 @@
+"""Pallas TPU kernels for the framework's hot spots.
+
+Four kernels (see DESIGN.md §3 for the TPU adaptation rationale):
+
+* ``fourstep_fft`` -- the per-worker DFT as two MXU matmuls + twiddle;
+* ``cmatmul``      -- planar complex matmul for MDS encode/decode-apply;
+* ``recombine``    -- fused twiddle + length-m DFT for the master;
+* ``wkv``          -- RWKV-6 recurrence with the (K x V) state resident in
+                      VMEM across the sequential time grid (the HBM-floor
+                      answer to §Perf cell B's elementwise-bound knee).
+
+``ops`` holds the jit'd complex-in/complex-out wrappers; ``ref`` the
+pure-jnp oracles used by the allclose sweeps in tests/test_kernels.py
+and tests/test_wkv_kernel.py.
+"""
+
+from repro.kernels.ops import (
+    fft_fourstep,
+    make_kernel_worker_fn,
+    mds_apply,
+    recombine_fused,
+    split_factor,
+)
+from repro.kernels.wkv import wkv_pallas
+
+__all__ = [
+    "fft_fourstep",
+    "make_kernel_worker_fn",
+    "mds_apply",
+    "recombine_fused",
+    "split_factor",
+    "wkv_pallas",
+]

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: planar complex matmul (MDS encode / decode-apply).
+
+MDS encoding is ``a = G @ c`` with tiny ``G`` (N x m, m <= 64) against a wide
+payload ``c`` (m, L) -- and decode-apply is the same shape with the inverted
+subset matrix.  The generator stays VMEM-resident while the payload streams
+through in column blocks; each grid step does one (N, m) x (m, block_l)
+complex matmul = 4 real MXU matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cmatmul"]
+
+
+def _kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref):
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[...], bi_ref[...]
+    cr_ref[...] = dot(ar, br) - dot(ai, bi)
+    ci_ref[...] = dot(ar, bi) + dot(ai, br)
+
+
+def cmatmul(ar, ai, br, bi, *, block_l: int = 512, interpret: bool = False):
+    """Planar complex matmul: (M, K) @ (K, L) -> (M, L), blocked over L.
+
+    Shapes follow the MDS-coding use case: M, K small (codes), L large
+    (payload columns).  Returns (cr, ci).
+    """
+    m, k = ar.shape
+    k2, ell = br.shape
+    assert k == k2, (ar.shape, br.shape)
+    block_l = min(block_l, ell)
+    grid = (pl.cdiv(ell, block_l),)
+    spec_a = pl.BlockSpec((m, k), lambda j: (0, 0))
+    spec_b = pl.BlockSpec((k, block_l), lambda j: (0, j))
+    spec_c = pl.BlockSpec((m, block_l), lambda j: (0, j))
+    out_shape = [
+        jax.ShapeDtypeStruct((m, ell), ar.dtype),
+        jax.ShapeDtypeStruct((m, ell), ar.dtype),
+    ]
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec_a, spec_a, spec_b, spec_b],
+        out_specs=[spec_c, spec_c],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="cmatmul",
+    )(ar, ai, br, bi)

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: batched four-step (Bailey) FFT.
+
+The per-worker hot loop of coded FFT is a length-L DFT of the worker's coded
+shard (paper §III-B step 3).  On TPU we do NOT port a butterfly-network FFT
+(a GPU/CPU idiom that starves the MXU); instead we factor ``L = A * B`` and
+compute
+
+    out[c, d] = ( (F_A @ M) * W ) @ F_B,     M[a, b] = x[a*B + b]
+    X[c + d*A] = out[c, d]
+
+i.e. two dense DFT-matrix matmuls (MXU work) plus one elementwise twiddle
+(VPU work).  Complex arithmetic is planar: separate f32 real/imag planes,
+4-real-matmul complex products with f32 accumulation.
+
+Two variants:
+
+* ``fourstep_fused_kernel`` -- one ``pallas_call``; per grid step the whole
+  (A, B) matrix of one batch element lives in VMEM together with F_A, F_B
+  and the twiddle.  VMEM footprint ~ 2*(A*B + A*A + B*B + A*B) * 4 bytes;
+  good up to A = B = 512.
+* ``stage1 / stage2`` two-pass -- stage 1 blocks over B-columns (column DFT
+  + twiddle are column-local), stage 2 blocks over A-rows (row DFT is
+  row-local); supports sizes whose full matrix would not fit VMEM.
+
+The jit wrappers with layout pack/unpack live in ops.py; the jnp oracle in
+ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "fourstep_fused",
+    "fourstep_stage1",
+    "fourstep_stage2",
+]
+
+
+def _cmul_mm(ar, ai, br, bi):
+    """Complex matmul on planes with f32 accumulation (4 real matmuls)."""
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    return dot(ar, br) - dot(ai, bi), dot(ar, bi) + dot(ai, br)
+
+
+def _fused_kernel(xr_ref, xi_ref, far_ref, fai_ref, wr_ref, wi_ref,
+                  fbr_ref, fbi_ref, or_ref, oi_ref):
+    """One batch element per grid step: out = ((F_A @ M) * W) @ F_B."""
+    xr = xr_ref[0]      # (A, B)
+    xi = xi_ref[0]
+    # step 1: column DFTs  (A, A) @ (A, B)
+    t1r, t1i = _cmul_mm(far_ref[...], fai_ref[...], xr, xi)
+    # step 2: twiddle (elementwise, VPU)
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    t2r = t1r * wr - t1i * wi
+    t2i = t1r * wi + t1i * wr
+    # step 3: row DFTs  (A, B) @ (B, B)
+    t3r, t3i = _cmul_mm(t2r, t2i, fbr_ref[...], fbi_ref[...])
+    or_ref[0] = t3r
+    oi_ref[0] = t3i
+
+
+def fourstep_fused(xr, xi, far, fai, wr, wi, fbr, fbi, *, interpret=False):
+    """Batched fused four-step FFT.
+
+    ``xr, xi``: (batch, A, B) planes of M[a,b] = x[a*B+b].
+    Returns planes of out[c, d] with X[c + d*A] = out[c, d].
+    """
+    batch, a, b = xr.shape
+    spec_x = pl.BlockSpec((1, a, b), lambda i: (i, 0, 0))
+    spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
+    spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
+    spec_fb = pl.BlockSpec((b, b), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, a, b), xr.dtype),
+        jax.ShapeDtypeStruct((batch, a, b), xr.dtype),
+    ]
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=(batch,),
+        in_specs=[spec_x, spec_x, spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb],
+        out_specs=[spec_x, spec_x],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="fourstep_fft_fused",
+    )(xr, xi, far, fai, wr, wi, fbr, fbi)
+
+
+def _stage1_kernel(xr_ref, xi_ref, far_ref, fai_ref, wr_ref, wi_ref,
+                   or_ref, oi_ref):
+    """Column-blocked: out = (F_A @ M_block) * W_block."""
+    t1r, t1i = _cmul_mm(far_ref[...], fai_ref[...], xr_ref[0], xi_ref[0])
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    or_ref[0] = t1r * wr - t1i * wi
+    oi_ref[0] = t1r * wi + t1i * wr
+
+
+def fourstep_stage1(xr, xi, far, fai, wr, wi, *, block_b=256, interpret=False):
+    """Stage 1+2 of the four-step FFT, blocked over columns of B."""
+    batch, a, b = xr.shape
+    block_b = min(block_b, b)
+    grid = (batch, pl.cdiv(b, block_b))
+    spec_x = pl.BlockSpec((1, a, block_b), lambda i, j: (i, 0, j))
+    spec_fa = pl.BlockSpec((a, a), lambda i, j: (0, 0))
+    spec_w = pl.BlockSpec((a, block_b), lambda i, j: (0, j))
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, a, b), xr.dtype),
+        jax.ShapeDtypeStruct((batch, a, b), xr.dtype),
+    ]
+    return pl.pallas_call(
+        _stage1_kernel,
+        grid=grid,
+        in_specs=[spec_x, spec_x, spec_fa, spec_fa, spec_w, spec_w],
+        out_specs=[spec_x, spec_x],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="fourstep_fft_stage1",
+    )(xr, xi, far, fai, wr, wi)
+
+
+def _stage2_kernel(tr_ref, ti_ref, fbr_ref, fbi_ref, or_ref, oi_ref):
+    """Row-blocked: out = T_block @ F_B."""
+    t3r, t3i = _cmul_mm(tr_ref[0], ti_ref[0], fbr_ref[...], fbi_ref[...])
+    or_ref[0] = t3r
+    oi_ref[0] = t3i
+
+
+def fourstep_stage2(tr, ti, fbr, fbi, *, block_a=256, interpret=False):
+    """Stage 3 of the four-step FFT, blocked over rows of A."""
+    batch, a, b = tr.shape
+    block_a = min(block_a, a)
+    grid = (batch, pl.cdiv(a, block_a))
+    spec_t = pl.BlockSpec((1, block_a, b), lambda i, j: (i, j, 0))
+    spec_fb = pl.BlockSpec((b, b), lambda i, j: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, a, b), tr.dtype),
+        jax.ShapeDtypeStruct((batch, a, b), tr.dtype),
+    ]
+    return pl.pallas_call(
+        _stage2_kernel,
+        grid=grid,
+        in_specs=[spec_t, spec_t, spec_fb, spec_fb],
+        out_specs=[spec_t, spec_t],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="fourstep_fft_stage2",
+    )(tr, ti, fbr, fbi)

@@ -1,0 +1,156 @@
+"""Jit'd wrappers around the Pallas kernels (planar layout management).
+
+These are the public entry points; they accept/return natural complex
+arrays, handle the planar split, pick factorizations and block sizes, and
+thread ``interpret=True`` on non-TPU backends so the same code validates on
+CPU and runs compiled on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cmatmul import cmatmul
+from repro.kernels.fourstep_fft import fourstep_fused, fourstep_stage1, fourstep_stage2
+from repro.kernels.recombine import recombine_twiddle_dft
+
+__all__ = [
+    "default_interpret",
+    "split_factor",
+    "fft_fourstep",
+    "mds_apply",
+    "recombine_fused",
+    "make_kernel_worker_fn",
+]
+
+# VMEM budget heuristic: fused kernel keeps ~4 (A,B) planes + 2 (A,A) +
+# 2 (B,B) + 2 (A,B) twiddle planes resident; cap the fused path at the size
+# where that stays under ~12 MB of the 16 MB VMEM.
+_FUSED_MAX_ELEMS = 512 * 512
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except real TPU backends."""
+    return jax.default_backend() != "tpu"
+
+
+def split_factor(n: int) -> tuple[int, int]:
+    """Factor ``n = a * b`` with a, b as close as possible (a <= b).
+
+    MXU-friendliness: prefers multiples of 128 when available; for powers of
+    two this returns (2^floor(k/2), 2^ceil(k/2)).
+    """
+    a = int(math.isqrt(n))
+    while a > 1 and n % a != 0:
+        a -= 1
+    return a, n // a
+
+
+def _dft_planes(n: int, dtype=jnp.float32):
+    jk = jnp.outer(jnp.arange(n), jnp.arange(n))
+    ang = -2.0 * jnp.pi * (jk % n) / n
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def _twiddle_planes(a: int, b: int, dtype=jnp.float32):
+    # W[c, b] = omega_{a*b}^{c*b}
+    cb = jnp.outer(jnp.arange(a), jnp.arange(b))
+    ang = -2.0 * jnp.pi * (cb % (a * b)) / (a * b)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b", "interpret", "fused"))
+def _fft_fourstep_impl(x, a, b, interpret, fused):
+    batch = x.shape[0]
+    ell = a * b
+    xr, xi = ref.planar(x)
+    xr = xr.reshape(batch, a, b)
+    xi = xi.reshape(batch, a, b)
+    far, fai = _dft_planes(a)
+    fbr, fbi = _dft_planes(b)
+    wr, wi = _twiddle_planes(a, b)
+    if fused:
+        outr, outi = fourstep_fused(
+            xr, xi, far, fai, wr, wi, fbr, fbi, interpret=interpret
+        )
+    else:
+        t1r, t1i = fourstep_stage1(xr, xi, far, fai, wr, wi, interpret=interpret)
+        outr, outi = fourstep_stage2(t1r, t1i, fbr, fbi, interpret=interpret)
+    # out[c, d] holds X[c + d*A]  ->  transpose to (d, c) then flatten
+    z = ref.unplanar(outr, outi)
+    return jnp.swapaxes(z, -1, -2).reshape(batch, ell)
+
+
+def fft_fourstep(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Batched FFT along the last axis via the Pallas four-step kernel.
+
+    ``x``: (..., L) complex; L is factored automatically.  Non-batched
+    inputs are promoted.  Output matches ``jnp.fft.fft(x, axis=-1)`` up to
+    f32 planar precision.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    batch_shape = x.shape[:-1]
+    ell = x.shape[-1]
+    a, b = split_factor(ell)
+    fused = (a * b) <= _FUSED_MAX_ELEMS
+    out = _fft_fourstep_impl(
+        x.reshape(-1, ell), a, b, interpret, fused
+    ).reshape(batch_shape + (ell,))
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _mds_apply_impl(g, c, interpret):
+    gr, gi = ref.planar(g)
+    payload = c.shape[1:]
+    flat = c.reshape(c.shape[0], -1)
+    cr, ci = ref.planar(flat)
+    outr, outi = cmatmul(gr, gi, cr, ci, interpret=interpret)
+    return ref.unplanar(outr, outi).reshape((g.shape[0],) + payload)
+
+
+def mds_apply(g: jax.Array, c: jax.Array, *, interpret: bool | None = None):
+    """Kernel-backed ``G @ c`` for MDS encode / decode-apply.
+
+    ``g``: (n, m) complex code matrix; ``c``: (m, *payload).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mds_apply_impl(g, c, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def _recombine_impl(c_hat, s, interpret):
+    m, ell = c_hat.shape
+    cr, ci = ref.planar(c_hat)
+    ki = jnp.outer(jnp.arange(m), jnp.arange(ell))
+    ang = -2.0 * jnp.pi * (ki % s) / s
+    wr, wi = jnp.cos(ang).astype(jnp.float32), jnp.sin(ang).astype(jnp.float32)
+    fr, fi = _dft_planes(m)
+    outr, outi = recombine_twiddle_dft(cr, ci, wr, wi, fr, fi, interpret=interpret)
+    return ref.unplanar(outr, outi).reshape(s)
+
+
+def recombine_fused(c_hat: jax.Array, s: int, *, interpret: bool | None = None):
+    """Kernel-backed master recombination: (m, s/m) decoded C -> X (s,)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _recombine_impl(c_hat, s, interpret)
+
+
+def make_kernel_worker_fn(interpret: bool | None = None):
+    """A ``CodedFFT.worker_fn`` that uses the Pallas four-step kernel."""
+
+    def worker_fn(a: jax.Array) -> jax.Array:
+        return fft_fourstep(a, interpret=interpret)
+
+    return worker_fn

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused twiddle + length-m DFT recombination.
+
+The master's second decode stage (paper eq. 24) is
+
+    X[i + j*(s/m)] = sum_k C[k, i] * omega_s^{ik} * omega_m^{jk}
+
+= an elementwise twiddle ``T = C * W`` (VPU) fused with a dense length-m DFT
+``F_m @ T`` (MXU), streaming the payload axis ``i`` through VMEM in blocks.
+Fusing avoids materializing T in HBM -- the twiddle is applied in VMEM right
+before the matmul consumes it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["recombine_twiddle_dft"]
+
+
+def _kernel(cr_ref, ci_ref, wr_ref, wi_ref, fr_ref, fi_ref, or_ref, oi_ref):
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    cr, ci = cr_ref[...], ci_ref[...]
+    wr, wi = wr_ref[...], wi_ref[...]
+    # twiddle in VMEM (never hits HBM)
+    tr = cr * wr - ci * wi
+    ti = cr * wi + ci * wr
+    fr, fi = fr_ref[...], fi_ref[...]
+    or_ref[...] = dot(fr, tr) - dot(fi, ti)
+    oi_ref[...] = dot(fr, ti) + dot(fi, tr)
+
+
+def recombine_twiddle_dft(
+    cr, ci, wr, wi, fr, fi, *, block_l: int = 512, interpret: bool = False
+):
+    """Fused ``F @ (C * W)`` on planar (m, L) data, blocked over L."""
+    m, ell = cr.shape
+    assert wr.shape == (m, ell) and fr.shape == (m, m)
+    block_l = min(block_l, ell)
+    grid = (pl.cdiv(ell, block_l),)
+    spec_c = pl.BlockSpec((m, block_l), lambda j: (0, j))
+    spec_f = pl.BlockSpec((m, m), lambda j: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((m, ell), cr.dtype),
+        jax.ShapeDtypeStruct((m, ell), cr.dtype),
+    ]
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec_c, spec_c, spec_c, spec_c, spec_f, spec_f],
+        out_specs=[spec_c, spec_c],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="recombine_twiddle_dft",
+    )(cr, ci, wr, wi, fr, fi)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+All kernels operate on *planar* complex data (separate real/imag f32 planes)
+because Pallas TPU has no complex dtype; the oracles accept/return the same
+planar layout so tests compare apples to apples.  Each oracle also has a
+``*_complex`` twin in natural complex dtype used by the core library tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "fourstep_fft_ref",
+    "fft_ref_complex",
+    "cmatmul_ref",
+    "recombine_ref",
+    "planar",
+    "unplanar",
+]
+
+
+def planar(z: jax.Array, dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    return jnp.real(z).astype(dtype), jnp.imag(z).astype(dtype)
+
+
+def unplanar(re: jax.Array, im: jax.Array) -> jax.Array:
+    return re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+
+
+def fft_ref_complex(x: jax.Array) -> jax.Array:
+    """Ground-truth FFT along the last axis."""
+    return jnp.fft.fft(x, axis=-1)
+
+
+def fourstep_fft_ref(
+    xr: jax.Array, xi: jax.Array, a: int, b: int
+) -> tuple[jax.Array, jax.Array]:
+    """Four-step FFT oracle on planar data.
+
+    ``xr, xi``: (batch, L) with L = a*b.  Returns planar (batch, L) FFT.
+    Implemented with jnp.fft on the complexified input -- the oracle is the
+    *mathematical answer*, independent of the four-step factorization.
+    """
+    z = unplanar(xr, xi)
+    out = jnp.fft.fft(z, axis=-1)
+    return planar(out, xr.dtype)
+
+
+def cmatmul_ref(
+    ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Planar complex matmul oracle: (M, K) @ (K, N)."""
+    cr = ar @ br - ai @ bi
+    ci = ar @ bi + ai @ br
+    return cr, ci
+
+
+def recombine_ref(
+    cr: jax.Array,
+    ci: jax.Array,
+    wr: jax.Array,
+    wi: jax.Array,
+    fr: jax.Array,
+    fi: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused twiddle+DFT oracle: ``F @ (C * W)`` on planar (m, L) data."""
+    tr = cr * wr - ci * wi
+    ti = cr * wi + ci * wr
+    outr = fr @ tr - fi @ ti
+    outi = fr @ ti + fi @ tr
+    return outr, outi

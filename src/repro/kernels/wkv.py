@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (chunked, factorized).
+
+Why a kernel: the XLA-level chunked WKV (models/rwkv6.py) bottoms out at
+~700 s/step of HBM traffic on rwkv6-3b train_4k because every per-chunk
+intermediate (decay factors, scores, chunk outputs) round-trips HBM
+(EXPERIMENTS.md §Perf cell B).  On TPU the whole chunk pipeline fits in
+VMEM: r/k/v/w stream in once, the (K x V) state lives in a VMEM scratch
+across the sequential time grid, and only o streams out -- a single
+HBM read of the inputs and write of the output, the memory floor.
+
+Layout / grid:
+  inputs  r, k, v, logw : (BH, T, K) f32 planar (batch*heads flattened)
+  bonus   u             : (BH, K)    f32 (pre-broadcast per head)
+  state0                : (BH, K, K) f32
+  grid = (BH, T // CT)  -- dim 0 parallel, dim 1 sequential ("arbitrary"),
+  state scratch persists across the T iterations of one BH program.
+
+Math per chunk (identical to models/rwkv6.wkv_chunked, mid-chunk
+re-centered factorization; exponents bounded by (CT/2)*|logw|max):
+  p      = cumsum(logw)                        (C, K)
+  o_inter= (r * exp(pm1)) @ S
+  scores = [(r*exp(pm1-c)) @ (k*exp(c-p))^T] * causal_mask
+  o      = o_inter + scores @ v + (sum_k r*k*u) * v
+  S      = S * exp(p_end) + (k * exp(p_end - p))^T @ v
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv_pallas"]
+
+_CT = 8  # time tile; factor exponents <= 4*|logw|_max = 32, so even
+#          fully-masked pair products stay <= e^64 (finite in f32;
+#          same bound as models/rwkv6.py chunk=8 -- see its docstring)
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sout_ref,
+                s_ref):
+    """One (bh, t-tile) grid step.  s_ref: (K, V) f32 VMEM scratch."""
+    t_idx = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        s_ref[...] = s0_ref[0]
+
+    r = r_ref[0]                       # (CT, K)
+    k = k_ref[0]
+    v = v_ref[0]
+    lw = lw_ref[0]
+    u = u_ref[0]                       # (1, K) block
+    s = s_ref[...]                     # (K, V)
+
+    p = jnp.cumsum(lw, axis=0)                      # (CT, K)
+    pm1 = p - lw                                    # exclusive cumsum
+    c = p[_CT // 2]                                 # (K,) re-centering
+    o_inter = jnp.dot(r * jnp.exp(pm1), s)          # (CT, V)
+    r_dec = r * jnp.exp(pm1 - c[None])
+    k_grow = k * jnp.exp(c[None] - p)
+    scores = jnp.dot(r_dec, k_grow.T)               # (CT, CT)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (_CT, _CT), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (_CT, _CT), 1)
+    scores = jnp.where(rows > cols, scores, 0.0)
+    o_intra = jnp.dot(scores, v)
+    coef = jnp.sum(r * k * u, axis=-1, keepdims=True)   # (CT, 1) diag bonus
+    o_ref[0] = o_inter + o_intra + coef * v
+
+    pe = p[-1]                                      # (K,)
+    kdec = k * jnp.exp(pe[None] - p)
+    s_ref[...] = s * jnp.exp(pe)[:, None] + jnp.dot(kdec.T, v)
+
+    @pl.when(t_idx == nt - 1)
+    def _emit_state():
+        sout_ref[0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_pallas(r, k, v, logw, u, state, *, interpret: bool | None = None):
+    """WKV over (BH, T, K) planar inputs.  Returns (o, final_state).
+
+    ``u``: (BH, K); ``state``: (BH, K, K).  T must be a multiple of 8
+    (pad upstream); K should be a multiple of 8 lanes (64 natively).
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    bh, t, kd = r.shape
+    assert t % _CT == 0, (t, _CT)
+    grid = (bh, t // _CT)
+    blk = lambda: pl.BlockSpec((1, _CT, kd), lambda i, j: (i, j, 0))
+    out_shape = (
+        jax.ShapeDtypeStruct((bh, t, kd), jnp.float32),
+        jax.ShapeDtypeStruct((bh, kd, kd), jnp.float32),
+    )
+    return pl.pallas_call(
+        _wkv_kernel,
+        grid=grid,
+        in_specs=[
+            blk(), blk(), blk(), blk(),
+            pl.BlockSpec((1, kd), lambda i, j: (i, 0)),           # u
+            pl.BlockSpec((1, kd, kd), lambda i, j: (i, 0, 0)),    # state0
+        ],
+        out_specs=[
+            blk(),                                                # o
+            pl.BlockSpec((1, kd, kd), lambda i, j: (i, 0, 0)),    # state out
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((kd, kd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, state)

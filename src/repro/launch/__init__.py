@@ -1,0 +1,3 @@
+"""Launchers.  NOTE: never import ``repro.launch.dryrun`` from library code
+-- it sets XLA_FLAGS for 512 placeholder devices at import time, which must
+only happen in a dedicated dry-run process."""

@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first init, and the production meshes need 512 host placeholder
+devices.  (Smoke tests and benchmarks never import this module, so they
+see the real single CPU device.)
+
+For each cell the driver:
+
+  1. builds the full-size architecture config and its sharding plan
+     (launch/shardings.py -- divisibility fallbacks recorded);
+  2. lowers the right step (train_step / prefill / decode_step) against
+     ShapeDtypeStruct inputs with explicit in/out shardings;
+  3. compiles, then extracts ``memory_analysis()`` (does it fit?),
+     ``cost_analysis()`` (FLOPs / bytes for the roofline), and the
+     collective-bytes breakdown parsed from the partitioned HLO;
+  4. writes ``experiments/dryrun/<cell>.json`` (idempotent: existing
+     files are skipped unless --force).
+
+``--all`` runs every cell in a subprocess (isolation: one cell's compile
+cannot poison another's, and a crash leaves the other JSONs intact --
+the same restartability story the trainer has).
+"""
+
+import argparse
+import dataclasses
+import gzip
+import json
+import re
+import subprocess
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_runnable, get_config
+from repro.distributed.sharding import use_rules
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.shardings import batch_pspecs, cache_pspecs, make_plan, to_named
+from repro.models.model_factory import build_model
+from repro.models.params import abstract_params, param_pspecs
+from repro.optim.adamw import AdamWConfig, adamw
+from repro.optim.schedules import cosine
+from repro.training.train_state import abstract_train_state, train_state_pspecs
+from repro.training.train_step import make_train_step
+
+__all__ = ["run_cell", "collective_bytes_from_hlo"]
+
+_QUANT_OPT_THRESHOLD = 5e10   # int8 optimizer state above 50B params
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+?\[[0-9,]*\]\S*)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result bytes of every collective in the partitioned module.
+
+    Shapes in post-SPMD HLO are per-device, so totals here are
+    bytes-per-chip.  ``-start`` ops are the async halves; their ``-done``
+    twins carry no payload.  Methodology note: we count the collective's
+    RESULT bytes -- for ring all-gather/reduce-scatter of result size R
+    the wire traffic per chip is R*(k-1)/k ~= R, for all-reduce ~= 2R
+    (reduce-scatter + all-gather); the report applies those factors.
+    """
+    per_op: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        b = _shape_bytes(shape_str)
+        per_op[op] = per_op.get(op, 0) + b
+        counts[op] = counts.get(op, 0) + 1
+    wire_factor = {"all-gather": 1.0, "reduce-scatter": 1.0, "all-reduce": 2.0,
+                   "all-to-all": 1.0, "collective-permute": 1.0}
+    wire = sum(per_op.get(k, 0) * f for k, f in wire_factor.items())
+    return {"result_bytes_per_op": per_op, "counts": counts,
+            "wire_bytes_per_chip": int(wire)}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend-specific
+        return {"error": f"memory_analysis unavailable: {e}"}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": f"cost_analysis unavailable: {e}"}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    keep = {}
+    for k, v in ca.items():
+        if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed")):
+            keep[k] = float(v)
+    return keep
+
+
+# --------------------------------------------------------------------------
+# per-cell lowering
+# --------------------------------------------------------------------------
+def _lower_cell(arch_id: str, shape_name: str, mesh_kind: str, *,
+                n_micro: Optional[int] = None,
+                remat_override: Optional[str] = None):
+    cfg = get_config(arch_id)
+    if remat_override is not None:
+        cfg = dataclasses.replace(cfg, remat=remat_override)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    plan = make_plan(cfg, shape, mesh)
+    model = build_model(cfg)
+    rules = plan.rules
+
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+
+    ndev = lambda t: to_named(mesh, t)
+    with use_rules(mesh, rules):
+        if shape.kind == "train":
+            quant = model.n_params > _QUANT_OPT_THRESHOLD
+            opt = adamw(cosine(3e-4, 10_000, 500),
+                        AdamWConfig(quantized_state=quant))
+            if n_micro is None:
+                b_local = max(shape.global_batch // dp, 1)
+                n_micro = max(1, b_local // 2)   # 2 rows/device/microbatch
+            step_fn = make_train_step(model, opt, n_micro=n_micro)
+            state = abstract_train_state(model.specs, opt)
+            state_sh = ndev(train_state_pspecs(model.specs, opt, rules, mesh))
+            batch = model.input_specs(shape)
+            batch_sh = ndev(batch_pspecs(cfg, shape, rules))
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, NamedSharding(mesh, P())),
+            ).lower(state, batch)
+            extra = {"n_micro": n_micro, "quantized_opt_state": quant}
+
+        elif shape.kind == "prefill":
+            params = abstract_params(model.specs)
+            params_sh = ndev(param_pspecs(model.specs, rules))
+            batch = model.input_specs(shape)
+            batch_sh = ndev(batch_pspecs(cfg, shape, rules))
+            cache = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_sh = ndev(cache_pspecs(cfg, rules))
+            logits_sh = NamedSharding(
+                mesh, P(rules.get("batch"), None, rules.get("vocab")))
+            fn = lambda p, b, c: model.prefill(p, b, c)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(params_sh, batch_sh, cache_sh),
+                out_shardings=(logits_sh, cache_sh),
+            ).lower(params, batch, cache)
+            extra = {}
+
+        else:  # decode
+            quant_kv = cfg.kv_quant_decode
+            params = abstract_params(model.specs)
+            params_sh = ndev(param_pspecs(model.specs, rules))
+            batch = model.input_specs(shape)
+            batch_sh = ndev(batch_pspecs(cfg, shape, rules))
+            cache = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         quant_kv))
+            cache_sh = ndev(cache_pspecs(cfg, rules, quantized=quant_kv))
+            logits_sh = NamedSharding(
+                mesh, P(rules.get("batch"), None, rules.get("vocab")))
+            step_idx = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = lambda p, c, b, i: model.decode_step(p, c, b, i)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(params_sh, cache_sh, batch_sh,
+                              NamedSharding(mesh, P())),
+                out_shardings=(logits_sh, cache_sh),
+            ).lower(params, cache, batch, step_idx)
+            extra = {"kv_quant": quant_kv}
+
+    return lowered, plan, model, extra
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, variant: str = "baseline", save_hlo: bool = False,
+             n_micro: Optional[int] = None,
+             remat_override: Optional[str] = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    record: dict = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind,
+    }
+    ok, reason = cell_runnable(cfg, shape)
+    if not ok:
+        record["skipped"] = reason
+        return record
+
+    t0 = time.time()
+    lowered, plan, model, extra = _lower_cell(
+        arch_id, shape_name, mesh_kind, n_micro=n_micro,
+        remat_override=remat_override)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    hlo = compiled.as_text()
+    hlo_cost = analyze_hlo(hlo).as_dict()
+    from repro.launch.roofline import useful_flops
+
+    record.update(
+        chips=mesh_chips(plan.mesh),
+        n_params=model.n_params,
+        n_active_params=model.n_active_params,
+        sharding_fallbacks=plan.fallbacks,
+        lower_seconds=round(t1 - t0, 2),
+        compile_seconds=round(t2 - t1, 2),
+        memory=_memory_dict(compiled),
+        cost=_cost_dict(compiled),
+        collectives=collective_bytes_from_hlo(hlo),
+        hlo_cost=hlo_cost,
+        model_flops=useful_flops(arch_id, shape_name),
+        hlo_lines=hlo.count("\n"),
+        **extra,
+    )
+    # the spec's required prints
+    print(f"== {arch_id} x {shape_name} x {mesh_kind} [{variant}] ==")
+    print("memory_analysis:", json.dumps(record["memory"]))
+    print("cost_analysis:", json.dumps(record["cost"]))
+    print("hlo_cost (trip-corrected, per chip): "
+          f"flops={hlo_cost['flops']:.3e} bytes={hlo_cost['bytes_accessed']:.3e} "
+          f"wire={hlo_cost['collective_wire_bytes']:.3e}")
+    print("collectives:", json.dumps(hlo_cost["collective_counts"]))
+
+    if save_hlo:
+        with gzip.open(os.path.join(
+                out_dir, _cell_name(arch_id, shape_name, mesh_kind, variant)
+                + ".hlo.txt.gz"), "wt") as f:
+            f.write(hlo)
+    return record
+
+
+def _cell_name(arch: str, shape: str, mesh: str, variant: str) -> str:
+    safe = arch.replace(".", "_")
+    return f"{safe}--{shape}--{mesh}--{variant}"
+
+
+def _write(out_dir: str, record: dict) -> str:
+    path = os.path.join(out_dir, _cell_name(
+        record["arch"], record["shape"], record["mesh"],
+        record.get("variant", "baseline")) + ".json")
+    with open(path + ".tmp", "w") as f:
+        json.dump(record, f, indent=1)
+    os.replace(path + ".tmp", path)
+    return path
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x mesh) cell in subprocesses")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--remat", choices=("full", "dots", "none"), default=None)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        failures = []
+        for mesh_kind in ("single", "multi"):
+            for arch_id in ARCH_IDS:
+                for shape_name in SHAPES:
+                    name = _cell_name(arch_id, shape_name, mesh_kind, args.variant)
+                    path = os.path.join(args.out, name + ".json")
+                    if os.path.exists(path) and not args.force:
+                        print(f"skip (exists): {name}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch_id, "--shape", shape_name,
+                           "--mesh", mesh_kind, "--out", args.out,
+                           "--variant", args.variant]
+                    if args.save_hlo:
+                        cmd.append("--save-hlo")
+                    print(">>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append(name)
+        if failures:
+            print("FAILED cells:", failures)
+            return 1
+        print("all cells complete")
+        return 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    record = run_cell(args.arch, args.shape, args.mesh, args.out,
+                      variant=args.variant, save_hlo=args.save_hlo,
+                      n_micro=args.n_micro, remat_override=args.remat)
+    path = _write(args.out, record)
+    print("wrote", path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

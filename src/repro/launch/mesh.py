@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state -- the dry-run sets ``XLA_FLAGS=--xla_force_host_platform_device_
+count=512`` before its first jax import, and nothing here may run earlier.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods = 512
+chips as (pod=2, data=16, model=16); the "pod" axis carries only
+data-parallel gradient all-reduces (the slow inter-pod DCI hops), while
+"model" stays inside the pod's ICI torus.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_chips"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,69 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the artifacts.
+
+``python -m repro.launch.report`` writes experiments/dryrun_table.md and
+experiments/roofline_table.md (both inlined into EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES
+from repro.launch.roofline import render_table
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def dryrun_table(dryrun_dir: str, variant: str = "baseline") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("variant", "baseline") != variant:
+            continue
+        rows.append(rec)
+    order = {s: i for i, s in enumerate(SHAPES)}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    lines = [
+        "| arch | shape | mesh | compile | state GB/chip | temp GB/chip | fits 16G | "
+        "collectives (ag/ar/rs/a2a/cp) | fallbacks |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                         f"SKIP | — | {r['skipped']} |")
+            continue
+        mem = r.get("memory", {})
+        arg = mem.get("argument_size_in_bytes", 0) / 1e9
+        tmp = mem.get("temp_size_in_bytes", 0) / 1e9
+        fits = "YES" if (arg + tmp) <= HBM_PER_CHIP / 1e9 else f"NO ({arg + tmp:.0f}G)"
+        cc = r.get("hlo_cost", {}).get("collective_counts", {})
+        coll = "/".join(str(cc.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        fb = len(r.get("sharding_fallbacks", []))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('compile_seconds', 0):.0f}s | {arg:.2f} | {tmp:.2f} | "
+            f"{fits} | {coll} | {fb} |")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    os.makedirs("experiments", exist_ok=True)
+    dt = dryrun_table("experiments/dryrun")
+    with open("experiments/dryrun_table.md", "w") as f:
+        f.write(dt + "\n")
+    rt = render_table("experiments/dryrun", "single", "baseline")
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(rt + "\n")
+    print(dt)
+    print()
+    print(rt)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,186 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+Hardware model (TPU v5e, per the assignment):
+    peak compute   197 TFLOP/s bf16 / chip
+    HBM bandwidth  819 GB/s / chip
+    ICI            ~50 GB/s / chip (link bandwidth, wire-factor weighted)
+
+Terms (seconds per step, per chip -- post-SPMD HLO is per-chip):
+    compute    = hlo_dot_flops / 197e12
+    memory     = hlo_bytes     / 819e9
+    collective = wire_bytes    / 50e9
+
+``model_flops`` is the analytic useful work (6·N_active·D for training,
+2·N_active·D prefill, 2·N_active·B per decoded token, plus the attention
+term) -- the MODEL_FLOPS/HLO_FLOPs ratio exposes remat/redundancy waste.
+
+``python -m repro.launch.roofline`` renders the markdown table that
+EXPERIMENTS.md §Roofline embeds, reading ``experiments/dryrun/*.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Optional
+
+from repro.configs import SHAPES, get_config
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "LINK_BW", "useful_flops", "terms",
+           "render_table"]
+
+PEAK_FLOPS = 197e12   # bf16 FLOP/s per chip
+HBM_BW = 819e9        # bytes/s per chip
+LINK_BW = 50e9        # bytes/s per chip (ICI)
+
+
+def useful_flops(arch_id: str, shape_name: str) -> dict:
+    """Analytic 'useful' FLOPs for one cell (GLOBAL, not per chip).
+
+    * linear term: 6·N_active·D (train), 2·N_active·D (prefill),
+      2·N_active·B (decode: D = B tokens, one per sequence).
+    * attention term: 2 matmuls (QK^T, AV) x 2 flops, causal halving,
+      window-clipped KV length; x3 for training (bwd = 2x fwd).
+      Attention-free families have none; hybrids count their attn third.
+    """
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    n = cfg.n_layers
+
+    if shape.kind == "train":
+        tokens = b * s
+        mult = 3.0
+    elif shape.kind == "prefill":
+        tokens = b * s
+        mult = 1.0
+    else:
+        tokens = b  # one new token per sequence
+        mult = 1.0
+
+    # param count: models/params is jax-free only via factory; compute lazily
+    from repro.models.model_factory import build_model
+
+    model = build_model(cfg)
+    n_act = model.n_active_params
+    per_tok = 6.0 if shape.kind == "train" else 2.0
+    lin = per_tok * n_act * tokens
+
+    # attention matmul flops
+    attn = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        attn_layers = n + (cfg.encoder_layers or 0)
+        kv_len = s if cfg.attn_window is None else min(s, cfg.attn_window)
+        if shape.kind == "decode":
+            q_len = 1.0
+            causal = 1.0
+        else:
+            q_len = float(s)
+            causal = 0.5 if cfg.attn_window is None else 1.0
+        attn = (4.0 * b * attn_layers * cfg.n_heads * cfg.head_dim
+                * q_len * kv_len * causal) * mult
+    elif cfg.family == "hybrid":
+        pat = cfg.recurrent.block_pattern
+        n_attn = round(n * pat.count("attn") / len(pat))
+        kv_len = min(s, cfg.attn_window or s)
+        q_len = 1.0 if shape.kind == "decode" else float(s)
+        attn = (4.0 * b * n_attn * cfg.n_heads * cfg.head_dim
+                * q_len * kv_len) * mult
+        # RG-LRU recurrence is elementwise: no MXU term
+    elif cfg.family == "ssm":
+        # WKV state update: per token per head, O(hs^2) MACs (rank-1 update
+        # + readout) -- counted as 4*d*hs per token
+        hs = cfg.rwkv.head_size
+        toks = b * (1.0 if shape.kind == "decode" else float(s))
+        attn = 4.0 * cfg.n_layers * cfg.d_model * hs * toks * mult
+
+    return {"linear": lin, "attention": attn, "total": lin + attn}
+
+
+def terms(record: dict) -> Optional[dict]:
+    """Roofline terms (seconds) for one dry-run JSON record."""
+    if record.get("skipped"):
+        return None
+    hc = record.get("hlo_cost")
+    if not hc:
+        return None
+    compute = hc["flops"] / PEAK_FLOPS
+    memory = hc["bytes_accessed"] / HBM_BW
+    collective = hc["collective_wire_bytes"] / LINK_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    bound = max(compute, memory, collective)
+    mf = record.get("model_flops", {}).get("total")
+    chips = record.get("chips", 1)
+    out = {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        # fraction of the bound that is useful compute at peak
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / bound if mf and bound else None,
+        "model_vs_hlo_flops": (mf / chips) / hc["flops"] if mf and hc["flops"] else None,
+    }
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def render_table(dryrun_dir: str, mesh: str = "single",
+                 variant: str = "baseline") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("mesh") != mesh or rec.get("variant", "baseline") != variant:
+            continue
+        t = terms(rec)
+        if t is None:
+            rows.append((rec["arch"], rec["shape"], None, rec.get("skipped", "?")))
+            continue
+        rows.append((rec["arch"], rec["shape"], t, rec))
+    lines = [
+        f"| arch | shape | compute | memory | collective | dominant | "
+        f"roofline frac | model/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    order = {s: i for i, s in enumerate(SHAPES)}
+    rows.sort(key=lambda r: (r[0], order.get(r[1], 9)))
+    for arch, shape, t, rec in rows:
+        if t is None:
+            lines.append(f"| {arch} | {shape} | — | — | — | SKIP | — | {rec} |")
+            continue
+        rf = f"{t['roofline_fraction']:.1%}" if t["roofline_fraction"] else "—"
+        mh = f"{t['model_vs_hlo_flops']:.2f}" if t["model_vs_hlo_flops"] else "—"
+        lines.append(
+            f"| {arch} | {shape} | {_fmt_s(t['compute_s'])} | "
+            f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+            f"{t['dominant']} | {rf} | {mh} |")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    table = render_table(args.dir, args.mesh, args.variant)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

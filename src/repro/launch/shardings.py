@@ -1,0 +1,210 @@
+"""Per-cell sharding plans: rules with divisibility fallbacks + state specs.
+
+The production mesh is fixed at (data=16, model=16) [x pod=2], but not
+every architecture dimension divides every axis (qwen1.5's 40 heads vs a
+16-way model axis; whisper's 51865 vocab; long_500k's batch of 1).  GSPMD
+refuses non-divisible dim shardings, so ``build_rules`` starts from the
+global rules table and *falls back to replication* for any logical axis
+whose dimension does not divide its mesh axis -- each fallback is recorded
+and surfaced in the dry-run report (EXPERIMENTS.md documents the list).
+
+Also here: PartitionSpec trees for every jit boundary (train state, batch,
+KV/recurrent caches) so launch/dryrun.py and launch/train.py state their
+in/out shardings explicitly rather than trusting propagation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.distributed.sharding import (
+    MULTI_POD_RULES,
+    SINGLE_POD_RULES,
+    AxisRules,
+    logical_spec,
+)
+from repro.models.attention import QuantKV
+
+__all__ = ["ShardingPlan", "build_rules", "make_plan", "cache_pspecs",
+           "batch_pspecs", "to_named"]
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        out = 1
+        for a in entry:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[entry]
+
+
+def build_rules(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> tuple[AxisRules, list[str]]:
+    """Rules table specialised to (arch, shape, mesh) + fallback log."""
+    base = MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    rules = dict(base)
+    fallbacks: list[str] = []
+
+    def require(axis: str, dim: int, what: str):
+        size = _axis_size(mesh, rules.get(axis))
+        if size > 1 and dim % size != 0:
+            rules[axis] = None
+            fallbacks.append(f"{axis}: {what}={dim} % {size} != 0 -> replicated")
+
+    # batch: drop "pod" first, then all, if the global batch doesn't divide
+    bsz = shape.global_batch
+    if _axis_size(mesh, rules["batch"]) > 1 and bsz % _axis_size(mesh, rules["batch"]) != 0:
+        if "pod" in mesh.axis_names and bsz % mesh.shape["data"] == 0:
+            rules["batch"] = "data"
+            fallbacks.append(f"batch: {bsz} not divisible by pod*data -> data only")
+        else:
+            rules["batch"] = None
+            fallbacks.append(f"batch: {bsz} not divisible -> replicated")
+
+    require("heads", cfg.n_heads, "n_heads")
+    require("p_heads", cfg.n_heads, "n_heads")
+    require("kv_heads", cfg.n_kv_heads, "n_kv_heads")
+    require("p_kv", cfg.n_kv_heads, "n_kv_heads")
+    require("vocab", cfg.vocab_size, "vocab")
+    require("p_vocab", cfg.vocab_size, "vocab")
+    mlp_dims = [cfg.d_ff]
+    if cfg.moe is not None:
+        mlp_dims.append(cfg.moe.d_ff_expert)
+    if cfg.recurrent is not None:
+        mlp_dims.append(cfg.recurrent.d_rnn)
+    for dim in mlp_dims:
+        require("mlp", dim, "ff/rnn width")
+        require("p_mlp", dim, "ff/rnn width")
+    if cfg.moe is not None:
+        require("experts", cfg.moe.num_experts, "num_experts")
+        require("p_experts", cfg.moe.num_experts, "num_experts")
+    # FSDP axis shards d_model slices of params
+    require("p_fsdp", cfg.d_model, "d_model")
+
+    # KV-cache context parallelism: when kv_heads cannot occupy the model
+    # axis (GQA kv < 16 or non-divisible), shard the cache's SEQUENCE axis
+    # over "model" instead -- otherwise 32k-decode caches replicate 16x and
+    # blow past HBM (qwen1.5-32b: 86 GB/chip replicated vs 5.4 GB sharded).
+    if rules.get("kv_heads") is None and shape.kind in ("prefill", "decode"):
+        cache_len = shape.seq_len if cfg.attn_window is None else min(
+            shape.seq_len, cfg.attn_window)
+        model_size = mesh.shape.get("model", 1)
+        if model_size > 1 and cache_len % model_size == 0:
+            rules["kv_seq"] = "model"
+            fallbacks.append(
+                f"kv_seq: cache seq axis -> model ({cache_len} % {model_size} == 0; "
+                "context-parallel KV since kv_heads replicated)")
+
+    # flattened token axis (MoE dispatch) follows the batch axis decision
+    rules["tokens"] = rules["batch"]
+    return rules, fallbacks
+
+
+# --------------------------------------------------------------------------
+# cache PartitionSpec trees (mirror each family's init_cache structure)
+# --------------------------------------------------------------------------
+def _kv_slot(rules: AxisRules, lead: tuple[str, ...], quantized: bool):
+    axes = lead + ("batch", "kv_seq", "kv_heads", None)
+    spec = logical_spec(axes, rules)
+    if quantized:
+        sc = logical_spec(axes, rules)  # scale: same layout, last dim 1
+        return {"k": QuantKV(q=spec, scale=sc), "v": QuantKV(q=spec, scale=sc)}
+    return {"k": spec, "v": spec}
+
+
+def cache_pspecs(cfg: ArchConfig, rules: AxisRules, *, quantized: bool = False):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models.transformer import _block_structure
+
+        pattern, _ = _block_structure(cfg)
+        return [_kv_slot(rules, ("layers",), quantized) for _ in pattern]
+    if fam == "ssm":
+        return {
+            "tm_last": logical_spec(("layers", "batch", None), rules),
+            "cm_last": logical_spec(("layers", "batch", None), rules),
+            "wkv": logical_spec(("layers", "batch", "heads", None, None), rules),
+        }
+    if fam == "hybrid":
+        from repro.models.rglru import _pattern_counts
+
+        pat, _, tail = _pattern_counts(cfg)
+
+        def slot(kind, lead):
+            if kind == "attn":
+                return _kv_slot(rules, lead, quantized)
+            return {
+                "conv": logical_spec(lead + ("batch", None, "mlp"), rules),
+                "h": logical_spec(lead + ("batch", "mlp"), rules),
+            }
+
+        return {
+            "blocks": [slot(k, ("layers",)) for k in pat],
+            "tail": [slot(k, ()) for k in tail],
+        }
+    if fam == "encdec":
+        kv = _kv_slot(rules, ("layers",), quantized)
+        return {
+            "max_len": P(),
+            "layers": {"self": dict(kv), "cross": dict(kv)},
+        }
+    raise ValueError(fam)
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, rules: AxisRules) -> dict:
+    b = logical_spec(("batch",), rules)[0]
+    tok = P(b, None)
+    emb = P(b, None, None)
+    if shape.kind == "train":
+        out = {"tokens": tok, "labels": tok}
+        if cfg.family == "encdec":
+            out["frames"] = emb
+        if cfg.family == "vlm":
+            out["patches"] = emb
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": tok}
+        if cfg.family == "encdec":
+            out["frames"] = emb
+        if cfg.family == "vlm":
+            out["patches"] = emb
+        return out
+    return {"tokens": tok}
+
+
+# --------------------------------------------------------------------------
+# the full per-cell plan
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: AxisRules
+    fallbacks: list[str]
+    cfg: ArchConfig
+    shape: ShapeConfig
+
+    def named(self, spec_tree):
+        return to_named(self.mesh, spec_tree)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (jit in/out_shardings)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def make_plan(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> ShardingPlan:
+    rules, fallbacks = build_rules(cfg, shape, mesh)
+    return ShardingPlan(mesh=mesh, rules=rules, fallbacks=fallbacks,
+                        cfg=cfg, shape=shape)

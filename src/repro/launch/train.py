@@ -1,0 +1,87 @@
+"""Training launcher.
+
+Two modes:
+
+* default -- actually trains on the local device(s): a reduced-family model
+  (``--reduced``, the CPU path used by examples and CI) or any full config
+  if the hardware can hold it.  Fault-tolerant: checkpoints land in
+  ``--ckpt-dir`` and a restarted process resumes automatically.
+* ``--lower-only`` -- production-mesh path: builds the (16,16) or
+  (2,16,16) mesh, jits the train step with explicit shardings and stops
+  after ``.lower().compile()`` (what a real pod launcher would do before
+  burning accelerator hours; the dry-run drives this per cell).
+
+Examples::
+
+    python -m repro.launch.train --arch minicpm-2b --reduced --steps 200
+    python -m repro.launch.train --arch dbrx-132b --lower-only --mesh multi
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import ARCH_IDS, SHAPES, ShapeConfig, get_config, get_reduced_config
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", choices=("cosine", "wsd"), default="cosine")
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lower-only", action="store_true",
+                    help="production mesh: lower+compile the train step, no run")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--shape", choices=tuple(SHAPES), default="train_4k")
+    args = ap.parse_args(argv)
+
+    if args.lower_only:
+        # delegate to the dry-run cell runner (subprocess-safe XLA flags
+        # only matter there; when invoked directly we assume the caller
+        # set the device count)
+        from repro.launch.dryrun import run_cell
+
+        rec = run_cell(args.arch, args.shape, args.mesh, "experiments/dryrun",
+                       variant="train-launcher")
+        print("lower+compile OK" if not rec.get("skipped") else
+              f"skipped: {rec['skipped']}")
+        return 0
+
+    from repro.data import make_pipeline
+    from repro.models import build_model
+    from repro.optim import adamw, cosine, wsd
+    from repro.training import Trainer, TrainerConfig
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    pipe = make_pipeline(cfg, shape, seed=args.seed)
+    sched = (wsd(args.lr, args.steps, max(args.steps // 20, 1))
+             if args.schedule == "wsd"
+             else cosine(args.lr, args.steps, max(args.steps // 20, 1)))
+    opt = adamw(sched)
+    print(f"[train] {cfg.name}: {model.n_params:,} params "
+          f"({model.n_active_params:,} active), {args.steps} steps, "
+          f"batch {args.global_batch} x seq {args.seq_len}")
+    trainer = Trainer(model, opt, pipe, TrainerConfig(
+        total_steps=args.steps, checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir, log_every=args.log_every,
+        n_micro=args.n_micro, seed=args.seed))
+    _, metrics = trainer.run()
+    print(f"[train] done: {metrics}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,5 @@
+"""Model zoo: all assigned architecture families, pure-JAX, scan-based."""
+
+from repro.models.model_factory import BuiltModel, build_model
+
+__all__ = ["BuiltModel", "build_model"]

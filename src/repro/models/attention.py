@@ -1,0 +1,309 @@
+"""Chunked (flash-style) attention in pure JAX.
+
+One implementation serves every attention variant in the zoo:
+
+* running-softmax accumulation over KV chunks (``lax.scan``) -- O(Sq*chunk)
+  score memory instead of O(Sq*Skv), which is what lets 32k-prefill cells
+  compile within per-device HBM and keeps the HLO small for 512-way GSPMD;
+* **flash backward** (``custom_vjp``): the train/prefill path recomputes
+  scores per chunk in the backward pass instead of letting autodiff save
+  every chunk's probability matrix.  Without it, each layer's backward
+  stashes O(Sq*Skv) f32 through HBM -- on llama4-400b train_4k that was
+  ~5.4 GB/layer of per-chunk residuals; with it, only q/k/v/out/lse
+  survive the forward.  This is the TPU-idiomatic equivalent of the flash
+  attention kernel, expressed at the XLA level so GSPMD still shards it;
+* GQA/MQA via query-group reshape (no KV repetition in memory);
+* causal / bidirectional / prefix-LM / sliding-window masks from position
+  vectors, so ring-buffer caches (positions out of slot order) just work;
+* int8-quantized KV chunks dequantized on the fly inside the scan
+  (per-token, per-head scales) -- the cache never materializes in bf16.
+
+Layouts: q (B, Sq, H, D); k, v (B, Skv, KH, D); output (B, Sq, H, D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.layers import softcap
+
+__all__ = ["QuantKV", "quantize_kv", "dequantize_kv", "chunked_attention", "ring_positions"]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+@dataclasses.dataclass
+class QuantKV:
+    """Int8 tensor + per-(token, head) scale.  Registered as a pytree."""
+
+    q: jax.Array       # int8, (..., D)
+    scale: jax.Array   # f32,  (..., 1)
+
+
+jax.tree_util.register_dataclass(QuantKV, data_fields=["q", "scale"], meta_fields=[])
+
+
+def quantize_kv(x: jax.Array) -> QuantKV:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return QuantKV(q=q, scale=scale)
+
+
+def dequantize_kv(x: Union[jax.Array, QuantKV], dtype=jnp.bfloat16) -> jax.Array:
+    if isinstance(x, QuantKV):
+        return (x.q.astype(jnp.float32) * x.scale).astype(dtype)
+    return x
+
+
+def ring_positions(step: jax.Array, window: int) -> jax.Array:
+    """Absolute positions held by each ring-buffer slot after ``step`` writes.
+
+    Slot ``i`` holds position ``p = step-1 - ((step-1-i) mod W)``; negative
+    values mean the slot has not been written yet (masked out).
+    """
+    i = jnp.arange(window)
+    last = step - 1
+    p = last - jnp.mod(last - i, window)
+    return jnp.where(p >= 0, p, -1)
+
+
+def _split_chunks(x, n_chunks: int, chunk: int):
+    """(B, S, ...) -> (n_chunks, B, chunk, ...) for lax.scan."""
+
+    def go(leaf):
+        b, s = leaf.shape[:2]
+        leaf = leaf.reshape((b, n_chunks, chunk) + leaf.shape[2:])
+        return jnp.moveaxis(leaf, 1, 0)
+
+    return jax.tree.map(go, x)
+
+
+def _chunk_mask(qpos, pc, causal, window, prefix_len):
+    """(Sq, C) allowed mask from query/chunk position vectors."""
+    allowed = pc[None, :] >= 0
+    if causal:
+        allowed = allowed & (pc[None, :] <= qpos[:, None])
+    if window is not None:
+        allowed = allowed & (pc[None, :] > qpos[:, None] - window)
+    if prefix_len is not None:
+        allowed = allowed | ((pc[None, :] < prefix_len) & (pc[None, :] >= 0))
+    return allowed
+
+
+# --------------------------------------------------------------------------
+# flash train/prefill path: custom_vjp with per-chunk recompute in backward
+# --------------------------------------------------------------------------
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg: tuple, q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    out, _ = _flash_fwd(cfg, q, k, v)
+    return out
+
+
+def _flash_plan(cfg, q, k):
+    causal, window, prefix_len, chunk, logit_cap, scale = cfg
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    chunk = min(chunk, skv)
+    pad = (chunk - skv % chunk) % chunk
+    n_chunks = (skv + pad) // chunk
+    qpos = jnp.arange(sq)
+    kvpos = jnp.pad(jnp.arange(skv), (0, pad), constant_values=-1)
+    return b, sq, h, d, skv, kh, g, chunk, pad, n_chunks, qpos, kvpos
+
+
+def _flash_fwd(cfg, q, k, v):
+    causal, window, prefix_len, chunk, logit_cap, scale = cfg
+    b, sq, h, d, skv, kh, g, chunk, pad, n_chunks, qpos, kvpos = _flash_plan(cfg, q, k)
+
+    qf = jnp.transpose(q.reshape(b, sq, kh, g, d), (0, 2, 3, 1, 4)).astype(jnp.float32)
+    kp = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)]) if pad else k
+    vp = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)]) if pad else v
+    ks = _split_chunks(kp, n_chunks, chunk)
+    vs = _split_chunks(vp, n_chunks, chunk)
+    pcs = kvpos.reshape(n_chunks, chunk)
+
+    def step(carry, xs):
+        acc, m_run, l_run = carry
+        kc, vc, pc = xs
+        kc = jnp.transpose(kc.astype(jnp.float32), (0, 2, 1, 3))
+        vc = jnp.transpose(vc.astype(jnp.float32), (0, 2, 1, 3))
+        scores = jnp.einsum("bhgsd,bhcd->bhgsc", qf * scale, kc)
+        scores = softcap(scores, logit_cap)
+        allowed = _chunk_mask(qpos, pc, causal, window, prefix_len)
+        scores = jnp.where(allowed[None, None, None], scores, _NEG_INF)
+        m_new = jnp.maximum(m_run, scores.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[..., None]) * allowed[None, None, None]
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhgsc,bhcd->bhgsd", p, vc)
+        return (acc_new, m_new, l_new), None
+
+    init = (
+        jnp.zeros((b, kh, g, sq, d), jnp.float32),
+        jnp.full((b, kh, g, sq), _NEG_INF, jnp.float32),
+        jnp.zeros((b, kh, g, sq), jnp.float32),
+    )
+    (acc, m_run, l_run), _ = jax.lax.scan(step, init, (ks, vs, pcs))
+    l_safe = jnp.maximum(l_run, 1e-20)
+    out5 = acc / l_safe[..., None]
+    lse = m_run + jnp.log(l_safe)
+    out = jnp.transpose(out5, (0, 3, 1, 2, 4)).reshape(b, sq, h, d).astype(q.dtype)
+    return out, (q, k, v, out5, lse)
+
+
+def _flash_bwd(cfg, res, dout):
+    causal, window, prefix_len, chunk, logit_cap, scale = cfg
+    q, k, v, out5, lse = res
+    b, sq, h, d, skv, kh, g, chunk, pad, n_chunks, qpos, kvpos = _flash_plan(cfg, q, k)
+
+    qf = jnp.transpose(q.reshape(b, sq, kh, g, d), (0, 2, 3, 1, 4)).astype(jnp.float32)
+    do5 = jnp.transpose(dout.reshape(b, sq, kh, g, d), (0, 2, 3, 1, 4)).astype(jnp.float32)
+    delta = jnp.sum(do5 * out5, axis=-1)                      # (B,KH,G,Sq)
+
+    kp = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)]) if pad else k
+    vp = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)]) if pad else v
+    ks = _split_chunks(kp, n_chunks, chunk)
+    vs = _split_chunks(vp, n_chunks, chunk)
+    pcs = kvpos.reshape(n_chunks, chunk)
+
+    def step(dq_acc, xs):
+        kc0, vc0, pc = xs
+        kc = jnp.transpose(kc0.astype(jnp.float32), (0, 2, 1, 3))  # (B,KH,C,D)
+        vc = jnp.transpose(vc0.astype(jnp.float32), (0, 2, 1, 3))
+        raw = jnp.einsum("bhgsd,bhcd->bhgsc", qf * scale, kc)
+        sc = softcap(raw, logit_cap)          # unmasked (finite) capped scores
+        allowed = _chunk_mask(qpos, pc, causal, window, prefix_len)
+        s = jnp.where(allowed[None, None, None], sc, _NEG_INF)
+        p = jnp.exp(s - lse[..., None]) * allowed[None, None, None]
+        dv_c = jnp.einsum("bhgsc,bhgsd->bhcd", p, do5)
+        dp = jnp.einsum("bhgsd,bhcd->bhgsc", do5, vc)
+        ds = p * (dp - delta[..., None])
+        if logit_cap is not None:
+            # d softcap(x)/dx = 1 - tanh^2 = 1 - (capped/cap)^2, from the
+            # UNMASKED scores (masked entries already have ds == 0 via p)
+            ds = ds * (1.0 - jnp.square(sc / logit_cap))
+        dq_acc = dq_acc + jnp.einsum("bhgsc,bhcd->bhgsd", ds, kc) * scale
+        dk_c = jnp.einsum("bhgsc,bhgsd->bhcd", ds, qf) * scale
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    dq5, (dks, dvs) = jax.lax.scan(step, dq0, (ks, vs, pcs))
+
+    dq = jnp.transpose(dq5, (0, 3, 1, 2, 4)).reshape(b, sq, h, d).astype(q.dtype)
+
+    def unsplit(ch):  # (n, B, KH, C, D) -> (B, S, KH, D)
+        ch = jnp.moveaxis(ch, 0, 1)                # (B, n, KH, C, D)
+        ch = jnp.moveaxis(ch, 2, 3)                # (B, n, C, KH, D)
+        full = ch.reshape(b, n_chunks * chunk, kh, d)
+        return full[:, :skv]
+
+    dk = unsplit(dks).astype(k.dtype)
+    dv = unsplit(dvs).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: Union[jax.Array, QuantKV],
+    v: Union[jax.Array, QuantKV],
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: Optional[jax.Array] = None,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    chunk: int = 1024,
+    logit_cap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Flash-style attention over KV chunks.  See module docstring."""
+    b, sq, h, d = q.shape
+    kv_leaves = jax.tree.leaves(k)
+    skv, kh = kv_leaves[0].shape[1], kv_leaves[0].shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    if scale is None:
+        scale = d ** -0.5
+
+    # flash custom_vjp path: differentiable train/prefill attention with
+    # natural positions and unquantized KV (decode/ring paths keep the
+    # plain scan -- they are never differentiated)
+    if (q_positions is None and kv_positions is None
+            and not isinstance(k, QuantKV) and not isinstance(v, QuantKV)
+            and isinstance(prefix_len, (int, type(None)))):
+        cfg = (causal, window, prefix_len, chunk, logit_cap, float(scale))
+        out = _flash(cfg, q, k, v)
+        return lshard(out, "batch", "seq", "heads", "head_dim")
+
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)
+
+    chunk = min(chunk, skv)
+    if skv % chunk != 0:  # pad KV (padded slots masked via position = -1)
+        pad = chunk - skv % chunk
+        k = jax.tree.map(lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)), k)
+        v = jax.tree.map(lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)), v)
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+        skv += pad
+    n_chunks = skv // chunk
+
+    qg = q.reshape(b, sq, kh, g, d)
+    qg = jnp.transpose(qg, (0, 2, 3, 1, 4))  # (B, KH, G, Sq, D)
+    qf = qg.astype(jnp.float32) * scale
+
+    ks = _split_chunks(k, n_chunks, chunk)
+    vs = _split_chunks(v, n_chunks, chunk)
+    pos_chunks = kv_positions.reshape(n_chunks, chunk)
+
+    qpos = q_positions.astype(jnp.int32)
+
+    def step(carry, xs):
+        acc, m_run, l_run = carry
+        kc, vc, pc = xs
+        kc = dequantize_kv(kc).astype(jnp.float32)  # (B, chunk, KH, D)
+        vc = dequantize_kv(vc).astype(jnp.float32)
+        kc = jnp.transpose(kc, (0, 2, 1, 3))  # (B, KH, C, D)
+        vc = jnp.transpose(vc, (0, 2, 1, 3))
+        scores = jnp.einsum("bhgsd,bhcd->bhgsc", qf, kc)
+        scores = softcap(scores, logit_cap)
+        allowed = pc[None, :] >= 0  # (1, C) valid slots
+        if causal:
+            allowed = allowed & (pc[None, :] <= qpos[:, None])
+        if window is not None:
+            allowed = allowed & (pc[None, :] > qpos[:, None] - window)
+        if prefix_len is not None:
+            allowed = allowed | ((pc[None, :] < prefix_len) & (pc[None, :] >= 0))
+        scores = jnp.where(allowed[None, None, None], scores, _NEG_INF)
+        m_new = jnp.maximum(m_run, scores.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        # explicit zeroing keeps fully-masked rows at p == 0 (not uniform)
+        p = jnp.exp(scores - m_new[..., None]) * allowed[None, None, None]
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhgsc,bhcd->bhgsd", p, vc)
+        return (acc_new, m_new, l_new), None
+
+    init = (
+        jnp.zeros((b, kh, g, sq, d), jnp.float32),
+        jnp.full((b, kh, g, sq), _NEG_INF, jnp.float32),
+        jnp.zeros((b, kh, g, sq), jnp.float32),
+    )
+    (acc, _, l_run), _ = jax.lax.scan(step, init, (ks, vs, pos_chunks))
+    out = acc / jnp.maximum(l_run[..., None], 1e-20)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, h, d)
+    out = out.astype(q.dtype)
+    return lshard(out, "batch", "seq", "heads", "head_dim")

@@ -1,0 +1,247 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, T, d_model).  Pre-LN transformer with LayerNorm, GELU
+MLP, sinusoidal positions (deviation: decoder also uses sinusoidal instead
+of learned positions -- noted in configs/whisper_medium.py), tied unembed.
+
+Decode caches: self-attention KV (grows with generated tokens) plus
+per-layer cross-attention K/V computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import lshard
+from repro.models.attention import chunked_attention
+from repro.models.layers import layer_norm, mlp_apply, sinusoidal_positions
+from repro.models.losses import sharded_xent_loss
+from repro.models.params import Spec
+from repro.models.transformer import _attn_specs, _mlp_specs, stack_specs
+
+__all__ = [
+    "encdec_specs",
+    "encdec_loss",
+    "encdec_prefill",
+    "encdec_decode_step",
+    "init_encdec_cache",
+    "encode",
+]
+
+
+def _ln(cfg) -> dict:
+    d = cfg.d_model
+    return {"w": Spec((d,), (None,), init="ones", dtype=jnp.float32),
+            "b": Spec((d,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def _mlp_bias_specs(cfg, dtype) -> dict:
+    sp = _mlp_specs(cfg, dtype)
+    sp["bi"] = Spec((cfg.d_ff,), ("p_mlp",), init="zeros", dtype=dtype)
+    sp["bo"] = Spec((cfg.d_model,), (None,), init="zeros", dtype=dtype)
+    return sp
+
+
+def _enc_layer(cfg, dtype) -> dict:
+    return {
+        "ln1": _ln(cfg),
+        "attn": _attn_specs(cfg, dtype),
+        "ln2": _ln(cfg),
+        "mlp": _mlp_bias_specs(cfg, dtype),
+    }
+
+
+def _dec_layer(cfg, dtype) -> dict:
+    return {
+        "ln1": _ln(cfg),
+        "self_attn": _attn_specs(cfg, dtype),
+        "ln_x": _ln(cfg),
+        "cross_attn": _attn_specs(cfg, dtype),
+        "ln2": _ln(cfg),
+        "mlp": _mlp_bias_specs(cfg, dtype),
+    }
+
+
+def encdec_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    return {
+        "embed": Spec((cfg.vocab_size, cfg.d_model), ("p_vocab", "p_fsdp"),
+                      init="embed", dtype=dtype),
+        "enc_ln_post": _ln(cfg),
+        "dec_ln_post": _ln(cfg),
+        "enc_layers": stack_specs(_enc_layer(cfg, dtype), cfg.encoder_layers),
+        "dec_layers": stack_specs(_dec_layer(cfg, dtype), cfg.n_layers),
+    }
+
+
+def _mha(p, cfg, xq, xkv, *, causal, cache=None, step=None, mode="train"):
+    """Attention helper for enc/dec (no RoPE; absolute sinusoidal positions
+    are added to the inputs)."""
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    q = lshard(q, "batch", "seq", "heads", "head_dim")
+    if xkv is not None:
+        k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+        k = lshard(k, "batch", "seq", "kv_heads", "head_dim")
+        v = lshard(v, "batch", "seq", "kv_heads", "head_dim")
+    else:  # cached cross-attention
+        k, v = cache["k"], cache["v"]
+
+    if mode == "decode" and causal:
+        # self-attention with linear cache
+        c_len = cache["k"].shape[1]
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), step, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), step, axis=1)
+        out = chunked_attention(
+            q, kc, vc, causal=True,
+            q_positions=jnp.reshape(step, (1,)),
+            kv_positions=jnp.arange(c_len),
+            chunk=2048,
+        )
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = chunked_attention(q, k, v, causal=causal, chunk=1024)
+        new_cache = None
+        if mode == "prefill" and causal and cache is not None:
+            c_len = cache["k"].shape[1]
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": kc, "v": vc}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return lshard(y, "batch", "seq", "embed"), new_cache
+
+
+def encode(params, cfg, frames: jax.Array) -> jax.Array:
+    """Encoder over precomputed frame embeddings (B, T, D)."""
+    t = frames.shape[1]
+    x = frames + sinusoidal_positions(t, cfg.d_model).astype(frames.dtype)[None]
+    x = lshard(x, "batch", "seq", "embed")
+
+    def step(xc, lp):
+        h, _ = _mha(lp["attn"], cfg, layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"]),
+                    layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"]), causal=False)
+        xc = xc + h
+        xc = xc + mlp_apply(layer_norm(xc, lp["ln2"]["w"], lp["ln2"]["b"]),
+                            lp["mlp"], "gelu")
+        return xc, None
+
+    if cfg.remat != "none":
+        step = jax.checkpoint(step)
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return layer_norm(x, params["enc_ln_post"]["w"], params["enc_ln_post"]["b"])
+
+
+def _decoder(params, cfg, tok_emb, enc_out, *, mode, cache=None, step=None):
+    t = tok_emb.shape[1]
+    if mode == "decode":
+        pos = sinusoidal_positions(cache["max_len"].shape[0], cfg.d_model)
+        pos_t = jax.lax.dynamic_slice_in_dim(pos, step, 1, axis=0)
+        x = tok_emb + pos_t.astype(tok_emb.dtype)[None]
+    else:
+        x = tok_emb + sinusoidal_positions(t, cfg.d_model).astype(tok_emb.dtype)[None]
+    x = lshard(x, "batch", "seq", "embed")
+
+    def step_fn(xc, xs):
+        lp, lc = xs
+        xn1 = layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"])
+        h, new_self = _mha(
+            lp["self_attn"], cfg, xn1, xn1,
+            causal=True, mode=mode,
+            cache=None if lc is None else lc["self"], step=step,
+        )
+        xc = xc + h
+        xn = layer_norm(xc, lp["ln_x"]["w"], lp["ln_x"]["b"])
+        if mode == "train":
+            h2, _ = _mha(lp["cross_attn"], cfg, xn, enc_out, causal=False)
+            new_cross = None
+        elif mode == "prefill":
+            # also build the cross KV cache from the encoder output
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+            h2, _ = _mha(lp["cross_attn"], cfg, xn, enc_out, causal=False)
+            new_cross = {"k": k.astype(lc["cross"]["k"].dtype),
+                         "v": v.astype(lc["cross"]["v"].dtype)}
+        else:
+            h2, _ = _mha(lp["cross_attn"], cfg, xn, None, causal=False,
+                         cache=lc["cross"], mode="cached")
+            new_cross = lc["cross"]
+        xc = xc + h2
+        xc = xc + mlp_apply(layer_norm(xc, lp["ln2"]["w"], lp["ln2"]["b"]),
+                            lp["mlp"], "gelu")
+        new_lc = None
+        if new_self is not None or mode == "decode":
+            new_lc = {"self": new_self, "cross": new_cross}
+        return xc, new_lc
+
+    if cfg.remat != "none":
+        step_fn = jax.checkpoint(step_fn)
+
+    if cache is None:
+        x, _ = jax.lax.scan(lambda c, lp: step_fn(c, (lp, None)), x, params["dec_layers"])
+        new_layers = None
+    else:
+        x, new_layers = jax.lax.scan(step_fn, x, (params["dec_layers"], cache["layers"]))
+    x = layer_norm(x, params["dec_ln_post"]["w"], params["dec_ln_post"]["b"])
+    return x, new_layers
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    ell, kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "max_len": jnp.zeros((cache_len,), jnp.int8),  # length marker only
+        "layers": {
+            "self": {
+                "k": jnp.zeros((ell, batch, cache_len, kh, hd), dtype),
+                "v": jnp.zeros((ell, batch, cache_len, kh, hd), dtype),
+            },
+            "cross": {
+                "k": jnp.zeros((ell, batch, cache_len, kh, hd), dtype),
+                "v": jnp.zeros((ell, batch, cache_len, kh, hd), dtype),
+            },
+        },
+    }
+
+
+def _tok_embed(params, cfg, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return lshard(e, "batch", "seq", "embed")
+
+
+def _head(params, cfg, x):
+    logits = jnp.einsum("btd,vd->btv", x.astype(jnp.bfloat16),
+                        params["embed"].astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    return lshard(logits, "batch", None, "vocab")
+
+
+def encdec_loss(params, cfg, batch):
+    enc_out = encode(params, cfg, batch["frames"])
+    x, _ = _decoder(params, cfg, _tok_embed(params, cfg, batch["tokens"]),
+                    enc_out, mode="train")
+    loss_sum, count = sharded_xent_loss(
+        x, params["embed"].T, batch["labels"], mask=batch.get("mask")
+    )
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"xent": loss}
+
+
+def encdec_prefill(params, cfg, batch, cache):
+    enc_out = encode(params, cfg, batch["frames"])
+    x, new_layers = _decoder(params, cfg, _tok_embed(params, cfg, batch["tokens"]),
+                             enc_out, mode="prefill", cache=cache)
+    new_cache = dict(cache, layers=new_layers)
+    return _head(params, cfg, x[:, -1:]), new_cache
+
+
+def encdec_decode_step(params, cfg, cache, batch, step):
+    x, new_layers = _decoder(params, cfg, _tok_embed(params, cfg, batch["tokens"]),
+                             None, mode="decode", cache=cache, step=step)
+    new_cache = dict(cache, layers=new_layers)
+    return _head(params, cfg, x), new_cache

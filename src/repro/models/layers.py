@@ -1,0 +1,119 @@
+"""Shared neural-net building blocks (pure functions, explicit params)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "mlp_apply",
+    "rotary_cos_sin",
+    "apply_rotary",
+    "sinusoidal_positions",
+    "softcap",
+]
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = True) -> jax.Array:
+    """RMSNorm in f32 with bf16 in/out.  ``zero_centered`` follows the
+    Gemma/Griffin convention of storing ``weight - 1``."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if zero_centered:
+        w = w + 1.0
+    return (xf * w).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp_apply(x: jax.Array, p: dict, variant: str) -> jax.Array:
+    """Gated / plain MLP.  ``p``: {wi, wg?, wo, bi?, bo?}.
+
+    variant: swiglu | geglu | gelu (plain 2-layer).
+    Activations annotated with the 'mlp' logical axis for TP.
+    """
+    if variant in ("swiglu", "geglu"):
+        h = x @ p["wi"]
+        g = x @ p["wg"]
+        h = lshard(h, "batch", "seq", "mlp")
+        g = lshard(g, "batch", "seq", "mlp")
+        act = "silu" if variant == "swiglu" else "gelu"
+        h = _act(g, act) * h
+    elif variant == "gelu":
+        h = x @ p["wi"]
+        if "bi" in p:
+            h = h + p["bi"]
+        h = lshard(h, "batch", "seq", "mlp")
+        h = _act(h, "gelu")
+    else:
+        raise ValueError(variant)
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return lshard(out, "batch", "seq", "embed")
+
+
+def rotary_cos_sin(positions: jax.Array, head_dim: int,
+                   theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """RoPE tables for integer ``positions`` (any shape) -> (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Apply RoPE. ``x``: (..., positions..., n_heads, head_dim); cos/sin
+    broadcast over the head axis: (positions..., head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (length, dim), f32."""
+    half = dim // 2
+    scale = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * math.log(10000.0) / (half - 1))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,134 @@
+"""Uniform model API over all architecture families.
+
+``build_model(cfg)`` returns a ``BuiltModel`` exposing:
+
+* ``specs``                 parameter descriptor tree (shape+init+sharding)
+* ``init(key)``             materialized params
+* ``loss / prefill / decode_step``  pure functions
+* ``init_cache(batch, cache_len)``  decode state (KV / recurrent / ring)
+* ``input_specs(shape)``    ShapeDtypeStruct stand-ins for the dry-run
+* ``n_params / n_active_params``    for 6·N·D roofline bookkeeping
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.models import encdec, rglru, rwkv6, transformer
+from repro.models.params import Spec, count_params, init_params
+
+__all__ = ["BuiltModel", "build_model"]
+
+
+@dataclasses.dataclass
+class BuiltModel:
+    cfg: ArchConfig
+    specs: Any
+    loss: Callable                       # (params, batch) -> (loss, metrics)
+    prefill: Callable                    # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable                # (params, cache, batch, step) -> (logits, cache)
+    init_cache: Callable                 # (batch, cache_len, quantized) -> cache
+    n_params: int
+    n_active_params: int
+
+    def init(self, key: jax.Array):
+        return init_params(self.specs, key)
+
+    # ---------------- input specs for lowering ------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+        emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.bfloat16)
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                return {
+                    "frames": emb(b, s, cfg.d_model),
+                    "tokens": tok(b, s),
+                    "labels": tok(b, s),
+                }
+            if cfg.family == "vlm":
+                text = s - cfg.num_prefix_tokens
+                return {
+                    "patches": emb(b, cfg.num_prefix_tokens, cfg.d_model),
+                    "tokens": tok(b, text),
+                    "labels": tok(b, text),
+                }
+            return {"tokens": tok(b, s), "labels": tok(b, s)}
+        if shape.kind == "prefill":
+            if cfg.family == "encdec":
+                return {"frames": emb(b, s, cfg.d_model), "tokens": tok(b, s)}
+            if cfg.family == "vlm":
+                return {
+                    "patches": emb(b, cfg.num_prefix_tokens, cfg.d_model),
+                    "tokens": tok(b, s - cfg.num_prefix_tokens),
+                }
+            return {"tokens": tok(b, s)}
+        # decode: one new token against a cache of length s
+        return {"tokens": tok(b, 1)}
+
+
+def _count_active(cfg: ArchConfig, specs) -> int:
+    total = count_params(specs)
+    if cfg.moe is None:
+        return total
+    moe = cfg.moe
+    expert_params_per_layer = 3 * cfg.d_model * moe.d_ff_expert  # wi, wg, wo
+    n_moe_layers = sum(cfg.moe_layer_flags)
+    inactive = n_moe_layers * (moe.num_experts - moe.top_k) * expert_params_per_layer
+    return total - inactive
+
+
+def build_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> BuiltModel:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        specs = transformer.transformer_specs(cfg, dtype)
+        loss = lambda p, b: transformer.lm_loss(p, cfg, b)
+        prefill = lambda p, b, c: transformer.lm_prefill(p, cfg, b, c)
+        decode = lambda p, c, b, s: transformer.lm_decode_step(p, cfg, c, b, s)
+        init_cache = lambda batch, cache_len, quantized=False: transformer.init_kv_cache(
+            cfg, batch, cache_len, quantized=quantized, dtype=dtype
+        )
+    elif fam == "ssm":
+        specs = rwkv6.rwkv_specs(cfg, dtype)
+        loss = lambda p, b: rwkv6.rwkv_loss(p, cfg, b)
+        prefill = lambda p, b, c: rwkv6.rwkv_prefill(p, cfg, b, c)
+        decode = lambda p, c, b, s: rwkv6.rwkv_decode_step(p, cfg, c, b, s)
+        init_cache = lambda batch, cache_len, quantized=False: rwkv6.init_rwkv_state(
+            cfg, batch
+        )
+    elif fam == "hybrid":
+        specs = rglru.griffin_specs(cfg, dtype)
+        loss = lambda p, b: rglru.griffin_loss(p, cfg, b)
+        prefill = lambda p, b, c: rglru.griffin_prefill(p, cfg, b, c)
+        decode = lambda p, c, b, s: rglru.griffin_decode_step(p, cfg, c, b, s)
+        init_cache = lambda batch, cache_len, quantized=False: rglru.init_griffin_state(
+            cfg, batch, cache_len, dtype=dtype
+        )
+    elif fam == "encdec":
+        specs = encdec.encdec_specs(cfg, dtype)
+        loss = lambda p, b: encdec.encdec_loss(p, cfg, b)
+        prefill = lambda p, b, c: encdec.encdec_prefill(p, cfg, b, c)
+        decode = lambda p, c, b, s: encdec.encdec_decode_step(p, cfg, c, b, s)
+        init_cache = lambda batch, cache_len, quantized=False: encdec.init_encdec_cache(
+            cfg, batch, cache_len, dtype=dtype
+        )
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    return BuiltModel(
+        cfg=cfg,
+        specs=specs,
+        loss=loss,
+        prefill=prefill,
+        decode_step=decode,
+        init_cache=init_cache,
+        n_params=count_params(specs),
+        n_active_params=_count_active(cfg, specs),
+    )

@@ -1,0 +1,179 @@
+"""Mixture-of-Experts FFN with group-local sort-based capacity dispatch.
+
+GShard-style one-hot dispatch tensors of shape (tokens, E, C) are ruinous at
+1M tokens x 128 experts, so we use the sort-based formulation (MegaBlocks
+lineage): flatten token->expert assignments, argsort by expert, compute each
+assignment's position within its expert via a searchsorted offset, scatter
+into a capacity buffer (overflow drops, like capacity-factor routing), run
+the expert FFNs as one batched einsum with E sharded over 'model' (expert
+parallelism), and combine back with a segment-sum.
+
+**Dispatch locality** (the part that matters at 512 chips): all routing,
+sorting and scattering happens within a leading *group* axis sized to the
+data-parallel degree -- tokens are viewed as (G, T/G, d) with G sharded over
+the batch axes, so argsort/scatter/gather never cross a data shard.  The
+only cross-device movement is the (G, E, C, d) capacity buffer resharding
+from group-major (data) to expert-major (model): exactly one all-to-all
+each way, which is the textbook MoE communication pattern.  (The first
+implementation sorted the GLOBAL token axis; GSPMD dutifully all-gathered
+every token to every chip -- 11 TB of wire and 482 GB of temp per chip on
+llama4-400b train_4k.  The group axis removes that by construction.)
+
+Router styles: 'softmax' (DBRX: softmax over all experts, renormalized
+top-k) and 'sigmoid' (Llama-4: sigmoid gate on the top-1 logit).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import MoESettings
+from repro.distributed.sharding import current_mesh, current_rules, lshard
+from repro.models.params import Spec
+
+__all__ = ["moe_layer_specs", "moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, moe: MoESettings) -> int:
+    cap = int(math.ceil(n_tokens * moe.top_k * moe.capacity_factor / moe.num_experts))
+    return max(8, min(cap, n_tokens))
+
+
+def _dp_groups(n_tokens: int) -> int:
+    """Dispatch-group count = data-parallel degree of the token axis."""
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return 1
+    entry = rules.get("tokens")
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    g = 1
+    for a in names:
+        g *= mesh.shape[a]
+    return g if (g > 1 and n_tokens % g == 0) else 1
+
+
+def moe_layer_specs(d_model: int, moe: MoESettings, dtype=jnp.bfloat16) -> dict:
+    e, f = moe.num_experts, moe.d_ff_expert
+    sp = {
+        "router": Spec((d_model, e), ("p_fsdp", "p_none"), dtype=jnp.float32),
+        # expert weights: EP over "model" via p_experts; the expert-internal ff
+        # axis must NOT also map to "model" (duplicate-axis error), so it uses
+        # its own logical axis (replicated; each device holds whole experts)
+        "wi": Spec((e, d_model, f), ("p_experts", "p_fsdp", "p_expert_mlp"), dtype=dtype),
+        "wg": Spec((e, d_model, f), ("p_experts", "p_fsdp", "p_expert_mlp"), dtype=dtype),
+        "wo": Spec((e, f, d_model), ("p_experts", "p_expert_mlp", "p_fsdp"), dtype=dtype),
+    }
+    if moe.num_shared_experts:
+        fs = f * moe.num_shared_experts
+        sp["shared_wi"] = Spec((d_model, fs), ("p_fsdp", "p_mlp"), dtype=dtype)
+        sp["shared_wg"] = Spec((d_model, fs), ("p_fsdp", "p_mlp"), dtype=dtype)
+        sp["shared_wo"] = Spec((fs, d_model), ("p_mlp", "p_fsdp"), dtype=dtype)
+    return sp
+
+
+def moe_ffn(
+    x: jax.Array,               # (B, S, D)
+    p: dict,
+    moe: MoESettings,
+    *,
+    router_style: str = "softmax",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B, S, D), load-balance aux loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    g = _dp_groups(t)
+    tl = t // g                     # tokens per dispatch group (one DP shard)
+    cap = moe_capacity(tl, moe)
+
+    xf = x.reshape(g, tl, d)
+    xf = lshard(xf, "tokens", None, "embed")
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32), p["router"])
+
+    if router_style == "sigmoid":
+        top_vals, top_idx = jax.lax.top_k(logits, k)
+        gates = jax.nn.sigmoid(top_vals)
+        probs = jax.nn.softmax(logits, axis=-1)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_vals, top_idx = jax.lax.top_k(probs, k)
+        gates = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch-style, over ALL tokens) -------------
+    assign_onehot = jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32)
+    frac_tokens = assign_onehot.mean(axis=(0, 1))
+    frac_prob = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_prob)
+
+    # ---- group-local sort-based dispatch -----------------------------------
+    flat_e = top_idx.reshape(g, tl * k)
+    flat_g = gates.reshape(g, tl * k).astype(x.dtype)
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)      # sorted expert ids
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos = jnp.arange(tl * k)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+    token = order // k                                    # (g, tl*k) local idx
+
+    gathered = jnp.where(
+        keep[..., None],
+        jnp.take_along_axis(xf, token[..., None], axis=1),
+        jnp.zeros((), x.dtype))
+    # Shard d over "model" BEFORE the scatter (free split: xf's d is
+    # replicated), so the scatter writes a locally-owned buffer.  Scattering
+    # straight into an expert-sharded buffer makes GSPMD emit full-buffer
+    # mask + all-reduce instead of an all-to-all (u32/f32[tl*k, d]
+    # all-reduces, 57% of this cell's wire; §Perf cell B' iteration 3).
+    gathered = lshard(gathered, "tokens", None, "mlp")
+
+    # batched (vmap) scatter/gather everywhere: the batching dim gives
+    # GSPMD license to keep each group's dispatch on its own data shard
+    # (the unbatched fancy-index form all-reduced 12.9 TB per MoE layer).
+    def _scatter_one(se_g, pos_g, gath_g):
+        buf_g = jnp.zeros((e, cap, d), x.dtype)
+        return buf_g.at[se_g, pos_g].set(gath_g, mode="drop")
+
+    buf = jax.vmap(_scatter_one)(se, pos_c, gathered)
+    buf = lshard(buf, "tokens", None, None, "mlp")   # local scatter layout
+    # e <-> d axis swap: THE dispatch all-to-all between token-major (d
+    # sharded) and expert-major (e sharded) layouts
+    buf = lshard(buf, "tokens", "experts", None, "embed")
+
+    # ---- expert FFN (E sharded over 'model') -------------------------------
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"])
+    hg = jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+    h = lshard(h, "tokens", "experts", None, "expert_mlp")
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(hg) * h, p["wo"])
+    y = lshard(y, "tokens", "experts", None, "embed")
+
+    # ---- combine (group-local gather + segment sum) -------------------------
+    # e <-> d axis swap back (the combine all-to-all): with e local and d
+    # model-sharded, the gather/scatter below never leave the chip
+    y = lshard(y, "tokens", None, None, "mlp")
+    vals = jax.vmap(lambda y_g, se_g, pos_g: y_g[se_g, pos_g])(y, se, pos_c)
+    vals = lshard(vals, "tokens", None, "mlp")
+    w = jnp.take_along_axis(flat_g, order, axis=-1) * keep.astype(x.dtype)
+    vals = vals * w[..., None]                            # (g, tl*k, d)
+    out = jax.vmap(
+        lambda tok_g, val_g: jnp.zeros((tl, d), x.dtype).at[tok_g].add(val_g)
+    )(token, vals)
+    out = lshard(out, "tokens", None, "mlp")
+    # back to the replicated-d residual layout: one all-gather of (tl, d)
+    out = lshard(out, "tokens", None, "embed")
+
+    # ---- shared expert (dense, always-on) ----------------------------------
+    if "shared_wi" in p:
+        hs = jnp.einsum("gtd,df->gtf", xf, p["shared_wi"])
+        gs = jnp.einsum("gtd,df->gtf", xf, p["shared_wg"])
+        hs = lshard(hs, "tokens", None, "mlp")
+        gs = lshard(gs, "tokens", None, "mlp")
+        out = out + jnp.einsum("gtf,fd->gtd", jax.nn.silu(gs) * hs, p["shared_wo"])
+
+    return out.reshape(b, s, d), aux

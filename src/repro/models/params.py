@@ -1,0 +1,86 @@
+"""Parameter descriptor trees: single source of truth for shape, init,
+logical sharding axes and dtype of every parameter.
+
+``init_params`` materializes values; ``param_pspecs`` materializes the
+PartitionSpec tree the launcher feeds to ``jax.jit(in_shardings=...)``.
+Keeping both derived from one descriptor tree means the sharding plan can
+never drift from the model definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.distributed.sharding import AxisRules, logical_spec
+
+__all__ = ["Spec", "init_params", "param_pspecs", "count_params", "tree_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Descriptor for one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | embed
+    fan_in: Optional[int] = None     # for 1/sqrt(fan_in) scaling
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(spec: Spec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.fan_in
+    if fan_in is None:
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    if spec.init == "embed":
+        scale = 1.0
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_params(tree, key: jax.Array):
+    """Materialize a pytree of Specs into a pytree of arrays."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(tree):
+    """ShapeDtypeStructs for lowering without allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def param_pspecs(tree, rules: Optional[AxisRules] = None):
+    """PartitionSpec pytree mirroring the descriptor tree."""
+    return jax.tree.map(
+        lambda s: logical_spec(s.axes, rules),
+        tree,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Spec))
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def tree_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Spec))
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)

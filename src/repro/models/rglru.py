@@ -1,0 +1,295 @@
+"""Griffin / RecurrentGemma hybrid (arXiv:2402.19427).
+
+Temporal-mixing blocks follow the pattern (rec, rec, attn):
+
+* recurrent block: GeLU(x W_gate) ⊙ RG-LRU(conv1d(x W_in)) -> W_out
+  - RG-LRU: a_t = exp(-c*softplus(Λ)*r_t), r_t = σ(x W_a), i_t = σ(x W_x)
+            h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t)
+    computed with ``lax.associative_scan`` for train/prefill, single step
+    for decode (state is O(1) -> long_500k lowers);
+  - causal depthwise conv1d (width 4) with a 3-token cache for decode;
+* local-attention block: sliding-window MQA (window 2048) with a ring
+  cache -- decode memory bounded by the window, not the context;
+* every temporal block is followed by a GeGLU MLP block.
+
+38 layers = 12 x (rec, rec, attn) scanned superblocks + 2 rec tail layers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import lshard
+from repro.models.attention import QuantKV
+from repro.models.layers import mlp_apply, rms_norm, rotary_cos_sin
+from repro.models.params import Spec
+from repro.models.transformer import (
+    _attn_specs,
+    _mlp_specs,
+    attn_apply,
+    stack_specs,
+)
+from repro.models.losses import sharded_xent_loss
+
+__all__ = [
+    "griffin_specs",
+    "griffin_loss",
+    "griffin_prefill",
+    "griffin_decode_step",
+    "init_griffin_state",
+    "rglru_apply",
+]
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+def _rec_block_specs(cfg: ArchConfig, dtype) -> dict:
+    d, dr = cfg.d_model, cfg.recurrent.d_rnn
+    w = cfg.recurrent.conv_width
+    return {
+        "w_gate": Spec((d, dr), ("p_fsdp", "p_mlp"), dtype=dtype, fan_in=d),
+        "w_in": Spec((d, dr), ("p_fsdp", "p_mlp"), dtype=dtype, fan_in=d),
+        "w_out": Spec((dr, d), ("p_mlp", "p_fsdp"), dtype=dtype, fan_in=dr),
+        "conv_w": Spec((w, dr), (None, "p_mlp"), dtype=jnp.float32),
+        "conv_b": Spec((dr,), ("p_mlp",), init="zeros", dtype=jnp.float32),
+        "wa": Spec((dr, dr), ("p_mlp", None), dtype=dtype, fan_in=dr),
+        "ba": Spec((dr,), (None,), init="zeros", dtype=jnp.float32),
+        "wx": Spec((dr, dr), ("p_mlp", None), dtype=dtype, fan_in=dr),
+        "bx": Spec((dr,), (None,), init="zeros", dtype=jnp.float32),
+        "lam": Spec((dr,), (None,), init="ones", dtype=jnp.float32),
+    }
+
+
+def _norm(cfg) -> dict:
+    return {"w": Spec((cfg.d_model,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def _temporal_layer_specs(cfg: ArchConfig, kind: str, dtype) -> dict:
+    body = (
+        {"attn": _attn_specs(cfg, dtype)}
+        if kind == "attn"
+        else {"rec": _rec_block_specs(cfg, dtype)}
+    )
+    return {
+        "ln1": _norm(cfg),
+        **body,
+        "ln2": _norm(cfg),
+        "mlp": _mlp_specs(cfg, dtype),
+    }
+
+
+def _pattern_counts(cfg: ArchConfig) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    pat = cfg.recurrent.block_pattern
+    repeats = cfg.n_layers // len(pat)
+    tail = cfg.n_layers - repeats * len(pat)
+    tail_kinds = pat[:tail]
+    return pat, repeats, tail_kinds
+
+
+def griffin_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    pat, repeats, tail = _pattern_counts(cfg)
+    sp = {
+        "embed": Spec((cfg.vocab_size, cfg.d_model), ("p_vocab", "p_fsdp"),
+                      init="embed", dtype=dtype),
+        "final_norm": _norm(cfg),
+        "blocks": [
+            stack_specs(_temporal_layer_specs(cfg, kind, dtype), repeats)
+            for kind in pat
+        ],
+        "tail": [_temporal_layer_specs(cfg, kind, dtype) for kind in tail],
+    }
+    return sp
+
+
+# --------------------------------------------------------------------------
+# RG-LRU + conv
+# --------------------------------------------------------------------------
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 cache: Optional[jax.Array], mode: str):
+    """Depthwise causal conv1d.  x: (B, T, C); w: (W, C); cache: (B, W-1, C)."""
+    width = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if mode == "decode":
+        hist = jnp.concatenate([cache, xf], axis=1)      # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", hist, w)[:, None] + b
+        new_cache = hist[:, 1:]
+        return y.astype(x.dtype), new_cache
+    prev = jnp.pad(xf, ((0, 0), (width - 1, 0), (0, 0)))
+    y = sum(
+        prev[:, i : i + x.shape[1]] * w[i][None, None] for i in range(width)
+    ) + b
+    new_cache = prev[:, prev.shape[1] - (width - 1):] if cache is not None else None
+    return y.astype(x.dtype), new_cache
+
+
+def rglru_apply(p: dict, x: jax.Array, h0: Optional[jax.Array], mode: str):
+    """RG-LRU over (B, T, C) with carry-in state h0 (B, C) f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r                   # (B, T, C) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if mode == "decode":
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+    # associative scan over time: (a, b) ∘ (a', b') = (a'a, a'b + b')
+    def combine(u, v):
+        au, bu = u
+        av, bv = v
+        return au * av, bu * av + bv
+
+    a_seq, b_seq = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h_seq = b_seq if h0 is None else a_seq * h0[:, None] + b_seq
+    return h_seq.astype(x.dtype), h_seq[:, -1]
+
+
+def _rec_block(p, cfg, x, st, mode):
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    gate = lshard(gate, "batch", "seq", "mlp")
+    u = x @ p["w_in"]
+    u = lshard(u, "batch", "seq", "mlp")
+    u, conv_cache = _causal_conv(
+        u, p["conv_w"], p["conv_b"],
+        None if st is None else st["conv"], mode,
+    )
+    u, h_last = rglru_apply(p, u, None if st is None else st["h"], mode)
+    out = (gate * u) @ p["w_out"]
+    new_st = None
+    if st is not None:
+        new_st = {"conv": conv_cache, "h": h_last}
+    return lshard(out, "batch", "seq", "embed"), new_st
+
+
+# --------------------------------------------------------------------------
+# full stack
+# --------------------------------------------------------------------------
+def _temporal_layer(p, cfg, kind, x, st, mode, cos, sin, step):
+    xn = rms_norm(x, p["ln1"]["w"])
+    if kind == "attn":
+        h, new_kv = attn_apply(
+            p["attn"], cfg, xn, cos, sin, mode=mode,
+            cache=None if st is None else st, step=step,
+            window=cfg.attn_window,
+        )
+        new_st = new_kv
+    else:
+        h, new_st = _rec_block(p["rec"], cfg, xn, st, mode)
+    x = x + h
+    x = x + mlp_apply(rms_norm(x, p["ln2"]["w"]), p["mlp"], cfg.mlp_variant)
+    return x, new_st
+
+
+def init_griffin_state(cfg: ArchConfig, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16) -> dict:
+    pat, repeats, tail = _pattern_counts(cfg)
+    w = cfg.attn_window or cache_len
+    c_len = min(cache_len, w)
+    dr, cw = cfg.recurrent.d_rnn, cfg.recurrent.conv_width
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def slot_state(kind, lead):
+        if kind == "attn":
+            return {
+                "k": jnp.zeros(lead + (batch, c_len, kh, hd), dtype),
+                "v": jnp.zeros(lead + (batch, c_len, kh, hd), dtype),
+            }
+        return {
+            "conv": jnp.zeros(lead + (batch, cw - 1, dr), jnp.float32),
+            "h": jnp.zeros(lead + (batch, dr), jnp.float32),
+        }
+
+    return {
+        "blocks": [slot_state(kind, (repeats,)) for kind in pat],
+        "tail": [slot_state(kind, ()) for kind in tail],
+    }
+
+
+def _stack(params, cfg, x, state, mode, step):
+    pat, repeats, tail_kinds = _pattern_counts(cfg)
+    if mode == "decode":
+        positions = jnp.reshape(step, (1,))
+    else:
+        positions = jnp.arange(x.shape[1])
+    cos, sin = rotary_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+    def super_step(xc, xs):
+        xx = xc
+        slot_params, slot_states = xs
+        new_states = []
+        for si, kind in enumerate(pat):
+            st = None if slot_states is None else slot_states[si]
+            xx, ns = _temporal_layer(
+                slot_params[si], cfg, kind, xx, st, mode, cos, sin, step
+            )
+            new_states.append(ns)
+        if all(n is None for n in new_states):
+            return xx, None
+        return xx, new_states
+
+    if cfg.remat != "none":
+        super_step = jax.checkpoint(super_step)
+
+    if state is None:
+        x, _ = jax.lax.scan(
+            lambda c, ps: super_step(c, (ps, None)), x, params["blocks"]
+        )
+        new_block_states = None
+    else:
+        x, new_block_states = jax.lax.scan(
+            super_step, x, (params["blocks"], state["blocks"])
+        )
+    new_tail = []
+    for ti, kind in enumerate(tail_kinds):
+        st = None if state is None else state["tail"][ti]
+        x, ns = _temporal_layer(params["tail"][ti], cfg, kind, x, st, mode, cos, sin, step)
+        new_tail.append(ns)
+    new_state = None
+    if state is not None:
+        new_state = {"blocks": new_block_states, "tail": new_tail}
+    return x, new_state
+
+
+def _embed(params, cfg, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    e = e * jnp.asarray(cfg.emb_multiplier, e.dtype)
+    return lshard(e, "batch", "seq", "embed")
+
+
+def _logits(params, cfg, x):
+    logits = jnp.einsum("btd,vd->btv", x.astype(jnp.bfloat16),
+                        params["embed"].astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    return lshard(logits, "batch", None, "vocab")
+
+
+def griffin_loss(params, cfg, batch):
+    x = _embed(params, cfg, batch["tokens"])
+    x, _ = _stack(params, cfg, x, None, "train", None)
+    x = rms_norm(x, params["final_norm"]["w"])
+    loss_sum, count = sharded_xent_loss(
+        x, params["embed"].T, batch["labels"], mask=batch.get("mask")
+    )
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"xent": loss}
+
+
+def griffin_prefill(params, cfg, batch, state):
+    x = _embed(params, cfg, batch["tokens"])
+    x, new_state = _stack(params, cfg, x, state, "prefill", None)
+    x = rms_norm(x[:, -1:], params["final_norm"]["w"])
+    return _logits(params, cfg, x), new_state
+
+
+def griffin_decode_step(params, cfg, state, batch, step):
+    x = _embed(params, cfg, batch["tokens"])
+    x, new_state = _stack(params, cfg, x, state, "decode", step)
+    x = rms_norm(x, params["final_norm"]["w"])
+    return _logits(params, cfg, x), new_state

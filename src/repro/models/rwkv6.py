@@ -1,0 +1,373 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free token mixing with
+data-dependent decay.
+
+Recurrence per head (state S in R^{K x V}, head size 64):
+
+    o_t = r_t · (diag(u)·k_t v_t^T + S_{t-1})
+    S_t = diag(w_t)·S_{t-1} + k_t v_t^T
+
+with w_t = exp(-exp(decay_base + lora(x_t)))  (data-dependent decay) and
+DDLerp token-shift mixing for the r/k/v/w/g projections.
+
+Training/prefill use a *chunked* parallel form: within a chunk all decay
+exponents are differences of a running log-decay cumsum and hence <= 0
+(numerically safe); inter-chunk state propagation is a pair of einsums (MXU
+work).  Decode is the exact single-step recurrence; both paths are tested
+against each other and against a naive per-token scan.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import lshard
+from repro.models.layers import layer_norm
+from repro.models.params import Spec
+
+__all__ = [
+    "rwkv_specs",
+    "rwkv_loss",
+    "rwkv_prefill",
+    "rwkv_decode_step",
+    "init_rwkv_state",
+    "wkv_chunked",
+    "wkv_scan_reference",
+]
+
+_CHUNK = 16
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+def _layer(cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hs = cfg.n_heads, cfg.rwkv.head_size
+    lw, lg, lm = cfg.rwkv.decay_lora, cfg.rwkv.gate_lora, cfg.rwkv.mix_lora
+    tm = {
+        # DDLerp token-shift: base mixes + data-dependent delta LoRA
+        "maa_base": Spec((5, d), (None, None), init="zeros", dtype=jnp.float32),
+        "maa_x": Spec((d,), (None,), init="zeros", dtype=jnp.float32),
+        "maa_w1": Spec((d, 5 * lm), ("p_fsdp", None), dtype=dtype),
+        "maa_w2": Spec((5, lm, d), (None, None, "p_fsdp"), dtype=dtype),
+        # projections (head-parallel over 'model')
+        "wr": Spec((d, h, hs), ("p_fsdp", "p_heads", None), dtype=dtype, fan_in=d),
+        "wk": Spec((d, h, hs), ("p_fsdp", "p_heads", None), dtype=dtype, fan_in=d),
+        "wv": Spec((d, h, hs), ("p_fsdp", "p_heads", None), dtype=dtype, fan_in=d),
+        "wg": Spec((d, h, hs), ("p_fsdp", "p_heads", None), dtype=dtype, fan_in=d),
+        "wo": Spec((h, hs, d), ("p_heads", None, "p_fsdp"), dtype=dtype, fan_in=d),
+        # data-dependent decay
+        "decay_base": Spec((h, hs), ("p_heads", None), init="zeros", dtype=jnp.float32),
+        "decay_w1": Spec((d, lw), ("p_fsdp", None), dtype=dtype),
+        "decay_w2": Spec((lw, h, hs), (None, "p_heads", None), dtype=dtype),
+        # bonus
+        "u": Spec((h, hs), ("p_heads", None), init="zeros", dtype=jnp.float32),
+        # per-head group norm
+        "gn_w": Spec((d,), (None,), init="ones", dtype=jnp.float32),
+        "gn_b": Spec((d,), (None,), init="zeros", dtype=jnp.float32),
+    }
+    cm = {
+        "mix_k": Spec((d,), (None,), init="zeros", dtype=jnp.float32),
+        "mix_r": Spec((d,), (None,), init="zeros", dtype=jnp.float32),
+        "wk": Spec((d, f), ("p_fsdp", "p_mlp"), dtype=dtype, fan_in=d),
+        "wv": Spec((f, d), ("p_mlp", "p_fsdp"), dtype=dtype, fan_in=f),
+        "wr": Spec((d, d), ("p_fsdp", None), dtype=dtype, fan_in=d),
+    }
+    return {
+        "ln1": {"w": Spec((d,), (None,), init="ones", dtype=jnp.float32),
+                "b": Spec((d,), (None,), init="zeros", dtype=jnp.float32)},
+        "ln2": {"w": Spec((d,), (None,), init="ones", dtype=jnp.float32),
+                "b": Spec((d,), (None,), init="zeros", dtype=jnp.float32)},
+        "time_mix": tm,
+        "channel_mix": cm,
+    }
+
+
+def rwkv_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    from repro.models.transformer import stack_specs
+
+    d = cfg.d_model
+    return {
+        "embed": Spec((cfg.vocab_size, d), ("p_vocab", "p_fsdp"), init="embed", dtype=dtype),
+        "unembed": Spec((d, cfg.vocab_size), ("p_fsdp", "p_vocab"), dtype=dtype, fan_in=d),
+        "ln_in": {"w": Spec((d,), (None,), init="ones", dtype=jnp.float32),
+                  "b": Spec((d,), (None,), init="zeros", dtype=jnp.float32)},
+        "final_norm": {"w": Spec((d,), (None,), init="ones", dtype=jnp.float32),
+                       "b": Spec((d,), (None,), init="zeros", dtype=jnp.float32)},
+        "layers": stack_specs(_layer(cfg, dtype), cfg.n_layers),
+    }
+
+
+# --------------------------------------------------------------------------
+# WKV core
+# --------------------------------------------------------------------------
+def wkv_scan_reference(r, k, v, logw, u, state):
+    """Exact per-token recurrence (oracle for tests).
+
+    r/k/v/logw: (B, T, H, K) f32 (logw = log decay, <= 0); u: (H, K);
+    state: (B, H, K, V=K).
+    """
+
+    def step(s, xs):
+        rt, kt, vt, lwt = xs  # (B, H, K)
+        bonus = jnp.einsum("bhk,bhv->bhkv", kt * u[None], vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + bonus)
+        s = s * jnp.exp(lwt)[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return s, o
+
+    xs = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), (r, k, v, logw))
+    state, o = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(o, 0, 1), state
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = _CHUNK,
+                stream_dtype=jnp.bfloat16):
+    """Chunked parallel form; exact (up to fp) match of the scan reference
+    when ``stream_dtype`` is f32 (tests); bf16 streaming by default.
+
+    Takes the decay in log space (``logw <= 0``) so strong decays never
+    round-trip through an f32-underflowing ``exp``/``log`` pair (which is
+    both a forward -inf and a backward 1/0 hazard).
+
+    The intra-chunk decay weight factorizes EXACTLY:
+        exp(pm1_t - p_s) = exp(pm1_t - c) * exp(c - p_s)
+    for any per-(b,h,k) constant c, so the (B, Ct, Cs, H, K) pairwise decay
+    tensor of the naive form never materializes -- that tensor made
+    rwkv6-3b train_4k the worst memory-bound cell in the roofline table
+    (2.0e15 bytes/chip; see EXPERIMENTS.md §Perf).  We center at the
+    mid-chunk cumsum so each factor's exponent is bounded by
+    (chunk/2)*|logw|_max; with the model-level decay clamp logw >= -8 and
+    chunk=16 each factor stays <= e^64 (finite in f32).  Masked-out score
+    entries may still overflow in the PRODUCT; the select-mask below
+    discards them before they can poison anything (see inline comment).
+    """
+    b, t, h, kdim = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zero = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zero(r), zero(k), zero(v), zero(logw)
+    tt = t + pad
+    n = tt // chunk
+    # Stream chunks with dynamic_slice instead of pre-stacking (n, B, C, H,
+    # K) scan inputs: the moveaxis copies (plus their backward scatter
+    # twins) dominated this cell's HBM bytes (2.3e14 of 5.6e14 per chip --
+    # §Perf iteration 3).  r/k/v additionally stream in the model dtype
+    # (``stream_dtype``) and are promoted per chunk; decay stays f32 for
+    # the cumsum.
+    rs = r.astype(stream_dtype)
+    ks = k.astype(stream_dtype)
+    vs = v.astype(stream_dtype)
+    mask = jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :]  # bool
+
+    f32 = jnp.float32
+    # dots run in stream_dtype (CPU's DotThunk rejects bf16->f32 preferred
+    # accumulation; on TPU the bf16 dot hits the MXU either way); the state
+    # carry accumulates in f32 explicitly.
+    acc = {}
+
+    def chunk_step(s, i):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        rc = sl(rs)                              # (B, C, H, K), stream_dtype
+        kc = sl(ks)
+        vc = sl(vs)
+        lwc = sl(logw)                           # f32: cumsum precision
+        p = jnp.cumsum(lwc, axis=1)              # (B, C, H, K), decreasing
+        pm1 = jnp.concatenate([jnp.zeros_like(p[:, :1]), p[:, :-1]], axis=1)
+        # inter-chunk: r_t decayed to chunk start, against carried state
+        r0 = (rc.astype(f32) * jnp.exp(pm1)).astype(stream_dtype)
+        o_inter = jnp.einsum("bthk,bhkv->bthv", r0, s.astype(stream_dtype), **acc)
+        # intra-chunk, factorized: exp(pm1_t - p_s) = exp(pm1_t-c) exp(c-p_s)
+        c = p[:, chunk // 2][:, None]            # (B, 1, H, K) re-centering
+        r_dec = (rc.astype(f32) * jnp.exp(pm1 - c)).astype(stream_dtype)
+        k_grow = (kc.astype(f32) * jnp.exp(c - p)).astype(stream_dtype)
+        scores = jnp.einsum("bthk,bshk->bhts", r_dec, k_grow, **acc)
+        # SELECT mask, not multiply: each factor is finite (exponent <=
+        # (chunk/2)*8 = 64), but masked-pair PRODUCTS can overflow to
+        # inf/NaN inside the dot -- select discards those entries, and the
+        # backward stays finite because the cotangent is exactly zero where
+        # the factors are extreme (hypothesis-found at chunk=16 with
+        # multiply-masking; chunk=8 halved the hazard but doubled the
+        # scan's saved state stack, +2.4x memory term -- see §Perf R5/R6).
+        scores = jnp.where(mask[None, None], scores, 0).astype(stream_dtype)
+        o_intra = jnp.einsum("bhts,bshv->bthv", scores, vc, **acc)
+        # diagonal bonus term
+        coef = jnp.einsum("bthk,bthk,hk->bth", rc.astype(f32), kc.astype(f32), u)
+        o_diag = coef[..., None] * vc.astype(f32)
+        # state to chunk end
+        pe = p[:, -1]                                           # (B, H, K)
+        kdec = (kc.astype(f32) * jnp.exp(pe[:, None] - p)).astype(stream_dtype)
+        s_new = s * jnp.exp(pe)[..., None] + jnp.einsum(
+            "bshk,bshv->bhkv", kdec, vc, **acc).astype(f32)
+        o_chunk = (o_inter.astype(f32) + o_intra.astype(f32) + o_diag
+                   ).astype(stream_dtype)
+        return s_new, o_chunk
+
+    state, o = jax.lax.scan(chunk_step, state, jnp.arange(n))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, tt, h, kdim).astype(jnp.float32)
+    return o[:, :t], state
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+def _token_shift(x, last):
+    """x_{t-1} with ``last`` filling position 0.  x: (B, T, D); last: (B, D)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix(p, cfg, x, last_x, state, mode):
+    b, t, d = x.shape
+    h, hs = cfg.n_heads, cfg.rwkv.head_size
+    # Mixing/DDLerp chain stays in the model dtype (bf16): these tensors are
+    # (B, T, 5, D)-sized selection coefficients feeding bf16 einsums, and
+    # keeping them f32 doubled the HBM traffic of the whole layer (roofline
+    # §Perf iteration 2).  Only the wkv recurrence inputs and the decay are
+    # promoted to f32 (state dynamics need the precision).
+    xf = x.astype(jnp.float32)
+    xb = x
+    prev = _token_shift(xb, last_x.astype(x.dtype))
+    xx = prev - xb
+    # DDLerp
+    xxx = xb + xx * p["maa_x"].astype(x.dtype)
+    lora = jnp.einsum("btd,dm->btm", xxx, p["maa_w1"])
+    lora = jnp.tanh(lora.reshape(b, t, 5, -1).astype(jnp.float32)).astype(x.dtype)
+    delta = jnp.einsum("btfm,fmd->btfd", lora, p["maa_w2"])
+    mixes = p["maa_base"][None, None].astype(x.dtype) + delta     # (B, T, 5, D)
+    xw, xk, xv, xr, xg = [xb + xx * mixes[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("btd,dhk->bthk", xr, p["wr"]).astype(jnp.float32)
+    k = jnp.einsum("btd,dhk->bthk", xk, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("btd,dhk->bthk", xv, p["wv"]).astype(jnp.float32)
+    g = jnp.einsum("btd,dhk->bthk", xg, p["wg"])
+    r = lshard(r, "batch", "seq", "heads", "head_dim")
+    k = lshard(k, "batch", "seq", "heads", "head_dim")
+    v = lshard(v, "batch", "seq", "heads", "head_dim")
+
+    dlora = jnp.tanh(jnp.einsum("btd,dl->btl", xw.astype(x.dtype), p["decay_w1"]))
+    dd = jnp.einsum("btl,lhk->bthk", dlora, p["decay_w2"]).astype(jnp.float32)
+    # log-decay clamped to [-8, ~0): e^-8/token zeroes the state within a
+    # couple of tokens (semantically "forget now"), while keeping the
+    # factorized chunked kernel's exponents inside f32 range (see
+    # wkv_chunked) and grads finite.  Applied identically in train/prefill
+    # (wkv_chunked) and decode (direct recurrence) so the paths agree.
+    logw = -jnp.exp(jnp.clip(p["decay_base"][None, None] + dd, -10.0, 4.0))
+    logw = jnp.maximum(logw, -8.0)
+
+    u = p["u"]
+    if mode == "decode":
+        rt, kt, vt, lwt = r[:, 0], k[:, 0], v[:, 0], logw[:, 0]
+        bonus = jnp.einsum("bhk,bhv->bhkv", kt * u[None], vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, state + bonus)[:, None]
+        new_state = state * jnp.exp(lwt)[..., None] + jnp.einsum(
+            "bhk,bhv->bhkv", kt, vt
+        )
+    else:
+        o, new_state = wkv_chunked(r, k, v, logw, u, state)
+
+    o = o.reshape(b, t, d)
+    # per-head group norm == layer_norm over each head's slice
+    o = o.reshape(b, t, h, hs)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(b, t, d) * p["gn_w"] + p["gn_b"]
+    o = o.astype(x.dtype) * jax.nn.silu(g).reshape(b, t, d)
+    out = jnp.einsum("bthk,hkd->btd", o.reshape(b, t, h, hs), p["wo"])
+    return lshard(out, "batch", "seq", "embed"), xf[:, -1], new_state
+
+
+def _channel_mix(p, cfg, x, last_x):
+    xf = x.astype(jnp.float32)
+    prev = _token_shift(x, last_x.astype(x.dtype))
+    xx = prev - x
+    xk = x + xx * p["mix_k"].astype(x.dtype)
+    xr = x + xx * p["mix_r"].astype(x.dtype)
+    k = jnp.einsum("btd,df->btf", xk, p["wk"])
+    k = lshard(k, "batch", "seq", "mlp")
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("btf,fd->btd", k, p["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"])) * kv
+    return lshard(out, "batch", "seq", "embed"), xf[:, -1]
+
+
+def _layer_apply(p, cfg, x, st, mode):
+    h, tm_last, wkv = _time_mix(
+        p["time_mix"], cfg, layer_norm(x, p["ln1"]["w"], p["ln1"]["b"]),
+        st["tm_last"], st["wkv"], mode,
+    )
+    x = x + h
+    h2, cm_last = _channel_mix(
+        p["channel_mix"], cfg, layer_norm(x, p["ln2"]["w"], p["ln2"]["b"]),
+        st["cm_last"],
+    )
+    x = x + h2
+    return x, {"tm_last": tm_last, "cm_last": cm_last, "wkv": wkv}
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> dict:
+    h, hs, d = cfg.n_heads, cfg.rwkv.head_size, cfg.d_model
+    ell = cfg.n_layers
+    return {
+        "tm_last": jnp.zeros((ell, batch, d), jnp.float32),
+        "cm_last": jnp.zeros((ell, batch, d), jnp.float32),
+        "wkv": jnp.zeros((ell, batch, h, hs, hs), jnp.float32),
+    }
+
+
+def _stack_forward(params, cfg, x, state, mode):
+    def step(xc, xs):
+        lp, st = xs
+        xx, new_st = _layer_apply(lp, cfg, xc, st, mode)
+        return xx, new_st
+
+    if cfg.remat != "none":
+        step = jax.checkpoint(step)
+    x, new_state = jax.lax.scan(step, x, (params["layers"], state))
+    return x, new_state
+
+
+def _embed(params, cfg, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    e = lshard(e, "batch", "seq", "embed")
+    return layer_norm(e, params["ln_in"]["w"], params["ln_in"]["b"])
+
+
+def _head(params, cfg, x):
+    x = layer_norm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    logits = jnp.einsum("btd,dv->btv", x.astype(jnp.bfloat16),
+                        params["unembed"].astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    return lshard(logits, "batch", "seq", "vocab")
+
+
+def rwkv_loss(params, cfg, batch):
+    from repro.models.losses import sharded_xent_loss
+
+    x = _embed(params, cfg, batch["tokens"])
+    state = init_rwkv_state(cfg, x.shape[0])
+    x, _ = _stack_forward(params, cfg, x, state, "train")
+    x = layer_norm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    loss_sum, count = sharded_xent_loss(
+        x, params["unembed"], batch["labels"], mask=batch.get("mask")
+    )
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"xent": loss}
+
+
+def rwkv_prefill(params, cfg, batch, state):
+    x = _embed(params, cfg, batch["tokens"])
+    x, new_state = _stack_forward(params, cfg, x, state, "prefill")
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, new_state
+
+
+def rwkv_decode_step(params, cfg, state, batch, step):
+    del step  # recurrent state is position-free
+    x = _embed(params, cfg, batch["tokens"])
+    x, new_state = _stack_forward(params, cfg, x, state, "decode")
+    logits = _head(params, cfg, x)
+    return logits, new_state

@@ -1,0 +1,104 @@
+"""Spectral long-convolution token mixer -- the coded-FFT model integration.
+
+An FFT-based global-convolution layer (FNO/Hyena-style): each channel owns
+a causal long filter h_d; mixing is ``y[:, :, d] = (x[:, :, d] * h_d)[:S]``
+computed as ``irfft(rfft(pad(x)) . rfft(pad(h)))``.  This is the one place
+in the LM zoo whose hot loop IS a Fourier transform, so it is where the
+paper's technique applies to the assigned architectures: with
+``use_coded=True`` the sequence-axis FFT runs through the coded plan
+(``CodedFFT`` / ``DistributedCodedFFT``), inheriting straggler tolerance
+for free by the linearity argument of §III-B.
+
+The mixer is insertable in the SSM/hybrid families (DESIGN.md §4); at
+500k+ context the O(S log S) conv replaces the O(S·W) window scan.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.coded_fft import CodedFFT
+from repro.distributed.sharding import lshard
+from repro.models.params import Spec
+
+__all__ = ["spectral_specs", "spectral_apply", "spectral_apply_coded",
+           "decaying_filter_init"]
+
+
+def spectral_specs(d_model: int, filter_len: int, dtype=jnp.float32) -> dict:
+    """Per-channel causal filters (d_model, filter_len) + skip gain."""
+    return {
+        "h": Spec((d_model, filter_len), ("p_fsdp", None), init="zeros", dtype=dtype),
+        "decay": Spec((d_model,), ("p_fsdp",), init="zeros", dtype=dtype),
+        "skip": Spec((d_model,), ("p_fsdp",), init="ones", dtype=dtype),
+    }
+
+
+def decaying_filter_init(key: jax.Array, d_model: int, filter_len: int,
+                         dtype=jnp.float32) -> dict:
+    """Sensible materialized init: smooth exponentially-decaying filters."""
+    k1, k2 = jax.random.split(key)
+    t = jnp.arange(filter_len, dtype=jnp.float32)
+    rates = jax.random.uniform(k1, (d_model, 1), minval=0.001, maxval=0.1)
+    base = jnp.exp(-rates * t) * jax.random.normal(k2, (d_model, filter_len)) * 0.02
+    return {
+        "h": base.astype(dtype),
+        "decay": jnp.zeros((d_model,), dtype),
+        "skip": jnp.ones((d_model,), dtype),
+    }
+
+
+def _effective_filter(p: dict, filter_len: int) -> jax.Array:
+    """Learned filter modulated by a learned per-channel decay envelope."""
+    t = jnp.arange(filter_len, dtype=jnp.float32)
+    env = jnp.exp(-jax.nn.softplus(p["decay"])[:, None] * t[None, :])
+    return p["h"].astype(jnp.float32) * env
+
+
+def spectral_apply(p: dict, x: jax.Array, *,
+                   fft_fn=None) -> jax.Array:
+    """Causal FFT long-conv.  x: (B, S, D) -> (B, S, D).
+
+    ``fft_fn``: optional replacement for the sequence FFT pair -- signature
+    ``fft_fn(x_complex) -> X`` operating along the last axis (the coded
+    plan's worker path plugs in here).
+    """
+    b, s, d = x.shape
+    h = _effective_filter(p, p["h"].shape[-1])          # (D, F)
+    f = h.shape[-1]
+    n = 1
+    while n < s + f:                                     # linear (causal) conv
+        n *= 2
+    xf = jnp.fft.rfft(x.astype(jnp.float32), n=n, axis=1)        # (B, n/2+1, D)
+    hf = jnp.fft.rfft(h, n=n, axis=-1).T[None]                   # (1, n/2+1, D)
+    y = jnp.fft.irfft(xf * hf, n=n, axis=1)[:, :s]
+    y = y + x.astype(jnp.float32) * p["skip"].astype(jnp.float32)
+    return lshard(y.astype(x.dtype), "batch", "seq", "embed")
+
+
+def spectral_apply_coded(p: dict, x: jax.Array, plan: CodedFFT,
+                         mask: Optional[jax.Array] = None) -> jax.Array:
+    """Same mixer, but the forward sequence FFT runs under the coded plan.
+
+    The conv theorem needs a full complex FFT of length ``plan.s``; each
+    (batch, channel) row is one transform request.  Demonstrates Theorem 5
+    territory (many inputs) at model scale; small shapes only on CPU.
+    """
+    b, s, d = x.shape
+    h = _effective_filter(p, p["h"].shape[-1])
+    n = plan.s
+    assert n >= s + h.shape[-1], "plan.s must cover linear conv length"
+
+    rows = jnp.moveaxis(x.astype(jnp.complex64), 1, -1).reshape(b * d, s)
+    rows = jnp.pad(rows, ((0, 0), (0, n - s)))
+    xf = jax.vmap(lambda r: plan.run(r, mask=mask))(rows)        # coded FFT
+    xf = xf.reshape(b, d, n)
+    hf = jnp.fft.fft(h, n=n, axis=-1)[None]                      # (1, D, n)
+    y = jnp.fft.ifft(xf * hf, axis=-1).real[..., :s]             # (B, D, S)
+    y = jnp.moveaxis(y, 1, -1)
+    y = y + x.astype(jnp.float32) * p["skip"].astype(jnp.float32)
+    return y.astype(x.dtype)

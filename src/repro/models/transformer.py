@@ -1,0 +1,455 @@
+"""Decoder-only transformer LM (dense / MoE / prefix-LM VLM families).
+
+Design points that matter at 512-device scale:
+
+* layers are scanned over *stacked* params (HLO size independent of depth --
+  critical for GSPMD compile times on the production mesh);
+* heterogeneous depth patterns (Llama-4's alternating dense/MoE) scan over
+  "superblocks" whose slots hold one stacked param tree each;
+* attention is the chunked flash-style implementation (O(S*chunk) memory);
+* losses never materialize unsharded logits (models/losses.py);
+* KV caches support full, sliding-window (ring) and int8-quantized layouts.
+
+Everything is a pure function over an explicit param pytree built from
+``Spec`` descriptors (models/params.py) -- one source of truth for init and
+for the sharding plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import lshard
+from repro.models import moe as moe_lib
+from repro.models.attention import (
+    QuantKV,
+    chunked_attention,
+    quantize_kv,
+    ring_positions,
+)
+from repro.models.layers import apply_rotary, layer_norm, mlp_apply, rms_norm, rotary_cos_sin
+from repro.models.losses import sharded_xent_loss
+from repro.models.params import Spec
+
+__all__ = [
+    "transformer_specs",
+    "embed_tokens",
+    "decoder_hidden",
+    "unembed_matrix",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "init_kv_cache",
+    "attn_apply",
+    "norm_apply",
+    "stack_specs",
+    "ATTN_CHUNK",
+]
+
+ATTN_CHUNK = 1024
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+def _attn_specs(cfg: ArchConfig, dtype) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sp = {
+        "wq": Spec((d, h, hd), ("p_fsdp", "p_heads", None), dtype=dtype, fan_in=d),
+        "wk": Spec((d, kh, hd), ("p_fsdp", "p_kv", None), dtype=dtype, fan_in=d),
+        "wv": Spec((d, kh, hd), ("p_fsdp", "p_kv", None), dtype=dtype, fan_in=d),
+        "wo": Spec((h, hd, d), ("p_heads", None, "p_fsdp"), dtype=dtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = Spec((h, hd), ("p_heads", None), init="zeros", dtype=dtype)
+        sp["bk"] = Spec((kh, hd), ("p_kv", None), init="zeros", dtype=dtype)
+        sp["bv"] = Spec((kh, hd), ("p_kv", None), init="zeros", dtype=dtype)
+    return sp
+
+
+def _mlp_specs(cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {
+            "wi": Spec((d, f), ("p_fsdp", "p_mlp"), dtype=dtype, fan_in=d),
+            "wg": Spec((d, f), ("p_fsdp", "p_mlp"), dtype=dtype, fan_in=d),
+            "wo": Spec((f, d), ("p_mlp", "p_fsdp"), dtype=dtype, fan_in=f),
+        }
+    return {
+        "wi": Spec((d, f), ("p_fsdp", "p_mlp"), dtype=dtype, fan_in=d),
+        "wo": Spec((f, d), ("p_mlp", "p_fsdp"), dtype=dtype, fan_in=f),
+    }
+
+
+def _norm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "ln":
+        return {"w": Spec((d,), (None,), init="ones", dtype=jnp.float32),
+                "b": Spec((d,), (None,), init="zeros", dtype=jnp.float32)}
+    return {"w": Spec((d,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def norm_apply(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.norm == "ln":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"], zero_centered=True)
+
+
+def _layer_specs(cfg: ArchConfig, is_moe: bool, dtype) -> dict:
+    sp = {
+        "ln1": _norm_specs(cfg),
+        "attn": _attn_specs(cfg, dtype),
+        "ln2": _norm_specs(cfg),
+    }
+    if is_moe:
+        sp["moe"] = moe_lib.moe_layer_specs(cfg.d_model, cfg.moe, dtype)
+    else:
+        sp["mlp"] = _mlp_specs(cfg, dtype)
+    return sp
+
+
+def stack_specs(tree, n: int):
+    """Add a leading stacked-layers axis to every Spec in the tree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.fan_in, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def _block_structure(cfg: ArchConfig) -> tuple[tuple[bool, ...], int]:
+    """(slot_is_moe pattern, n_repeats) for superblock scanning."""
+    flags = cfg.moe_layer_flags
+    if cfg.moe is None:
+        return (False,), cfg.n_layers
+    step = cfg.moe.interleave_step
+    pattern = flags[:step]
+    assert flags == pattern * (cfg.n_layers // step), "non-periodic MoE pattern"
+    return pattern, cfg.n_layers // step
+
+
+def transformer_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    pattern, repeats = _block_structure(cfg)
+    sp: dict[str, Any] = {
+        "embed": Spec((cfg.vocab_size, cfg.d_model), ("p_vocab", "p_fsdp"),
+                      init="embed", dtype=dtype),
+        "final_norm": _norm_specs(cfg),
+        "blocks": [
+            stack_specs(_layer_specs(cfg, is_moe, dtype), repeats)
+            for is_moe in pattern
+        ],
+    }
+    if not cfg.tie_embeddings:
+        sp["unembed"] = Spec((cfg.d_model, cfg.vocab_size), ("p_fsdp", "p_vocab"),
+                             dtype=dtype, fan_in=cfg.d_model)
+    return sp
+
+
+# --------------------------------------------------------------------------
+# attention with cache handling
+# --------------------------------------------------------------------------
+def _write_full_cache(cache_kv, new, start):
+    """Insert (B, S, KH, hd) at position ``start`` along the seq axis."""
+    if isinstance(cache_kv, QuantKV):
+        qn = quantize_kv(new)
+        return QuantKV(
+            q=jax.lax.dynamic_update_slice_in_dim(cache_kv.q, qn.q, start, axis=1),
+            scale=jax.lax.dynamic_update_slice_in_dim(cache_kv.scale, qn.scale, start, axis=1),
+        )
+    return jax.lax.dynamic_update_slice_in_dim(cache_kv, new.astype(cache_kv.dtype), start, axis=1)
+
+
+def _scatter_cache(cache_kv, new, idx):
+    """Scatter (B, S, KH, hd) rows into slots ``idx`` (ring prefill)."""
+    if isinstance(cache_kv, QuantKV):
+        qn = quantize_kv(new)
+        return QuantKV(
+            q=cache_kv.q.at[:, idx].set(qn.q),
+            scale=cache_kv.scale.at[:, idx].set(qn.scale),
+        )
+    return cache_kv.at[:, idx].set(new.astype(cache_kv.dtype))
+
+
+def attn_apply(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    mode: str,                      # train | prefill | decode
+    cache: Optional[dict] = None,   # {"k": ..., "v": ...} for this layer
+    step: Optional[jax.Array] = None,
+    prefix_len: Optional[int] = None,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = lshard(q, "batch", "seq", "heads", "head_dim")
+    k = lshard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = lshard(v, "batch", "seq", "kv_heads", "head_dim")
+    if use_rope:
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+
+    if mode in ("train", "prefill"):
+        out = chunked_attention(
+            q, k, v,
+            causal=True,
+            window=window,
+            prefix_len=prefix_len,  # python int or None (static for flash vjp)
+            chunk=ATTN_CHUNK,
+            logit_cap=cfg.logit_cap,
+        )
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            c_len = jax.tree.leaves(cache["k"])[0].shape[1]
+            if c_len >= s:
+                new_cache = {
+                    "k": _write_full_cache(cache["k"], k, 0),
+                    "v": _write_full_cache(cache["v"], v, 0),
+                }
+            else:  # sliding-window ring cache: keep the last c_len tokens
+                idx = jnp.arange(s - c_len, s) % c_len
+                new_cache = {
+                    "k": _scatter_cache(cache["k"], k[:, s - c_len:], idx),
+                    "v": _scatter_cache(cache["v"], v[:, s - c_len:], idx),
+                }
+    elif mode == "decode":
+        assert cache is not None and step is not None
+        c_len = jax.tree.leaves(cache["k"])[0].shape[1]
+        ring = window is not None and c_len == window
+        slot = jnp.mod(step, c_len) if ring else step
+        kc = _write_full_cache(cache["k"], k, slot)
+        vc = _write_full_cache(cache["v"], v, slot)
+        kv_pos = ring_positions(step + 1, c_len) if ring else jnp.arange(c_len)
+        out = chunked_attention(
+            q, kc, vc,
+            causal=True,
+            window=window,
+            prefix_len=prefix_len,  # python int or None (static for flash vjp)
+            q_positions=jnp.reshape(step, (1,)),
+            kv_positions=kv_pos,
+            chunk=min(2048, c_len),
+            logit_cap=cfg.logit_cap,
+        )
+        new_cache = {"k": kc, "v": vc}
+    else:
+        raise ValueError(mode)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return lshard(y, "batch", "seq", "embed"), new_cache
+
+
+# --------------------------------------------------------------------------
+# decoder stack
+# --------------------------------------------------------------------------
+def _remat_policy(cfg: ArchConfig):
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    if cfg.remat == "none":
+        return jax.checkpoint_policies.everything_saveable
+    return None  # full recompute
+
+
+def _layer_apply(p, cfg, x, cos, sin, *, is_moe, mode, cache, step, prefix_len):
+    resid_scale = (
+        1.0 if cfg.depth_scale is None else cfg.depth_scale / (cfg.n_layers ** 0.5)
+    )
+    h, new_cache = attn_apply(
+        p["attn"], cfg, norm_apply(p["ln1"], cfg, x), cos, sin,
+        mode=mode, cache=cache, step=step, prefix_len=prefix_len,
+        window=cfg.attn_window,
+    )
+    x = x + h * resid_scale
+    hn = norm_apply(p["ln2"], cfg, x)
+    if is_moe:
+        style = "sigmoid" if cfg.moe.top_k == 1 else "softmax"
+        h2, aux = moe_lib.moe_ffn(hn, p["moe"], cfg.moe, router_style=style)
+    else:
+        h2 = mlp_apply(hn, p["mlp"], cfg.mlp_variant)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + h2 * resid_scale
+    return x, new_cache, aux
+
+
+def decoder_hidden(
+    params: dict,
+    cfg: ArchConfig,
+    embeds: jax.Array,              # (B, S, D)
+    *,
+    mode: str,
+    cache: Optional[list] = None,   # per-slot {"k": (R, B, C, KH, hd), ...}
+    step: Optional[jax.Array] = None,
+    prefix_len: Optional[int] = None,
+    positions: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Optional[list], jax.Array]:
+    """Run the scanned decoder stack.  Returns (hidden, new_cache, aux_sum)."""
+    pattern, repeats = _block_structure(cfg)
+    if positions is None:
+        if mode == "decode":
+            positions = jnp.reshape(step, (1,))
+        else:
+            positions = jnp.arange(embeds.shape[1])
+    cos, sin = rotary_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+    x = embeds
+    new_caches: list = []
+    policy = _remat_policy(cfg)
+
+    def block_step(xc, xs):
+        xx, aux_sum = xc
+        slot_params, slot_caches = xs
+        new_slot_caches = []
+        for si, is_moe in enumerate(pattern):
+            xx, nc, aux = _layer_apply(
+                slot_params[si], cfg, xx, cos, sin,
+                is_moe=is_moe, mode=mode,
+                cache=None if slot_caches is None else slot_caches[si],
+                step=step, prefix_len=prefix_len,
+            )
+            new_slot_caches.append(nc)
+        if any(c is not None for c in new_slot_caches):
+            out_caches = new_slot_caches
+        else:
+            out_caches = None
+        return (xx, aux_sum + aux), out_caches
+
+    if cfg.remat != "none":
+        block_step = jax.checkpoint(block_step, policy=policy)
+
+    slot_caches = cache if cache is not None else None
+    if slot_caches is None:
+        (x, aux_sum), _ = jax.lax.scan(
+            lambda c, ps: block_step(c, (ps, None)),
+            (x, jnp.zeros((), jnp.float32)),
+            params["blocks"],
+        )
+        new_cache = None
+    else:
+        (x, aux_sum), new_cache = jax.lax.scan(
+            block_step, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], slot_caches),
+        )
+    x = norm_apply(params["final_norm"], cfg, x)
+    return x, new_cache, aux_sum
+
+
+# --------------------------------------------------------------------------
+# embeddings / heads
+# --------------------------------------------------------------------------
+def embed_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    emb = emb * jnp.asarray(cfg.emb_multiplier, emb.dtype)
+    return lshard(emb, "batch", "seq", "embed")
+
+
+def unembed_matrix(params: dict, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+# --------------------------------------------------------------------------
+# task heads: loss / prefill / decode
+# --------------------------------------------------------------------------
+def _prep_embeds(params, cfg, batch) -> tuple[jax.Array, Optional[int], jax.Array]:
+    """Token (+ optional multimodal prefix) embeddings.
+
+    Returns (embeds, prefix_len, label_mask_extra) where labels at prefix
+    positions are masked out of the loss.
+    """
+    tok_emb = embed_tokens(params, cfg, batch["tokens"])
+    if cfg.num_prefix_tokens and "patches" in batch:
+        prefix = batch["patches"].astype(tok_emb.dtype)
+        prefix = lshard(prefix, "batch", "seq", "embed")
+        embeds = jnp.concatenate([prefix, tok_emb], axis=1)
+        return embeds, cfg.num_prefix_tokens, None
+    return tok_emb, None, None
+
+
+def lm_loss(params: dict, cfg: ArchConfig, batch: dict) -> tuple[jax.Array, dict]:
+    embeds, prefix_len, _ = _prep_embeds(params, cfg, batch)
+    hidden, _, aux = decoder_hidden(
+        params, cfg, embeds, mode="train", prefix_len=prefix_len
+    )
+    if prefix_len:
+        hidden = hidden[:, prefix_len:]
+    loss_sum, count = sharded_xent_loss(
+        hidden,
+        unembed_matrix(params, cfg),
+        batch["labels"],
+        mask=batch.get("mask"),
+        logit_divisor=cfg.logit_divisor,
+    )
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss, {"xent": loss_sum / jnp.maximum(count, 1.0), "aux": aux}
+
+
+def init_kv_cache(
+    cfg: ArchConfig,
+    batch_size: int,
+    cache_len: int,
+    *,
+    quantized: bool = False,
+    dtype=jnp.bfloat16,
+) -> list:
+    """Zero-initialized per-slot stacked KV cache for the scanned stack."""
+    pattern, repeats = _block_structure(cfg)
+    c_len = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def one():
+        shape = (repeats, batch_size, c_len, kh, hd)
+        if quantized:
+            return QuantKV(
+                q=jnp.zeros(shape, jnp.int8),
+                scale=jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            )
+        return jnp.zeros(shape, dtype)
+
+    return [{"k": one(), "v": one()} for _ in pattern]
+
+
+def lm_prefill(params: dict, cfg: ArchConfig, batch: dict, cache: list):
+    """Prefill: returns (last-token logits, filled cache)."""
+    embeds, prefix_len, _ = _prep_embeds(params, cfg, batch)
+    hidden, new_cache, _ = decoder_hidden(
+        params, cfg, embeds, mode="prefill", cache=cache, prefix_len=prefix_len
+    )
+    last = hidden[:, -1:]
+    logits = jnp.einsum("bsd,dv->bsv", last.astype(jnp.bfloat16),
+                        unembed_matrix(params, cfg).astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    logits = logits / cfg.logit_divisor
+    return lshard(logits, "batch", None, "vocab"), new_cache
+
+
+def lm_decode_step(params: dict, cfg: ArchConfig, cache: list, batch: dict,
+                   step: jax.Array):
+    """One decode step: batch["tokens"] is (B, 1).  Returns (logits, cache)."""
+    embeds = embed_tokens(params, cfg, batch["tokens"])
+    hidden, new_cache, _ = decoder_hidden(
+        params, cfg, embeds, mode="decode", cache=cache, step=step,
+        prefix_len=cfg.num_prefix_tokens or None,
+    )
+    logits = jnp.einsum("bsd,dv->bsv", hidden.astype(jnp.bfloat16),
+                        unembed_matrix(params, cfg).astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    logits = logits / cfg.logit_divisor
+    return lshard(logits, "batch", None, "vocab"), new_cache

@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWConfig, Optimizer, adamw
+from repro.optim.grad_utils import accumulate_grads, clip_by_global_norm, global_norm
+from repro.optim.schedules import constant, cosine, linear_warmup, wsd
+
+__all__ = [
+    "AdamWConfig", "Optimizer", "adamw",
+    "accumulate_grads", "clip_by_global_norm", "global_norm",
+    "constant", "cosine", "linear_warmup", "wsd",
+]

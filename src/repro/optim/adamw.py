@@ -1,0 +1,149 @@
+"""Self-contained AdamW with optional int8 block-quantized moments.
+
+No optax in this environment, so the optimizer is a (init, update) pair
+over arbitrary param pytrees.  The int8 mode stores both Adam moments as
+int8 blocks with one f32 scale per block (block=256 on the flattened
+tensor), cutting optimizer state from 8 to ~2.03 bytes/param -- this is
+what lets dbrx-132b / llama4-400b train_4k fit 256 chips x 16 GB.
+
+Quantization is *stochastic-free deterministic* (round-to-nearest) with the
+second moment stored as sqrt(v) to tame its dynamic range; tests bound the
+drift vs exact AdamW.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedules import Schedule, constant
+
+__all__ = ["AdamWConfig", "Optimizer", "adamw", "QuantMoment",
+           "quantize_moment", "dequantize_moment"]
+
+_BLOCK = 256
+
+
+class QuantMoment(NamedTuple):
+    """Param-shaped int8 payload + per-block f32 scales.
+
+    ``q`` has EXACTLY the parameter's shape (so it inherits the parameter's
+    sharding with zero resharding -- a flat block layout forces GSPMD to
+    all-gather giant moments through reshapes; on llama4-400b that
+    materialized 64 GB unsharded expert moments per step).  Blocks run
+    along the last axis with size = largest power-of-two divisor <= 256;
+    ``scale`` has shape ``lead + (last/block,)``.
+    """
+
+    q: jax.Array          # int8, param shape
+    scale: jax.Array      # f32, lead + (nblk,)
+
+
+def moment_block(last: int) -> int:
+    b = 1
+    while b < _BLOCK and last % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def quantize_moment(x: jax.Array) -> QuantMoment:
+    x = x.astype(jnp.float32)
+    if x.ndim == 0:
+        x = x.reshape(1)
+    last = x.shape[-1]
+    b = moment_block(last)
+    lead = x.shape[:-1]
+    xb = x.reshape(lead + (last // b, b))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xb / safe[..., None]), -127, 127).astype(jnp.int8)
+    return QuantMoment(q=q.reshape(x.shape), scale=scale)
+
+
+def dequantize_moment(qm: QuantMoment, shape: tuple[int, ...]) -> jax.Array:
+    work = shape if shape else (1,)
+    last = work[-1]
+    nblk = qm.scale.shape[-1]
+    b = last // nblk
+    xb = qm.q.reshape(work[:-1] + (nblk, b)).astype(jnp.float32)
+    return (xb * qm.scale[..., None]).reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantized_state: bool = False   # int8 block-quantized moments
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair.  ``update`` returns (new_params, new_state)."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    config: AdamWConfig
+
+
+def _leaf_init(p: jax.Array, quantized: bool):
+    if quantized:
+        z = jnp.zeros(p.shape, jnp.float32)
+        return {"m": quantize_moment(z), "v": quantize_moment(z)}
+    return {"m": jnp.zeros(p.shape, jnp.float32),
+            "v": jnp.zeros(p.shape, jnp.float32)}
+
+
+def _leaf_update(p, g, st, lr, cfg: AdamWConfig, t):
+    g = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    if cfg.quantized_state:
+        m = dequantize_moment(st["m"], p.shape)
+        # v is stored as sqrt(v) for dynamic range; square on load.
+        v = jnp.square(dequantize_moment(st["v"], p.shape))
+    else:
+        m, v = st["m"], st["v"]
+    m = cfg.b1 * m + (1.0 - cfg.b1) * g
+    v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+    # bias correction
+    mhat = m / (1.0 - cfg.b1 ** t)
+    vhat = v / (1.0 - cfg.b2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf
+    new_p = (pf - lr * upd).astype(p.dtype)
+    if cfg.quantized_state:
+        new_st = {"m": quantize_moment(m), "v": quantize_moment(jnp.sqrt(v))}
+    else:
+        new_st = {"m": m, "v": v}
+    return new_p, new_st
+
+
+def adamw(lr: Schedule | float = 1e-3, config: Optional[AdamWConfig] = None) -> Optimizer:
+    cfg = config or AdamWConfig()
+    lr_fn = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: _leaf_init(p, cfg.quantized_state), params),
+        }
+
+    def update(params, grads, state, step=None):
+        t = state["count"] + 1
+        lr_t = lr_fn(t if step is None else step)
+        tf = t.astype(jnp.float32)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["mu"])
+        out = [_leaf_update(p, g, s, lr_t, cfg, tf)
+               for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        return new_params, {"count": t, "mu": new_mu}
+
+    return Optimizer(init=init, update=update, config=cfg)

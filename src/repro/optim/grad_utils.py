@@ -1,0 +1,66 @@
+"""Gradient utilities: global-norm clipping and microbatch accumulation."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["global_norm", "clip_by_global_norm", "accumulate_grads"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    """Scale the whole gradient pytree so its global norm is <= max_norm."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def accumulate_grads(
+    loss_fn: Callable[[Any, dict], tuple[jax.Array, dict]],
+    params,
+    batch: dict,
+    n_micro: int,
+):
+    """Mean loss/grads over ``n_micro`` microbatches via ``lax.scan``.
+
+    ``batch`` leaves have leading dim ``global_batch``; they are reshaped to
+    ``(n_micro, global_batch // n_micro, ...)`` and scanned, so peak
+    activation memory is one microbatch.  n_micro=1 short-circuits to a
+    single grad call.
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if n_micro == 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+
+    def body(carry, mb):
+        loss_sum, grad_sum = carry
+        (loss, metrics), grads = grad_fn(params, mb)
+        grad_sum = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), grad_sum, grads
+        )
+        return (loss_sum + loss, grad_sum), metrics
+
+    zero_grads = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    (loss_sum, grad_sum), metrics = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_grads), micro
+    )
+    grads = jax.tree.map(lambda g: (g / n_micro), grad_sum)
+    last_metrics = jax.tree.map(lambda x: x[-1], metrics)
+    return loss_sum / n_micro, last_metrics, grads

@@ -1,0 +1,123 @@
+"""MDS-coded gradient aggregation -- straggler-tolerant data parallelism.
+
+Beyond-paper extension (clearly labeled in DESIGN.md §4): the paper's MDS
+machinery (core/mds.py) is reapplied to the *gradient sum*, in the spirit
+of gradient coding [Tandon et al., cited as ref 14 of the paper].
+
+Setting: the global batch is split into ``m`` partitions; ``N >= m``
+workers each compute the gradient of a *coded linear combination* of
+partitions (equivalently: a weighted sum of per-partition gradients --
+linearity of the gradient in the per-example loss sum makes coding commute
+with differentiation, exactly the property the paper exploits for the
+DFT).  The aggregator recovers the full-batch gradient sum from ANY ``m``
+worker results, so up to ``N - m`` stragglers are tolerated per step with
+zero information loss -- compare replication, which needs specific
+workers to survive.
+
+Because each worker must *compute* the gradients of every partition it
+covers, we use the standard cyclic-support construction: worker k covers
+partitions {k, k+1, ..., k+d-1 (mod m)} with d = N - m + 1 ("compute
+redundancy" d).  The code below derives the coded weights from the
+complex-RS generator restricted to each worker's support via the
+closed-form construction of Tandon et al. (B = fractional repetition-free
+cyclic code), specialised to real weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CyclicGradientCode", "coded_weights"]
+
+
+def coded_weights(n_workers: int, n_stragglers: int) -> np.ndarray:
+    """(N, N) cyclic coding matrix B (Tandon et al., Algorithm 2 ``B_cyc``).
+
+    Row k has support {k, ..., k + s} (mod N), s = n_stragglers.  Pick a
+    random H in R^{s x N} with H @ 1 = 0; choose each row b_k in null(H)
+    with the prescribed support (solve the s x s system pinning
+    b_k[k] = 1).  Then every row lies in the (N-s)-dim null(H), which
+    contains the all-ones vector, and any N-s rows span it generically --
+    so EVERY (N-s)-subset of workers can linearly combine to 1^T and
+    recover the full gradient sum.
+    """
+    n, s = n_workers, n_stragglers
+    if s == 0:
+        return np.eye(n)
+    rng = np.random.default_rng(0)
+    # H: s x n random Gaussian with columns summing to zero per row
+    H = rng.standard_normal((s, n))
+    H[:, -1] = -H[:, :-1].sum(axis=1)          # H @ 1 = 0
+    B = np.zeros((n, n))
+    for k in range(n):
+        support = [(k + j) % n for j in range(s + 1)]
+        rest = support[1:]
+        # b[k]=1; solve H[:, rest] y = -H[:, k]  (s x s, generically invertible)
+        y = np.linalg.solve(H[:, rest], -H[:, k])
+        B[k, k] = 1.0
+        B[k, rest] = y
+    return B
+
+
+@dataclasses.dataclass(frozen=True)
+class CyclicGradientCode:
+    """Coded gradient aggregation plan: N workers, tolerate s stragglers."""
+
+    n_workers: int
+    n_stragglers: int
+
+    def __post_init__(self):
+        if not 0 <= self.n_stragglers < self.n_workers:
+            raise ValueError("need 0 <= s < N")
+
+    @property
+    def recovery_threshold(self) -> int:
+        return self.n_workers - self.n_stragglers
+
+    @property
+    def matrix(self) -> np.ndarray:
+        return coded_weights(self.n_workers, self.n_stragglers)
+
+    def worker_partitions(self, k: int) -> list[int]:
+        """Partitions worker k must run (its coded support)."""
+        d = self.n_stragglers + 1
+        return [(k + j) % self.n_workers for j in range(d)]
+
+    def encode_worker_grad(self, k: int, partition_grads: list) -> jax.Array:
+        """Worker k's message: sum_j B[k,j] * g_j over its support."""
+        B = self.matrix
+        out = None
+        for j in self.worker_partitions(k):
+            term = jax.tree.map(lambda g: B[k, j] * g.astype(jnp.float32),
+                                partition_grads[j])
+            out = term if out is None else jax.tree.map(jnp.add, out, term)
+        return out
+
+    def decode_vector(self, subset: np.ndarray) -> np.ndarray:
+        """a with a^T B[subset] = 1^T: the aggregation weights for ``subset``."""
+        B = self.matrix[np.asarray(subset)]
+        ones = np.ones(self.n_workers)
+        a, res, rank, _ = np.linalg.lstsq(B.T, ones, rcond=None)
+        if res.size and res[0] > 1e-12 * self.n_workers:
+            raise np.linalg.LinAlgError(
+                f"subset {subset} not decodable (residual {res[0]:.2e})")
+        # verify exactly (lstsq silently accepts rank-deficient fits)
+        if not np.allclose(a @ B, ones, atol=1e-6):
+            raise np.linalg.LinAlgError(f"subset {subset} not decodable")
+        return a
+
+    def decode(self, subset: np.ndarray, worker_msgs: list):
+        """Full-batch gradient sum from any ``recovery_threshold`` messages.
+
+        ``worker_msgs[i]`` is the message of worker ``subset[i]``.
+        """
+        a = self.decode_vector(subset)
+        out = None
+        for w, msg in zip(a, worker_msgs):
+            term = jax.tree.map(lambda g: w * g, msg)
+            out = term if out is None else jax.tree.map(jnp.add, out, term)
+        return out

@@ -1,0 +1,63 @@
+"""Learning-rate schedules.
+
+WSD (warmup-stable-decay) is required verbatim by the MiniCPM config
+[arXiv:2404.06395]; cosine is the default for everything else.  All
+schedules are pure ``step -> lr`` functions of a traced int32 step, so they
+live inside the jitted train step.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup", "cosine", "wsd", "Schedule"]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(base: Schedule, warmup_steps: int) -> Schedule:
+    def fn(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        return base(step) * warm
+
+    return fn
+
+
+def cosine(peak_lr: float, total_steps: int, warmup_steps: int = 0,
+           final_frac: float = 0.1) -> Schedule:
+    """Linear warmup then cosine decay to ``final_frac * peak_lr``."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(peak_lr, jnp.float32) * warm * cos
+
+    return fn
+
+
+def wsd(peak_lr: float, total_steps: int, warmup_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM §4): warmup, flat plateau, then a short
+    exponential decay over the last ``decay_frac`` of training down to
+    ``final_frac * peak_lr``."""
+
+    decay_steps = max(int(total_steps * decay_frac), 1)
+    stable_end = total_steps - decay_steps
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+        t = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+        # exponential anneal: lr * final_frac ** t  (t in [0, 1])
+        decay = jnp.power(jnp.asarray(final_frac, jnp.float32), t)
+        return jnp.asarray(peak_lr, jnp.float32) * warm * decay
+
+    return fn

@@ -1,0 +1,6 @@
+from repro.serving.engine import EngineConfig, GenerationEngine
+from repro.serving.fft_service import FFTService, FFTServiceConfig, ServiceStats
+from repro.serving.serve_step import make_serve_fns, sample_token
+
+__all__ = ["EngineConfig", "GenerationEngine", "FFTService",
+           "FFTServiceConfig", "ServiceStats", "make_serve_fns", "sample_token"]

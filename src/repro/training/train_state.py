@@ -1,0 +1,102 @@
+"""Training state: params + optimizer state + step, with the sharding plan
+and abstract (ShapeDtypeStruct) mirrors the dry-run lowers against."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import Spec, abstract_params, param_pspecs
+from repro.optim.adamw import Optimizer, QuantMoment, quantize_moment
+
+__all__ = ["TrainState", "init_train_state", "abstract_train_state",
+           "train_state_pspecs"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: Any
+    params: Any
+    opt_state: Any
+
+    def tree(self) -> dict:
+        return {"step": self.step, "params": self.params, "opt_state": self.opt_state}
+
+    @classmethod
+    def from_tree(cls, t: dict) -> "TrainState":
+        return cls(step=t["step"], params=t["params"], opt_state=t["opt_state"])
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.step, s.params, s.opt_state), None),
+    lambda _, c: TrainState(step=c[0], params=c[1], opt_state=c[2]),
+)
+
+
+def init_train_state(specs, optimizer: Optimizer, key: jax.Array) -> TrainState:
+    from repro.models.params import init_params
+
+    params = init_params(specs, key)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=optimizer.init(params))
+
+
+def _moment_abstract(p: jax.ShapeDtypeStruct, quantized: bool):
+    from repro.optim.adamw import moment_block
+
+    if not quantized:
+        return {"m": jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                "v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+    work = p.shape if p.shape else (1,)
+    b = moment_block(work[-1])
+    qm = lambda: QuantMoment(
+        q=jax.ShapeDtypeStruct(work, jnp.int8),
+        scale=jax.ShapeDtypeStruct(work[:-1] + (work[-1] // b,), jnp.float32))
+    return {"m": qm(), "v": qm()}
+
+
+def abstract_train_state(specs, optimizer: Optimizer) -> TrainState:
+    """ShapeDtypeStruct mirror of a fresh TrainState (no allocation)."""
+    aparams = abstract_params(specs)
+    quant = optimizer.config.quantized_state
+    mu = jax.tree.map(lambda p: _moment_abstract(p, quant), aparams,
+                      is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=aparams,
+        opt_state={"count": jax.ShapeDtypeStruct((), jnp.int32), "mu": mu},
+    )
+
+
+def _moment_pspec(spec: Spec, ps: P, quantized: bool, mesh=None):
+    if not quantized:
+        return {"m": ps, "v": ps}
+    # Param-shaped int8 q: EXACTLY the param's sharding (no resharding in
+    # the update).  Scales: same lead axes, block axis replicated.
+    ndim = max(len(spec.shape), 1)
+    entries = list(ps) + [None] * (ndim - len(ps))
+    scale_spec = P(*entries[:-1], None)
+    return {"m": QuantMoment(q=ps, scale=scale_spec),
+            "v": QuantMoment(q=ps, scale=scale_spec)}
+
+
+def train_state_pspecs(specs, optimizer: Optimizer, rules=None, mesh=None) -> TrainState:
+    """PartitionSpec tree mirroring TrainState (feeds jit in/out_shardings)."""
+    pspecs = param_pspecs(specs, rules)
+    quant = optimizer.config.quantized_state
+
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, Spec))
+    flat_ps, treedef = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))
+    mu = treedef.unflatten([
+        _moment_pspec(s, ps, quant, mesh) for s, ps in zip(flat_specs, flat_ps)
+    ])
+    return TrainState(
+        step=P(),
+        params=pspecs,
+        opt_state={"count": P(), "mu": mu},
+    )

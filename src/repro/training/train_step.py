@@ -1,0 +1,41 @@
+"""The jitted training step: microbatched grads -> clip -> AdamW.
+
+``make_train_step`` closes over the model + optimizer and returns a pure
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+explicit in/out shardings (launch/train.py, launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_factory import BuiltModel
+from repro.optim.adamw import Optimizer
+from repro.optim.grad_utils import accumulate_grads, clip_by_global_norm
+from repro.training.train_state import TrainState
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(model: BuiltModel, optimizer: Optimizer, *,
+                    n_micro: int = 1, clip_norm: float = 1.0) -> Callable:
+    loss_fn = model.loss
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        loss, metrics, grads = accumulate_grads(
+            loss_fn, state.params, batch, n_micro)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(
+            state.params, grads, state.opt_state, state.step)
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt_state=new_opt)
+        out = {"loss": loss.astype(jnp.float32),
+               "grad_norm": gnorm.astype(jnp.float32)}
+        for k, v in (metrics or {}).items():
+            out[k] = jnp.asarray(v, jnp.float32)
+        return new_state, out
+
+    return train_step

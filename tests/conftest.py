@@ -1,0 +1,8 @@
+# NOTE: no XLA_FLAGS device-count override here on purpose — smoke tests and
+# benches must see exactly 1 CPU device.  Multi-device tests spawn a
+# subprocess that sets --xla_force_host_platform_device_count itself.
+import jax
+
+# Double precision is required for the complex-RS decode conditioning tests
+# and the Prony error locator; model code is dtype-explicit throughout.
+jax.config.update("jax_enable_x64", True)

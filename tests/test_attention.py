@@ -1,0 +1,171 @@
+"""Chunked attention vs a dense reference, across mask variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    QuantKV,
+    chunked_attention,
+    dequantize_kv,
+    quantize_kv,
+    ring_positions,
+)
+
+
+def _dense_reference(q, k, v, *, causal=True, window=None, prefix_len=None,
+                     q_positions=None, kv_positions=None, scale=None):
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if scale is None:
+        scale = d ** -0.5
+    if q_positions is None:
+        q_positions = np.arange(sq)
+    if kv_positions is None:
+        kv_positions = np.arange(skv)
+    kr = np.repeat(np.asarray(k, np.float64), g, axis=2)
+    vr = np.repeat(np.asarray(v, np.float64), g, axis=2)
+    qn = np.asarray(q, np.float64)
+    scores = np.einsum("bshd,bthd->bhst", qn, kr) * scale
+    allowed = (kv_positions[None, :] >= 0)
+    if causal:
+        allowed = allowed & (kv_positions[None, :] <= q_positions[:, None])
+    if window is not None:
+        allowed = allowed & (kv_positions[None, :] > q_positions[:, None] - window)
+    if prefix_len is not None:
+        allowed = allowed | ((kv_positions[None, :] < prefix_len) & (kv_positions[None, :] >= 0))
+    scores = np.where(allowed[None, None], scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bhst,bthd->bshd", p, vr)
+    return out
+
+
+def _rand_qkv(b=2, sq=16, skv=16, h=4, kh=2, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, skv, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, skv, kh, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_causal_matches_dense(chunk):
+    q, k, v = _rand_qkv()
+    got = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    want = _dense_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_bidirectional():
+    q, k, v = _rand_qkv(seed=1)
+    got = chunked_attention(q, k, v, causal=False, chunk=8)
+    want = _dense_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_sliding_window():
+    q, k, v = _rand_qkv(sq=32, skv=32, seed=2)
+    got = chunked_attention(q, k, v, causal=True, window=8, chunk=8)
+    want = _dense_reference(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_prefix_lm():
+    q, k, v = _rand_qkv(sq=24, skv=24, seed=3)
+    got = chunked_attention(q, k, v, causal=True, prefix_len=jnp.asarray(8), chunk=8)
+    want = _dense_reference(q, k, v, causal=True, prefix_len=8)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_mqa_grouping():
+    q, k, v = _rand_qkv(h=8, kh=1, seed=4)
+    got = chunked_attention(q, k, v, chunk=8)
+    want = _dense_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_non_divisible_chunk_padding():
+    q, k, v = _rand_qkv(sq=10, skv=10, seed=5)
+    got = chunked_attention(q, k, v, chunk=4)  # 10 % 4 != 0 -> padded
+    want = _dense_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_one_token_against_prefill():
+    """Decode (Sq=1 vs cache) must equal the last row of full prefill."""
+    b, s, h, kh, d = 2, 12, 4, 2, 8
+    q, k, v = _rand_qkv(b=b, sq=s, skv=s, h=h, kh=kh, d=d, seed=6)
+    full = chunked_attention(q, k, v, causal=True, chunk=4)
+    last = chunked_attention(
+        q[:, -1:], k, v, causal=True, chunk=4,
+        q_positions=jnp.asarray([s - 1]),
+    )
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0]), np.asarray(full[:, -1]), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_ring_buffer_positions():
+    # window 4, after 6 writes slots hold positions [4, 5, 2, 3]
+    got = np.asarray(ring_positions(jnp.asarray(6), 4))
+    np.testing.assert_array_equal(got, [4, 5, 2, 3])
+    # before any write: all invalid
+    got0 = np.asarray(ring_positions(jnp.asarray(0), 4))
+    np.testing.assert_array_equal(got0, [-1, -1, -1, -1])
+
+
+def test_ring_buffer_decode_matches_linear_cache():
+    """Windowed decode with a ring cache == decode with the full cache."""
+    b, h, kh, d, w = 1, 2, 1, 8, 4
+    t = 7  # current step: positions 0..6 written
+    rng = np.random.default_rng(7)
+    kfull = jnp.asarray(rng.normal(size=(b, t, kh, d)), jnp.float32)
+    vfull = jnp.asarray(rng.normal(size=(b, t, kh, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    want = chunked_attention(
+        q, kfull, vfull, causal=True, window=w, chunk=4,
+        q_positions=jnp.asarray([t - 1]),
+    )
+    # build the ring cache: slot i holds latest position == i (mod w)
+    kring = np.zeros((b, w, kh, d), np.float32)
+    vring = np.zeros((b, w, kh, d), np.float32)
+    for pos in range(t):
+        kring[:, pos % w] = np.asarray(kfull[:, pos])
+        vring[:, pos % w] = np.asarray(vfull[:, pos])
+    got = chunked_attention(
+        q, jnp.asarray(kring), jnp.asarray(vring), causal=True, window=w, chunk=4,
+        q_positions=jnp.asarray([t - 1]), kv_positions=ring_positions(jnp.asarray(t), w),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_int8_kv_quantization_roundtrip():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(2, 16, 2, 32)), jnp.float32)
+    qx = quantize_kv(x)
+    assert qx.q.dtype == jnp.int8
+    back = dequantize_kv(qx, jnp.float32)
+    rel = np.abs(np.asarray(back) - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 0.02
+
+
+def test_int8_kv_attention_close_to_fp():
+    q, k, v = _rand_qkv(sq=8, skv=32, seed=9)
+    want = chunked_attention(q, k, v, causal=False, chunk=8)
+    got = chunked_attention(q, quantize_kv(k), quantize_kv(v), causal=False, chunk=8)
+    err = np.abs(np.asarray(got) - np.asarray(want)).max()
+    assert err < 0.05
+
+
+def test_no_nan_with_fully_masked_rows():
+    """Query rows with zero visible keys must return 0, not NaN."""
+    q, k, v = _rand_qkv(sq=4, skv=8, seed=10)
+    got = chunked_attention(
+        q, k, v, causal=True, chunk=4,
+        q_positions=jnp.asarray([-1, -1, -1, -1]),  # nothing visible
+    )
+    assert not bool(jnp.isnan(got).any())
+    np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-6)

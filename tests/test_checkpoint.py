@@ -1,0 +1,76 @@
+"""Checkpoint store: atomicity, bf16 round-trip, GC, async writer."""
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                   "c": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_including_bf16():
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        save_checkpoint(d, 3, t, metadata={"loss": 1.0})
+        step, r = restore_checkpoint(d, t)
+        assert step == 3
+        assert r["nested"]["b"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t["a"]))
+        np.testing.assert_array_equal(
+            np.asarray(r["nested"]["b"], dtype=np.float32),
+            np.asarray(t["nested"]["b"], dtype=np.float32))
+
+
+def test_latest_step_ignores_torn_writes():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _tree())
+        save_checkpoint(d, 2, _tree())
+        # a torn write: directory without manifest
+        os.makedirs(os.path.join(d, "step_00000009"))
+        assert latest_step(d) == 2
+
+
+def test_structure_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _tree())
+        with pytest.raises(ValueError, match="structure mismatch"):
+            restore_checkpoint(d, {"different": jnp.zeros(3)})
+
+
+def test_gc_keeps_last_k():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4):
+            save_checkpoint(d, s, _tree())
+        gc_checkpoints(d, keep_last=2)
+        assert latest_step(d) == 4
+        kept = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+        assert len(kept) == 2
+
+
+def test_async_checkpointer_surfaces_and_orders():
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, keep_last=None)
+        ck.save(1, _tree())
+        ck.save(2, _tree())  # implicitly waits for save 1
+        ck.wait()
+        assert latest_step(d) == 2
+        step, _ = restore_checkpoint(d, _tree())
+        assert step == 2

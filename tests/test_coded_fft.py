@@ -1,0 +1,152 @@
+"""Coded FFT (1-D) correctness: Theorem 1 — any m workers suffice."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CodedFFT, interleave, deinterleave
+
+C128 = jnp.complex128
+
+
+def _rand(s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=s) + 1j * rng.normal(size=s))
+
+
+def test_interleave_roundtrip():
+    x = _rand(24)
+    for m in (1, 2, 3, 4, 6, 8, 12, 24):
+        c = interleave(x, m)
+        assert c.shape == (m, 24 // m)
+        np.testing.assert_array_equal(np.asarray(deinterleave(c)), np.asarray(x))
+
+
+def test_interleave_layout_matches_paper_eq20():
+    x = jnp.arange(12.0)
+    c = interleave(x, 3)
+    # c_i[j] = x[i + j*m]
+    for i in range(3):
+        for j in range(4):
+            assert float(c[i, j]) == float(x[i + j * 3])
+
+
+def test_motivating_example_section_iii_a():
+    """The paper's worked example: s=4, m=2, N=3(+1), workers 1,2 respond."""
+    x = jnp.asarray([1.0 + 0j, 2.0, 3.0, 4.0])
+    strat = CodedFFT(s=4, m=2, n_workers=3, dtype=C128)
+    b = strat.worker_compute(strat.encode(x))
+    # master receives workers 1 and 2 only (worker 0 straggles)
+    got = strat.decode(b, subset=jnp.asarray([1, 2]))
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-10)
+
+
+def test_no_straggler_baseline_matches_fft():
+    x = _rand(64)
+    strat = CodedFFT(s=64, m=4, n_workers=6, dtype=C128)
+    got = strat.run(x)
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-9)
+
+
+@pytest.mark.parametrize("s,m,n", [(32, 4, 6), (48, 4, 8), (60, 5, 7), (128, 8, 12)])
+def test_every_m_subset_decodes(s, m, n):
+    """Theorem 1 exhaustively: EVERY m-subset of workers recovers X."""
+    x = _rand(s, seed=s)
+    strat = CodedFFT(s=s, m=m, n_workers=n, dtype=C128)
+    b = strat.worker_compute(strat.encode(x))
+    want = np.fft.fft(np.asarray(x))
+    for sub in itertools.combinations(range(n), m):
+        got = strat.decode(b, subset=jnp.asarray(sub))
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-7)
+
+
+def test_fewer_than_m_workers_insufficient():
+    """Theorem 2 (converse, sanity form): m-1 workers give an underdetermined
+    system — decoding from a wrong-size subset is rejected."""
+    strat = CodedFFT(s=32, m=4, n_workers=8, dtype=C128)
+    b = strat.worker_compute(strat.encode(_rand(32)))
+    with pytest.raises(ValueError):
+        strat.decode(b, subset=jnp.asarray([0, 1, 2]))
+
+
+def test_masked_decode_picks_first_available():
+    x = _rand(64, seed=3)
+    strat = CodedFFT(s=64, m=4, n_workers=8, dtype=C128)
+    b = strat.worker_compute(strat.encode(x))
+    mask = np.ones(8, bool)
+    mask[[0, 2, 5]] = False  # three stragglers
+    got = strat.decode(b, mask=jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-8)
+
+
+def test_stragglers_hold_garbage_rows():
+    """Rows outside the subset must never influence the decode."""
+    x = _rand(64, seed=4)
+    strat = CodedFFT(s=64, m=4, n_workers=6, dtype=C128)
+    b = strat.worker_compute(strat.encode(x))
+    b = b.at[0].set(jnp.nan + 1j * jnp.nan)  # worker 0 returned garbage
+    got = strat.decode(b, subset=jnp.asarray([1, 2, 3, 4]))
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-8)
+
+
+def test_fast_encode_matches_matrix_encode():
+    x = _rand(96, seed=5)
+    strat = CodedFFT(s=96, m=4, n_workers=8, dtype=C128)
+    np.testing.assert_allclose(
+        np.asarray(strat.encode_fast(x)), np.asarray(strat.encode(x)), atol=1e-9
+    )
+
+
+def test_linearity_of_coded_pipeline():
+    """Coding commutes with the DFT (the property Thm 1 rests on)."""
+    strat = CodedFFT(s=32, m=4, n_workers=6, dtype=C128)
+    x, y = _rand(32, 6), _rand(32, 7)
+    bx = strat.worker_compute(strat.encode(x))
+    by = strat.worker_compute(strat.encode(y))
+    bxy = strat.worker_compute(strat.encode(2.0 * x + 3.0 * y))
+    np.testing.assert_allclose(np.asarray(bxy), np.asarray(2.0 * bx + 3.0 * by), atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m_pow=st.integers(0, 4),
+    ell_mult=st.integers(1, 6),
+    extra=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_random_configs_match_fft(m_pow, ell_mult, extra, seed):
+    """Property: for random (s, m, N) and random subsets, coded FFT == FFT."""
+    m = 2**m_pow
+    s = m * 4 * ell_mult
+    n = m + extra
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=s) + 1j * rng.normal(size=s))
+    strat = CodedFFT(s=s, m=m, n_workers=n, dtype=C128)
+    b = strat.worker_compute(strat.encode(x))
+    sub = jnp.asarray(rng.choice(n, size=m, replace=False))
+    got = strat.decode(b, subset=sub)
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-6)
+
+
+def test_recovery_threshold_property():
+    strat = CodedFFT(s=64, m=4, n_workers=8)
+    assert strat.recovery_threshold == 4
+
+
+def test_jit_end_to_end():
+    x = _rand(64, seed=8)
+    strat = CodedFFT(s=64, m=4, n_workers=8, dtype=C128)
+
+    @jax.jit
+    def run(xv, mask):
+        b = strat.worker_compute(strat.encode(xv))
+        return strat.decode(b, mask=mask)
+
+    mask = jnp.asarray([False, True, True, False, True, True, True, True])
+    got = run(x, mask)
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-8)

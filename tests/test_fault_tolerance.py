@@ -1,0 +1,121 @@
+"""Byzantine fault detection & correction (paper Remark 3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CodedFFT, RobustCodedFFT, robust_decode
+from repro.core import mds
+from repro.core.fault_tolerance import detect_errors, locate_errors, syndromes
+
+C128 = jnp.complex128
+
+
+def _rand(s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=s) + 1j * rng.normal(size=s))
+
+
+def _setup(s=64, m=4, n=12, seed=0):
+    strat = CodedFFT(s=s, m=m, n_workers=n, dtype=C128)
+    x = _rand(s, seed)
+    b = strat.worker_compute(strat.encode(x))
+    return strat, x, np.asarray(b)
+
+
+def test_syndromes_vanish_for_clean_codeword():
+    strat, x, b = _setup()
+    recv = np.arange(10)
+    nodes = np.asarray(mds.rs_nodes(strat.n_workers, jnp.complex128))[recv]
+    s = syndromes(nodes, b[recv], strat.m)
+    assert np.abs(s).max() < 1e-9 * max(1.0, np.abs(b).max())
+
+
+def test_detect_single_error():
+    strat, x, b = _setup()
+    recv = np.arange(10)
+    nodes = np.asarray(mds.rs_nodes(strat.n_workers, jnp.complex128))[recv]
+    assert not detect_errors(nodes, b[recv], strat.m)
+    bad = b[recv].copy()
+    bad[3] += 10.0
+    assert detect_errors(nodes, bad, strat.m)
+
+
+def test_detect_max_errors():
+    """Up to k - m arbitrary errors are always detected."""
+    strat, x, b = _setup(m=4, n=12)
+    recv = np.arange(9)  # k = 9, detect up to 5
+    nodes = np.asarray(mds.rs_nodes(strat.n_workers, jnp.complex128))[recv]
+    rng = np.random.default_rng(1)
+    bad = b[recv].copy()
+    for i in rng.choice(9, 5, replace=False):
+        bad[i] += rng.normal() * 5 + 1j
+    assert detect_errors(nodes, bad, strat.m)
+
+
+def test_locate_single_error():
+    strat, x, b = _setup()
+    recv = np.arange(10)
+    nodes = np.asarray(mds.rs_nodes(strat.n_workers, jnp.complex128))[recv]
+    bad = b[recv].copy()
+    bad[7] += 3.0 - 2.0j
+    idx = locate_errors(nodes, bad, strat.m)
+    np.testing.assert_array_equal(idx, [7])
+
+
+@pytest.mark.parametrize("n_err", [0, 1, 2, 3])
+def test_correct_up_to_floor_half(n_err):
+    """k=12 received, m=4 -> correct up to (12-4)/2 = 4 errors; test 0..3."""
+    strat, x, b = _setup(s=64, m=4, n=12, seed=n_err)
+    recv = np.arange(12)
+    bj = jnp.asarray(b)
+    rng = np.random.default_rng(n_err + 100)
+    err_pos = rng.choice(12, n_err, replace=False)
+    corrupted = b.copy()
+    for p in err_pos:
+        corrupted[p] += rng.normal(size=b.shape[1]) * 2 + 1j * rng.normal(size=b.shape[1])
+    res = robust_decode(strat, jnp.asarray(corrupted), recv)
+    assert res.ok
+    assert res.n_errors_corrected == n_err
+    np.testing.assert_array_equal(np.sort(res.error_worker_indices), np.sort(err_pos))
+    np.testing.assert_allclose(res.output, np.fft.fft(np.asarray(x)), atol=1e-6)
+
+
+def test_robust_wrapper_bounds():
+    strat = CodedFFT(s=64, m=4, n_workers=12, dtype=C128)
+    rob = RobustCodedFFT(strat)
+    assert rob.max_correctable(12) == 4
+    assert rob.max_detectable(12) == 8
+    assert rob.max_correctable(4) == 0  # at threshold: no redundancy left
+
+
+def test_robust_end_to_end_with_partial_receipt():
+    """Stragglers AND Byzantine workers simultaneously."""
+    strat = CodedFFT(s=128, m=4, n_workers=16, dtype=C128)
+    x = _rand(128, seed=42)
+    b = np.array(strat.worker_compute(strat.encode(x)))
+    recv = np.asarray([0, 2, 3, 5, 7, 8, 11, 13])  # k = 8 of 16 arrived
+    b[5] = 99.0 + 0j     # Byzantine
+    b[11] -= 7.3j        # Byzantine
+    res = robust_decode(strat, jnp.asarray(b), recv)
+    assert res.ok and res.n_errors_corrected == 2
+    np.testing.assert_array_equal(np.sort(res.error_worker_indices), [5, 11])
+    np.testing.assert_allclose(res.output, np.fft.fft(np.asarray(x)), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_err=st.integers(0, 2), seed=st.integers(0, 10_000))
+def test_property_correction(n_err, seed):
+    strat = CodedFFT(s=48, m=3, n_workers=9, dtype=C128)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=48) + 1j * rng.normal(size=48))
+    b = np.array(strat.worker_compute(strat.encode(x)))
+    recv = np.sort(rng.choice(9, 3 + 2 * n_err + 1, replace=False))
+    err_pos = rng.choice(recv, n_err, replace=False)
+    for p in err_pos:
+        b[p] += (rng.normal() + 1j * rng.normal()) * 3
+    res = robust_decode(strat, jnp.asarray(b), recv)
+    assert res.ok
+    np.testing.assert_allclose(res.output, np.fft.fft(np.asarray(x)), atol=1e-5)

@@ -1,0 +1,137 @@
+"""Sharding plans + roofline machinery (pure logic, no 512-device mesh)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import useful_flops
+from repro.launch.shardings import batch_pspecs, build_rules, cache_pspecs
+
+import numpy as np
+
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Mesh over abstract devices -- build_rules only reads .shape/.axis_names."""
+
+    class _M:
+        def __init__(self):
+            self.shape = dict(zip(axes, shape))
+            self.axis_names = axes
+
+    return _M()
+
+
+def test_divisibility_fallbacks_qwen():
+    cfg = get_config("qwen1.5-32b")  # 40 heads, kv=40, vocab 152064
+    rules, fb = build_rules(cfg, SHAPES["train_4k"], _fake_mesh())
+    assert rules["heads"] is None          # 40 % 16 != 0
+    assert rules["kv_heads"] is None
+    assert rules["vocab"] == "model"       # 152064 % 16 == 0
+    assert rules["mlp"] == "model"
+    assert any("n_heads" in f for f in fb)
+
+
+def test_kv_seq_context_parallel_enabled_for_decode():
+    cfg = get_config("qwen1.5-32b")
+    rules, fb = build_rules(cfg, SHAPES["decode_32k"], _fake_mesh())
+    assert rules["kv_seq"] == "model"      # kv replicated -> cache seq sharded
+    rules_t, _ = build_rules(cfg, SHAPES["train_4k"], _fake_mesh())
+    assert rules_t["kv_seq"] is None       # train: no cache
+
+
+def test_long500k_batch_fallback():
+    cfg = get_config("rwkv6-3b")
+    rules, fb = build_rules(cfg, SHAPES["long_500k"], _fake_mesh())
+    assert rules["batch"] is None          # batch=1 cannot shard
+    assert rules["tokens"] is None
+
+
+def test_multipod_batch_drops_to_data_when_pod_doesnt_divide():
+    cfg = get_config("gemma-2b")
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    # global_batch=32 for prefill: 32 % 512... batch axes pod*data = 32 -> ok
+    rules, _ = build_rules(cfg, SHAPES["prefill_32k"], mesh)
+    assert rules["batch"] == ("pod", "data")
+
+
+def test_cache_pspecs_structure_matches_init_cache():
+    from repro.models import build_model
+
+    for arch in ("gemma-2b", "rwkv6-3b", "recurrentgemma-9b", "whisper-medium"):
+        cfg = get_config(arch)
+        rules, _ = build_rules(cfg, SHAPES["decode_32k"], _fake_mesh())
+        model = build_model(cfg)
+        cache = jax.eval_shape(lambda m=model: m.init_cache(4, 128))
+        specs = cache_pspecs(cfg, rules)
+        assert (jax.tree.structure(cache)
+                == jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P))), arch
+
+
+def test_batch_pspecs_cover_inputs():
+    from repro.models import build_model
+
+    cfg = get_config("paligemma-3b")
+    model = build_model(cfg)
+    rules, _ = build_rules(cfg, SHAPES["train_4k"], _fake_mesh())
+    batch = model.input_specs(SHAPES["train_4k"])
+    specs = batch_pspecs(cfg, SHAPES["train_4k"], rules)
+    assert set(batch) == set(specs)
+
+
+# ---------------- hlo analyzer ----------------------------------------------
+def test_analyzer_trip_count_multiplication():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    hlo = jax.jit(f).lower(x).compile().as_text()
+    cost = analyze_hlo(hlo)
+    one_matmul = 2 * 64 ** 3
+    assert abs(cost.flops - 7 * one_matmul) / (7 * one_matmul) < 0.05
+
+
+def test_analyzer_collective_accounting():
+    import re
+
+    # synthetic HLO exercise: one all-gather inside a trip-4 while
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8]{0} get-tuple-element(%p), index=1
+  %g = f32[8]{0} all-gather(%x), dimensions={0}
+  ROOT %t = (s32[], f32[8]) tuple(%i, %g)
+}
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %t0 = (s32[], f32[8]) tuple(%a, %a)
+  %w = (s32[], f32[8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+  ROOT %o = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+    cost = analyze_hlo(hlo)
+    assert cost.collective_counts.get("all-gather") == 4
+    assert cost.collective_result_bytes["all-gather"] == 4 * 8 * 4
+
+
+def test_useful_flops_sane():
+    uf = useful_flops("gemma-2b", "train_4k")
+    # 6 * ~2.5e9 * (256*4096) within a factor ~2
+    assert 1e16 < uf["total"] < 4e16
+    ud = useful_flops("gemma-2b", "decode_32k")
+    assert ud["linear"] == pytest.approx(2 * ud["linear"] / 2)
+    assert ud["total"] < 1e13

@@ -1,0 +1,81 @@
+"""MDS code properties: every m-subset invertible, conditioning, fast encode."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mds
+
+
+def test_generator_shape_and_nodes():
+    g = mds.rs_generator(8, 3, jnp.complex128)
+    assert g.shape == (8, 3)
+    nodes = np.asarray(mds.rs_nodes(8, jnp.complex128))
+    np.testing.assert_allclose(np.abs(nodes), 1.0, atol=1e-12)
+    assert len(np.unique(np.round(nodes, 9))) == 8
+
+
+def test_every_submatrix_invertible_small():
+    """The MDS property itself: every m x m submatrix non-singular."""
+    n, m = 8, 4
+    g = np.asarray(mds.rs_generator(n, m, jnp.complex128))
+    for sub in itertools.combinations(range(n), m):
+        s = np.linalg.svd(g[list(sub)], compute_uv=False)
+        assert s[-1] > 1e-9
+
+
+def test_subset_conditioning_reasonable():
+    """Unit-circle nodes keep subset inverses well conditioned (float safety)."""
+    n, m = 16, 8
+    g = np.asarray(mds.rs_generator(n, m, jnp.complex128))
+    worst = 0.0
+    for sub in itertools.combinations(range(n), m):
+        worst = max(worst, np.linalg.cond(g[list(sub)]))
+    assert worst < 1e7  # decodable in float64 with plenty of headroom
+
+
+def test_encode_decode_roundtrip_payload():
+    n, m, payload = 10, 4, (7, 3)
+    g = mds.rs_generator(n, m, jnp.complex128)
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.normal(size=(m,) + payload) + 1j * rng.normal(size=(m,) + payload))
+    a = mds.encode(g, c)
+    assert a.shape == (n,) + payload
+    got = mds.decode_from_subset(g, a, jnp.asarray([9, 2, 5, 0]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(c), atol=1e-9)
+
+
+def test_encode_dft_equals_matrix_encode():
+    n, m = 12, 5
+    g = mds.rs_generator(n, m, jnp.complex128)
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.normal(size=(m, 6)) + 1j * rng.normal(size=(m, 6)))
+    np.testing.assert_allclose(
+        np.asarray(mds.encode_dft(c, n)), np.asarray(mds.encode(g, c)), atol=1e-9
+    )
+
+
+def test_first_available_stable_order():
+    mask = jnp.asarray([False, True, False, True, True, False, True])
+    idx = np.asarray(mds.first_available(mask, 3))
+    np.testing.assert_array_equal(idx, [1, 3, 4])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    m_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_random_subset_decode(n, m_frac, seed):
+    m = max(1, int(n * m_frac))
+    g = mds.rs_generator(n, m, jnp.complex128)
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(m, 4)) + 1j * rng.normal(size=(m, 4)))
+    a = mds.encode(g, c)
+    sub = jnp.asarray(rng.choice(n, size=m, replace=False))
+    got = mds.decode_from_subset(g, a, sub)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(c), atol=1e-6)

@@ -1,0 +1,81 @@
+"""Baseline strategies and the Remark-4 recovery-threshold comparison."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CodedFFT,
+    UncodedRepetitionFFT,
+    coded_fft_threshold,
+    repetition_threshold,
+    short_dot_threshold,
+)
+
+C128 = jnp.complex128
+
+
+def _rand(s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=s) + 1j * rng.normal(size=s))
+
+
+def test_threshold_formulas_remark4():
+    n, m = 16, 2
+    assert coded_fft_threshold(n, m) == 2
+    assert repetition_threshold(n, m) == 16 - 4 + 1 == 13
+    assert short_dot_threshold(n, m) == 16 - 8 + 2 == 10
+    # coded FFT is orderwise better
+    assert coded_fft_threshold(n, m) < short_dot_threshold(n, m) < repetition_threshold(n, m)
+
+
+def test_repetition_computes_fft_when_all_alive():
+    x = _rand(32, seed=1)
+    strat = UncodedRepetitionFFT(s=32, m=2, n_workers=8, dtype=C128)
+    got = strat.run(x)
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-8)
+
+
+def test_repetition_with_stragglers():
+    x = _rand(32, seed=2)
+    strat = UncodedRepetitionFFT(s=32, m=2, n_workers=8, dtype=C128)
+    mask = np.ones(8, bool)
+    mask[[0, 5]] = False  # blocks (0,0) and (0,1) still covered by replicas
+    got = strat.run(x, mask)
+    np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-8)
+
+
+def test_repetition_threshold_is_exact_empirically():
+    """Exhaustive check on small N: threshold is N - N/m^2 + 1, not less."""
+    strat = UncodedRepetitionFFT(s=16, m=2, n_workers=8, dtype=C128)
+    k_star = strat.worst_case_threshold()
+    assert k_star == repetition_threshold(8, 2) == 7
+    assert strat.is_k_recoverable(k_star)
+    assert not strat.is_k_recoverable(k_star - 1)
+
+
+def test_repetition_missing_block_fails():
+    strat = UncodedRepetitionFFT(s=16, m=2, n_workers=8, dtype=C128)
+    x = _rand(16, seed=3)
+    mask = np.ones(8, bool)
+    mask[[0, 4]] = False  # both replicas of block (0,0) dead
+    assert not strat.decodable(mask)
+    with pytest.raises(ValueError):
+        strat.run(x, mask)
+
+
+def test_coded_fft_empirical_threshold_beats_baselines():
+    """Coded FFT decodes from ANY m workers; repetition provably cannot."""
+    s, m, n = 32, 2, 8
+    coded = CodedFFT(s=s, m=m, n_workers=n, dtype=C128)
+    x = _rand(s, seed=4)
+    b = coded.worker_compute(coded.encode(x))
+    want = np.fft.fft(np.asarray(x))
+    for sub in itertools.combinations(range(n), m):
+        got = coded.decode(b, subset=jnp.asarray(sub))
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-7)
+    # same N, m: repetition needs 7 of 8 in the worst case
+    rep = UncodedRepetitionFFT(s=s, m=m, n_workers=n, dtype=C128)
+    assert rep.worst_case_threshold() == 7 > coded.recovery_threshold == 2

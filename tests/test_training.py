@@ -1,0 +1,121 @@
+"""Training substrate: optimizer, schedules, grad utils, trainer restart."""
+
+import math
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, get_reduced_config
+from repro.data import make_pipeline
+from repro.models import build_model
+from repro.optim import adamw, clip_by_global_norm, cosine, global_norm, wsd
+from repro.optim.adamw import AdamWConfig, dequantize_moment, quantize_moment
+from repro.optim.grad_utils import accumulate_grads
+from repro.training import Trainer, TrainerConfig
+
+
+# ---------------- schedules -------------------------------------------------
+def test_wsd_shape():
+    f = wsd(1e-3, total_steps=100, warmup_steps=10)
+    lrs = [float(f(jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= lrs[10] * 1.01          # warmup rises
+    assert abs(lrs[50] - 1e-3) < 1e-9                 # stable plateau
+    assert lrs[-1] < 1e-4                             # decayed at the end
+    assert max(lrs) <= 1e-3 + 1e-9
+
+
+def test_cosine_monotone_decay_after_warmup():
+    f = cosine(1e-2, total_steps=50, warmup_steps=5)
+    lrs = [float(f(jnp.asarray(s))) for s in range(5, 50)]
+    assert all(a >= b - 1e-12 for a, b in zip(lrs, lrs[1:]))
+
+
+# ---------------- adamw -----------------------------------------------------
+def test_adamw_reduces_quadratic_loss():
+    opt = adamw(0.1, AdamWConfig(weight_decay=0.0))
+    p = {"w": jnp.asarray([3.0, -2.0])}
+    st = opt.init(p)
+    for _ in range(60):
+        g = {"w": 2 * p["w"]}
+        p, st = opt.update(p, g, st)
+    assert float(jnp.abs(p["w"]).max()) < 0.15
+
+
+def test_quantized_adamw_tracks_exact():
+    key = jax.random.PRNGKey(0)
+    p0 = {"w": jax.random.normal(key, (32, 256))}
+    exact, quant = adamw(1e-2), adamw(1e-2, AdamWConfig(quantized_state=True))
+    se, sq = exact.init(p0), quant.init(p0)
+    pe, pq = p0, p0
+    for i in range(10):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i), (32, 256))}
+        pe, se = exact.update(pe, g, se)
+        pq, sq = quant.update(pq, g, sq)
+    drift = float(jnp.max(jnp.abs(pe["w"] - pq["w"])))
+    assert drift < 0.03, drift
+
+
+def test_quantize_moment_roundtrip_shapes():
+    for shape in [(7,), (3, 5), (4, 512), (2, 3, 394)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), shape)
+        qm = quantize_moment(x)
+        assert qm.q.shape == shape
+        y = dequantize_moment(qm, shape)
+        assert y.shape == shape
+        rel = float(jnp.max(jnp.abs(x - y)) / jnp.max(jnp.abs(x)))
+        assert rel < 0.02
+
+
+# ---------------- grad utils ------------------------------------------------
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((2, 2)) * 4.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_accumulate_grads_matches_full_batch():
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, {}
+
+    key = jax.random.PRNGKey(0)
+    p = {"w": jax.random.normal(key, (8, 1), jnp.float32)}
+    batch = {"x": jax.random.normal(key, (16, 8), jnp.float32),
+             "y": jax.random.normal(key, (16, 1), jnp.float32)}
+    l1, _, g1 = accumulate_grads(loss_fn, p, batch, 1)
+    l4, _, g4 = accumulate_grads(loss_fn, p, batch, 4)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g4["w"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ---------------- trainer: bit-exact restart --------------------------------
+@pytest.mark.slow
+def test_trainer_restart_bit_exact():
+    cfg = get_reduced_config("gemma-2b")
+    model = build_model(cfg)
+    shape = ShapeConfig("t", 32, 4, "train")
+    pipe = make_pipeline(cfg, shape)
+    opt = adamw(cosine(3e-3, 10, 2))
+
+    ref_tr = Trainer(model, opt, pipe, TrainerConfig(
+        total_steps=8, checkpoint_every=100, log_every=100),
+        log_fn=lambda *_: None)
+    _, ref = ref_tr.run()
+
+    with tempfile.TemporaryDirectory() as d:
+        t1 = Trainer(model, opt, pipe, TrainerConfig(
+            total_steps=5, checkpoint_every=5, checkpoint_dir=d,
+            log_every=100), log_fn=lambda *_: None)
+        t1.run()
+        t2 = Trainer(model, opt, pipe, TrainerConfig(
+            total_steps=8, checkpoint_every=5, checkpoint_dir=d,
+            log_every=100), log_fn=lambda *_: None)
+        _, resumed = t2.run()
+    assert math.isclose(ref["loss"], resumed["loss"], rel_tol=0, abs_tol=0), \
+        (ref["loss"], resumed["loss"])
