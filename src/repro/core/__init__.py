@@ -13,14 +13,18 @@ from repro.core.interleave import (
     interleave_nd,
 )
 from repro.core.mds import (
+    decode_auto,
     decode_from_subset,
+    decode_ifft,
     decode_masked,
     encode,
     encode_dft,
     first_available,
+    is_contiguous_subset,
     rs_generator,
     rs_nodes,
 )
+from repro.core.plan import CodedPlan, MDSPlan, MDSPlanBase
 from repro.core.multi_input import CodedFFTMultiInput
 from repro.core.recombine import dft_matrix, recombine, recombine_nd, twiddle
 from repro.core.strategies import (
@@ -34,9 +38,15 @@ __all__ = [
     "CodedFFT",
     "CodedFFTND",
     "CodedFFTMultiInput",
+    "CodedPlan",
+    "MDSPlan",
+    "MDSPlanBase",
     "RobustCodedFFT",
     "robust_decode",
     "plan_factors",
+    "decode_auto",
+    "decode_ifft",
+    "is_contiguous_subset",
     "interleave",
     "deinterleave",
     "interleave_nd",

@@ -11,19 +11,25 @@ Pipeline (§III-B):
 
 Recovery threshold is exactly ``m`` -- the master never needs more than the
 fastest ``m`` workers, which is information-theoretically optimal (Thm 2).
+
+Both plans here implement the :class:`repro.core.plan.MDSPlan` protocol:
+every stage threads leading batch axes, encode is the O(N log N) zero-padded
+DFT, and decode dispatches to the O(s log N) transform decode on contiguous
+responder subsets (DESIGN.md §2/§4).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.interleave import interleave, interleave_nd
+from repro.core.plan import MDSPlanBase
 from repro.core import mds
-from repro.core.interleave import deinterleave_nd, interleave, interleave_nd
 from repro.core.recombine import recombine, recombine_nd
 
 __all__ = ["CodedFFT", "CodedFFTND", "plan_factors"]
@@ -35,7 +41,7 @@ def _default_fft(a: jax.Array) -> jax.Array:
 
 
 @dataclasses.dataclass(frozen=True)
-class CodedFFT:
+class CodedFFT(MDSPlanBase):
     """1-D coded FFT computation strategy.
 
     Args:
@@ -43,8 +49,9 @@ class CodedFFT:
       m: storage fraction parameter -- each worker stores/processes s/m.
       n_workers: N >= m workers.
       dtype: complex dtype of the computation.
-      worker_fn: the per-worker DFT implementation (default: jnp.fft along
-        the last axis; the Pallas four-step kernel plugs in here).
+      worker_fn: the per-worker DFT implementation; must transform the LAST
+        axis and map over arbitrary leading axes (default: jnp.fft; the
+        Pallas four-step kernel plugs in here).
     """
 
     s: int
@@ -66,6 +73,18 @@ class CodedFFT:
         return self.s // self.m
 
     @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        return (self.shard_len,)
+
+    @property
     def recovery_threshold(self) -> int:
         """Theorem 1: K* = m."""
         return self.m
@@ -74,54 +93,22 @@ class CodedFFT:
     def generator(self) -> jax.Array:
         return mds.rs_generator(self.n_workers, self.m, self.dtype)
 
-    # -- stage 1+2: master-side encoding ------------------------------------
-    def encode(self, x: jax.Array) -> jax.Array:
-        """Input vector -> (N, s/m) coded shards (one row per worker)."""
-        c = interleave(x.astype(self.dtype), self.m)
-        return mds.encode(self.generator, c)
+    # -- stage cores (see MDSPlanBase for the batched entry points) ----------
+    def _message1(self, x: jax.Array) -> jax.Array:
+        return interleave(x.astype(self.dtype), self.m)
 
+    def _postdecode1(self, c_hat: jax.Array) -> jax.Array:
+        return recombine(c_hat, self.s)
+
+    # back-compat alias: `encode` IS the fast path now
     def encode_fast(self, x: jax.Array) -> jax.Array:
-        """O(N log N)-per-column encode via the zero-padded DFT identity."""
-        c = interleave(x.astype(self.dtype), self.m)
-        return mds.encode_dft(c, self.n_workers).astype(self.dtype)
+        """O(N log N)-per-column encode (alias of :meth:`encode`)."""
+        return self.encode(x)
 
     # -- stage 3: worker computation -----------------------------------------
     def worker_compute(self, a: jax.Array) -> jax.Array:
-        """Each worker FFTs its own coded shard.  ``a``: (N, s/m)."""
+        """Each worker FFTs its own coded shard; any leading axes allowed."""
         return self.worker_fn(a)
-
-    # -- stage 4+5: master-side decoding -------------------------------------
-    def decode(
-        self,
-        b: jax.Array,
-        subset: Optional[jax.Array] = None,
-        mask: Optional[jax.Array] = None,
-    ) -> jax.Array:
-        """Recover X from worker results ``b`` (N, s/m).
-
-        Exactly one of ``subset`` (indices of the m responders) or ``mask``
-        (boolean availability, first m available are used) may be given;
-        with neither, workers 0..m-1 are used.
-        """
-        if subset is not None and mask is not None:
-            raise ValueError("pass at most one of subset / mask")
-        if subset is None:
-            if mask is not None:
-                subset = mds.first_available(mask, self.m)
-            else:
-                subset = jnp.arange(self.m)
-        c_hat = mds.decode_from_subset(self.generator, b, subset)
-        return recombine(c_hat, self.s)
-
-    # -- end-to-end -----------------------------------------------------------
-    def run(
-        self,
-        x: jax.Array,
-        subset: Optional[jax.Array] = None,
-        mask: Optional[jax.Array] = None,
-    ) -> jax.Array:
-        b = self.worker_compute(self.encode(x))
-        return self.decode(b, subset=subset, mask=mask)
 
 
 def plan_factors(shape: tuple[int, ...], m: int) -> tuple[int, ...]:
@@ -158,7 +145,7 @@ def plan_factors(shape: tuple[int, ...], m: int) -> tuple[int, ...]:
 
 
 @dataclasses.dataclass(frozen=True)
-class CodedFFTND:
+class CodedFFTND(MDSPlanBase):
     """n-D coded FFT (Theorem 3).  ``factors[k]`` divides ``shape[k]`` and
     ``prod(factors) = m``."""
 
@@ -183,6 +170,18 @@ class CodedFFTND:
         return tuple(sk // mk for sk, mk in zip(self.shape, self.factors))
 
     @property
+    def input_shape(self) -> tuple[int, ...]:
+        return tuple(self.shape)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return tuple(self.shape)
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        return self.shard_shape
+
+    @property
     def recovery_threshold(self) -> int:
         return self.m
 
@@ -190,34 +189,13 @@ class CodedFFTND:
     def generator(self) -> jax.Array:
         return mds.rs_generator(self.n_workers, self.m, self.dtype)
 
-    def encode(self, t: jax.Array) -> jax.Array:
-        c = interleave_nd(t.astype(self.dtype), self.factors)
-        return mds.encode(self.generator, c)
+    def _message1(self, t: jax.Array) -> jax.Array:
+        return interleave_nd(t.astype(self.dtype), self.factors)
 
-    def worker_compute(self, a: jax.Array) -> jax.Array:
-        """n-D FFT of each worker's coded tensor: (N, *shard_shape)."""
-        axes = tuple(range(1, len(self.shape) + 1))
-        return jnp.fft.fftn(a, axes=axes)
-
-    def decode(
-        self,
-        b: jax.Array,
-        subset: Optional[jax.Array] = None,
-        mask: Optional[jax.Array] = None,
-    ) -> jax.Array:
-        if subset is None:
-            if mask is not None:
-                subset = mds.first_available(mask, self.m)
-            else:
-                subset = jnp.arange(self.m)
-        c_hat = mds.decode_from_subset(self.generator, b, subset)
+    def _postdecode1(self, c_hat: jax.Array) -> jax.Array:
         return recombine_nd(c_hat, self.shape, self.factors)
 
-    def run(
-        self,
-        t: jax.Array,
-        subset: Optional[jax.Array] = None,
-        mask: Optional[jax.Array] = None,
-    ) -> jax.Array:
-        b = self.worker_compute(self.encode(t))
-        return self.decode(b, subset=subset, mask=mask)
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        """n-D FFT of each coded tensor over the trailing shard axes."""
+        axes = tuple(range(-len(self.shape), 0))
+        return jnp.fft.fftn(a, axes=axes)

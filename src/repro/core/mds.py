@@ -24,9 +24,11 @@ All functions are jit-compatible and batched over trailing axes: message
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "rs_nodes",
@@ -37,6 +39,10 @@ __all__ = [
     "first_available",
     "decode_masked",
     "encode_dft",
+    "decode_ifft",
+    "decode_auto",
+    "is_contiguous_subset",
+    "lagrange_decode_coeffs",
 ]
 
 
@@ -127,6 +133,158 @@ def decode_masked(generator: jax.Array, b: jax.Array, mask: jax.Array) -> jax.Ar
     m = generator.shape[1]
     subset = first_available(mask, m)
     return decode_from_subset(generator, b, subset)
+
+
+# -- fast decode (§III-C Reed-Solomon mapping) --------------------------------
+#
+# Worker k's result per payload column is the message polynomial
+# ``P(z) = sum_i c_i z^i`` evaluated at the root of unity ``omega^k``
+# (encode == zero-padded DFT, see :func:`encode_dft`).  Decoding from a
+# subset S of workers is therefore polynomial interpolation at the nodes
+# ``{omega^k : k in S}``, which the Lagrange/Forney erasure formula turns
+# into transforms instead of a dense solve:
+#
+#     A(z)   = prod_{k in S} (z - omega^k)           (erasure locator)
+#     g_k    = b_k / A'(omega^k)
+#     P(z)   = sum_k g_k * A(z) / (z - omega^k)
+#
+# Collecting coefficients: with ``G_d = sum_{k in S} g_k omega^{kd}`` (a
+# length-n DFT of the g's scattered onto the worker grid, d < m) and ``a_t``
+# the coefficients of A, ``c_u = sum_{t>u} a_t G_{t-1-u}`` -- a short
+# correlation computed by one more length-2m FFT.  Total O(n log n) per
+# payload column = O(s log N) per transform, vs O(m^2) per column (plus an
+# O(m^3) factor) for the Vandermonde solve.  For S = all n workers the
+# formula degenerates to ``c = ifft(b)[:m]`` -- the exact inverse of the
+# zero-padded DFT encode.
+
+
+def lagrange_decode_coeffs(
+    subset: jax.Array, n: int, m: int, dtype=jnp.complex128
+) -> tuple[jax.Array, jax.Array]:
+    """Payload-independent decode precompute for the nodes in ``subset``.
+
+    Returns ``(a, dinv)``: ``a`` (m+1,) ascending coefficients of the
+    erasure locator ``A(z) = prod_{k in subset}(z - omega^k)`` and
+    ``dinv`` (m,) = ``1 / A'(omega^{subset_j})``.  jit-safe for traced
+    subsets (fixed shapes, ``m`` small).
+    """
+    nodes = jnp.take(rs_nodes(n, dtype), subset)
+    diff = nodes[:, None] - nodes[None, :]
+    diff = diff.at[jnp.diag_indices(m)].set(1.0)
+    dinv = 1.0 / jnp.prod(diff, axis=1)
+
+    # Multiply the linear factors in a shuffled (static) order: building the
+    # product in arc order walks monotonically around the circle and the
+    # partial-product coefficients blow up before cancelling (catastrophic
+    # even for the full circle, whose true locator is just z^n - 1).
+    # Balanced order keeps partial products O(1).
+    perm = jnp.asarray(np.random.default_rng(0).permutation(m))
+
+    def mul_linear(i, a):
+        # a(z) <- a(z) * (z - nodes[perm[i]]); top slot of ``a`` is still 0.
+        shifted = jnp.roll(a, 1).at[0].set(0.0)
+        return shifted - nodes[perm[i]] * a
+
+    a0 = jnp.zeros((m + 1,), dtype).at[0].set(1.0)
+    a = jax.lax.fori_loop(0, m, mul_linear, a0)
+    return a, dinv
+
+
+def decode_ifft(b: jax.Array, subset: jax.Array, n: Optional[int] = None) -> jax.Array:
+    """O(s log N) subset decode via the inverse zero-padded DFT mapping.
+
+    ``b``: ``(n, *payload)`` worker results (rows outside ``subset`` are
+    never read, so stragglers may hold garbage/NaN); ``subset``: ``(m,)``
+    responder indices.  Exact in exact arithmetic for ANY subset (the
+    Lagrange erasure formula above); in floats its error tracks the
+    subset's intrinsic interpolation conditioning, which for contiguous
+    arcs grows exponentially in ``m`` (the dense solve degrades on the
+    same arcs, only more gracefully) -- hence :func:`decode_auto` only
+    routes here for small ``m`` or the exactly-stable full set.
+    """
+    n = b.shape[0] if n is None else n
+    m = subset.shape[0]
+    flat, payload = _flatten_payload(b)
+    dtype = flat.dtype
+    if m == n:
+        # full response set (any subset is a permutation of it): the literal
+        # inverse of the zero-padded DFT encode -- exact, stable at any m,
+        # one FFT
+        c = jnp.fft.ifft(flat.T, axis=-1)[:, :m].T
+        return c.reshape((m,) + payload).astype(dtype)
+    a, dinv = lagrange_decode_coeffs(subset, n, m, dtype)
+    # work in (P, n) layout so both FFTs run along the contiguous last axis
+    g = jnp.take(flat, subset, axis=0).T * dinv[None, :]         # (P, m)
+    g_grid = jnp.zeros((flat.shape[1], n), dtype).at[:, subset].set(g)
+    big = jnp.fft.fft(g_grid, axis=-1)[:, :m]                    # G_d, d < m
+    # c_u = sum_t a_t G_{t-1-u} == linear_conv(a, reverse(G))[u + m]
+    two_m = 2 * m
+    a_hat = jnp.fft.fft(a, n=two_m)
+    conv = jnp.fft.ifft(
+        a_hat[None, :] * jnp.fft.fft(big[:, ::-1], n=two_m, axis=-1), axis=-1)
+    c = conv[:, m:two_m].T
+    return c.reshape((m,) + payload).astype(dtype)
+
+
+def is_contiguous_subset(subset, n: int) -> bool:
+    """Static check: does ``subset`` form one contiguous run mod ``n``?"""
+    got = np.zeros(n, bool)
+    got[np.asarray(subset) % n] = True
+    boundaries = int(np.sum(got & ~np.roll(got, -1)))
+    return boundaries <= 1
+
+
+def _contiguous_flag(subset: jax.Array, n: int) -> jax.Array:
+    """Traced version of :func:`is_contiguous_subset` (returns a scalar bool)."""
+    got = jnp.zeros((n,), bool).at[subset].set(True)
+    return jnp.sum(got & ~jnp.roll(got, -1)) <= 1
+
+
+# Largest m for which the transform decode is routed to automatically on a
+# contiguous (non-full) arc: up to here its float error stays within a small
+# factor of the dense solve's on the same (intrinsically worsening) arcs.
+IFFT_AUTO_MAX_M = 8
+
+
+def decode_auto(
+    generator: jax.Array, b: jax.Array, subset: jax.Array, *, method: str = "auto"
+) -> jax.Array:
+    """Subset decode with fast-path dispatch (DESIGN.md §4).
+
+    ``method``: ``"solve"`` forces the dense Vandermonde solve, ``"ifft"``
+    forces the O(s log N) transform decode, ``"auto"`` picks ``ifft`` when
+    it is numerically safe -- the full set (m == N, exact at any size) or a
+    contiguous-mod-N subset with ``m <= IFFT_AUTO_MAX_M`` -- and the
+    backward-stable ``solve`` otherwise.  With a concrete subset the choice
+    is made at trace time; with a traced subset (e.g. ``first_available``
+    of a runtime mask) it becomes a ``lax.cond`` (under ``vmap`` that
+    select executes both branches -- batched callers resolve ``auto`` to
+    ``solve`` instead, see plan.py).
+    """
+    n, m = generator.shape
+    if subset.shape[0] != m:
+        raise ValueError(f"subset must have exactly m={m} entries")
+    if method == "solve":
+        return decode_from_subset(generator, b, subset)
+    if method == "ifft":
+        return decode_ifft(b, subset, n)
+    if method != "auto":
+        raise ValueError(f"unknown decode method {method!r}")
+    if m == n:
+        return decode_ifft(b, subset, n)
+    if m > IFFT_AUTO_MAX_M:
+        return decode_from_subset(generator, b, subset)
+    if not isinstance(subset, jax.core.Tracer):
+        if is_contiguous_subset(subset, n):
+            return decode_ifft(b, subset, n)
+        return decode_from_subset(generator, b, subset)
+    return jax.lax.cond(
+        _contiguous_flag(subset, n),
+        lambda bb, ss: decode_ifft(bb, ss, n),
+        lambda bb, ss: decode_from_subset(generator, bb, ss),
+        b,
+        subset,
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))

@@ -9,26 +9,29 @@ Strategy: bundle the q inputs into ``m_tilde`` disjoint subsets of size
 tuple ``(i_0..i_{n-1})`` form one message symbol.  The resulting ``m``
 symbols are encoded with an (N, m)-MDS code; every worker FFTs all coded
 tensors in its symbol.  Any ``m`` responders suffice (K* = m, Thm 5).
+
+Implements :class:`repro.core.plan.MDSPlan`: batched shapes, DFT fast
+encode, and contiguous-subset fast decode come from ``MDSPlanBase``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import mds
 from repro.core.interleave import interleave_nd
+from repro.core.plan import MDSPlanBase
 from repro.core.recombine import recombine_nd
 
 __all__ = ["CodedFFTMultiInput"]
 
 
 @dataclasses.dataclass(frozen=True)
-class CodedFFTMultiInput:
+class CodedFFTMultiInput(MDSPlanBase):
     q: int
     shape: tuple[int, ...]
     m_tilde: int
@@ -66,39 +69,35 @@ class CodedFFTMultiInput:
         return tuple(sk // mk for sk, mk in zip(self.shape, self.factors))
 
     @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.q,) + tuple(self.shape)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return (self.q,) + tuple(self.shape)
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        return (self.group_size,) + self.shard_shape
+
+    @property
     def generator(self) -> jax.Array:
         return mds.rs_generator(self.n_workers, self.m, self.dtype)
 
-    def encode(self, t: jax.Array) -> jax.Array:
-        """``t``: (q, *shape) -> coded symbols (N, q/m_tilde, *shard_shape)."""
-        if t.shape != (self.q,) + tuple(self.shape):
-            raise ValueError(f"expected {(self.q,) + tuple(self.shape)}, got {t.shape}")
+    def _message1(self, t: jax.Array) -> jax.Array:
+        """``t``: (q, *shape) -> message symbols (m, q/m_tilde, *shard_shape)."""
+        if t.shape != self.input_shape:
+            raise ValueError(f"expected {self.input_shape}, got {t.shape}")
         c = jax.vmap(lambda u: interleave_nd(u, self.factors))(t.astype(self.dtype))
         # (q, m_sp, *shard) -> (m_tilde, group, m_sp, *shard)
         c = c.reshape((self.m_tilde, self.group_size, self.m_spatial) + self.shard_shape)
         # symbols axis = (m_tilde, m_sp) row-major -> (m, group, *shard)
-        c = jnp.swapaxes(c, 1, 2).reshape(
+        return jnp.swapaxes(c, 1, 2).reshape(
             (self.m, self.group_size) + self.shard_shape
         )
-        return mds.encode(self.generator, c)
 
-    def worker_compute(self, a: jax.Array) -> jax.Array:
-        axes = tuple(range(2, 2 + len(self.shape)))
-        return jnp.fft.fftn(a, axes=axes)
-
-    def decode(
-        self,
-        b: jax.Array,
-        subset: Optional[jax.Array] = None,
-        mask: Optional[jax.Array] = None,
-    ) -> jax.Array:
-        """Worker results (N, group, *shard) -> output tensors (q, *shape)."""
-        if subset is None:
-            if mask is not None:
-                subset = mds.first_available(mask, self.m)
-            else:
-                subset = jnp.arange(self.m)
-        sym = mds.decode_from_subset(self.generator, b, subset)
+    def _postdecode1(self, sym: jax.Array) -> jax.Array:
+        """Decoded symbols (m, group, *shard) -> output tensors (q, *shape)."""
         # (m, group, *shard) -> (m_tilde, m_sp, group, *shard) -> (q, m_sp, *shard)
         sym = sym.reshape(
             (self.m_tilde, self.m_spatial, self.group_size) + self.shard_shape
@@ -108,11 +107,7 @@ class CodedFFTMultiInput:
         )
         return jax.vmap(lambda u: recombine_nd(u, self.shape, self.factors))(sym)
 
-    def run(
-        self,
-        t: jax.Array,
-        subset: Optional[jax.Array] = None,
-        mask: Optional[jax.Array] = None,
-    ) -> jax.Array:
-        b = self.worker_compute(self.encode(t))
-        return self.decode(b, subset=subset, mask=mask)
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        """n-D FFT of every coded tensor over the trailing spatial axes."""
+        axes = tuple(range(-len(self.shape), 0))
+        return jnp.fft.fftn(a, axes=axes)

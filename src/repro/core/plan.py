@@ -1,0 +1,219 @@
+"""The ``CodedPlan`` protocol: one interface for every coded strategy.
+
+The paper's pipeline (interleave -> MDS-encode -> worker DFT -> MDS-decode
+-> recombine) is a single coded-linear-transform family; ``CodedFFT``,
+``CodedFFTND``, ``CodedFFTMultiInput`` and ``UncodedRepetitionFFT`` are all
+instances of it.  This module defines the shared contract (DESIGN.md §2)
+plus ``MDSPlanBase``, the batch-aware implementation the three MDS-coded
+strategies build on.
+
+Canonical shapes (``B* = any leading batch axes``, usually one):
+
+* ``encode``          : ``(*B, *input_shape)  -> (*B, N, *worker_shard_shape)``
+* ``worker_compute``  : ``(*B, N, *shard)     -> (*B, N, *shard)`` -- the
+  transform acts on the trailing ``worker_shard_shape`` axes only, so any
+  leading layout (batch, worker, or both) maps through unchanged.
+* ``decode``          : ``(*B, N, *shard)     -> (*B, *output_shape)`` with
+  per-request straggler ``mask`` ``(*B, N)`` / ``subset`` ``(*B, m)``.
+
+MDS plans additionally split the master's two stages so distributed
+executors can fuse them per device (DESIGN.md §3):
+
+* ``message``    : input -> the ``m`` uncoded message shards (interleave);
+* ``postdecode`` : decoded message shards -> final output (recombine).
+
+``encode = encode_dft(message(x))`` and
+``decode = postdecode(mds_subset_decode(b))`` by construction.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mds
+
+__all__ = ["CodedPlan", "MDSPlan", "MDSPlanBase", "batch_shape"]
+
+
+def batch_shape(arr: jax.Array, core_ndim: int, what: str) -> tuple[int, ...]:
+    """Leading batch dims of ``arr`` given its core (unbatched) rank."""
+    extra = arr.ndim - core_ndim
+    if extra < 0:
+        raise ValueError(
+            f"{what} must have rank >= {core_ndim}, got shape {arr.shape}")
+    return arr.shape[:extra]
+
+
+@runtime_checkable
+class CodedPlan(Protocol):
+    """Minimal contract every computation strategy satisfies."""
+
+    n_workers: int
+
+    @property
+    def recovery_threshold(self) -> int: ...
+
+    @property
+    def input_shape(self) -> tuple[int, ...]: ...
+
+    @property
+    def output_shape(self) -> tuple[int, ...]: ...
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]: ...
+
+    def encode(self, x: jax.Array) -> jax.Array: ...
+
+    def worker_compute(self, a: jax.Array) -> jax.Array: ...
+
+    def decode(self, b, subset=None, mask=None): ...
+
+    def run(self, x, subset=None, mask=None): ...
+
+
+@runtime_checkable
+class MDSPlan(CodedPlan, Protocol):
+    """A plan whose code is the (N, m) complex-RS MDS code: decodable from
+    ANY ``m`` responders, and factorable into per-device encode (generator
+    row x message) for mesh execution."""
+
+    @property
+    def m(self) -> int: ...
+
+    @property
+    def generator(self) -> jax.Array: ...
+
+    def message(self, x: jax.Array) -> jax.Array: ...
+
+    def postdecode(self, c_hat: jax.Array) -> jax.Array: ...
+
+
+class MDSPlanBase:
+    """Shared batched encode/decode/run for MDS-coded strategies.
+
+    Subclasses provide the dataclass fields (``n_workers``, ``dtype``, ...),
+    the ``m`` / ``generator`` / shape properties, the unbatched stage cores
+    ``_message1`` / ``_postdecode1``, and a trailing-axes ``worker_compute``.
+    """
+
+    # -- stage cores supplied by the concrete plan ---------------------------
+    def _message1(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def _postdecode1(self, c_hat: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    # -- batch plumbing ------------------------------------------------------
+    def _map_batched(self, fn, arr: jax.Array, core_ndim: int, what: str):
+        batch = batch_shape(arr, core_ndim, what)
+        if not batch:
+            return fn(arr)
+        flat = arr.reshape((-1,) + arr.shape[len(batch):])
+        out = jax.vmap(fn)(flat)
+        return out.reshape(batch + out.shape[1:])
+
+    # -- public pipeline -----------------------------------------------------
+    def message(self, x: jax.Array) -> jax.Array:
+        """Input -> uncoded message shards ``(*B, m, *worker_shard_shape)``."""
+        return self._map_batched(
+            self._message1, x, len(self.input_shape), "plan input")
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        """Input -> coded worker shards via the O(N log N) DFT encode."""
+        return self._map_batched(
+            self._encode1, x, len(self.input_shape), "plan input")
+
+    def _encode1(self, x: jax.Array) -> jax.Array:
+        c = self._message1(x)
+        return mds.encode_dft(c, self.n_workers).astype(self.dtype)
+
+    def encode_dense(self, x: jax.Array) -> jax.Array:
+        """Reference O(N*m) matrix encode (kept for tests/benchmarks)."""
+        return self._map_batched(
+            lambda xi: mds.encode(self.generator, self._message1(xi)),
+            x, len(self.input_shape), "plan input")
+
+    def postdecode(self, c_hat: jax.Array) -> jax.Array:
+        return self._map_batched(
+            self._postdecode1, c_hat, 1 + len(self.worker_shard_shape),
+            "decoded shards")
+
+    def decode(
+        self,
+        b: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+        *,
+        method: str = "auto",
+    ) -> jax.Array:
+        """Worker results -> output, per-request straggler handling.
+
+        Exactly one of ``subset`` (responder indices, ``(*B, m)`` or shared
+        ``(m,)``) or ``mask`` (availability, ``(*B, N)`` or shared ``(N,)``)
+        may be given.  ``method`` selects the MDS decode path (DESIGN.md §4).
+        """
+        if subset is not None and mask is not None:
+            raise ValueError("pass at most one of subset / mask")
+        m = self.m
+        core = 1 + len(self.worker_shard_shape)
+        batch = batch_shape(b, core, "worker results")
+        if not batch:
+            if subset is None:
+                subset = (mds.first_available(jnp.asarray(mask), m)
+                          if mask is not None else jnp.arange(m))
+            return self._decode1(b, jnp.asarray(subset), method)
+
+        flat = b.reshape((-1,) + b.shape[len(batch):])
+        nb = flat.shape[0]
+        if nb == 1:
+            # batch of one (the service's single-submit bucket): skip vmap
+            # so decode_auto's dispatch stays a real branch/static choice
+            if subset is None:
+                subset = (mds.first_available(
+                    jnp.asarray(mask).reshape(-1)[-self.n_workers:], m)
+                    if mask is not None else jnp.arange(m))
+            out = self._decode1(flat[0], jnp.asarray(subset).reshape(m), method)
+            return out.reshape(batch + out.shape)
+        # per-request subsets are traced under vmap, where decode_auto's
+        # lax.cond would lower to a select that EXECUTES both decode paths
+        # per request -- resolve auto to the backward-stable solve instead
+        per_request_method = "solve" if method == "auto" else method
+        if mask is not None:
+            masks = jnp.broadcast_to(
+                jnp.asarray(mask), batch + (self.n_workers,)).reshape(nb, -1)
+            subsets = jax.vmap(lambda mk: mds.first_available(mk, m))(masks)
+        elif subset is None:
+            # shared contiguous default: keep it concrete so the fast-decode
+            # dispatch stays static under vmap
+            shared = jnp.arange(m)
+            out = jax.vmap(lambda bi: self._decode1(bi, shared, method))(flat)
+            return out.reshape(batch + out.shape[1:])
+        else:
+            subset = jnp.asarray(subset)
+            if subset.ndim == 1:
+                out = jax.vmap(
+                    lambda bi: self._decode1(bi, subset, method))(flat)
+                return out.reshape(batch + out.shape[1:])
+            subsets = subset.reshape(nb, m)
+        out = jax.vmap(
+            lambda bi, si: self._decode1(bi, si, per_request_method))(
+                flat, subsets)
+        return out.reshape(batch + out.shape[1:])
+
+    def _decode1(self, b: jax.Array, subset: jax.Array, method: str) -> jax.Array:
+        c_hat = mds.decode_auto(self.generator, b, subset, method=method)
+        return self._postdecode1(c_hat)
+
+    def run(
+        self,
+        x: jax.Array,
+        subset: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+        *,
+        method: str = "auto",
+    ) -> jax.Array:
+        b = self.worker_compute(self.encode(x))
+        return self.decode(b, subset=subset, mask=mask, method=method)

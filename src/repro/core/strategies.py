@@ -17,17 +17,25 @@ block using only N/m^2 erasures, so the worst-case threshold is
 
 Short-dot is reported analytically (the sparse-code construction of Dutta
 et al. [13]; we cite the threshold rather than re-implement that paper).
+
+``UncodedRepetitionFFT`` implements the :class:`repro.core.plan.CodedPlan`
+protocol (shape metadata, leading batch axes through encode/worker/decode)
+but NOT ``MDSPlan`` -- its replication code is not subset-decodable, which
+is exactly the Remark-4 gap the benchmarks demonstrate.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.plan import batch_shape
 
 __all__ = [
     "UncodedRepetitionFFT",
@@ -86,6 +94,24 @@ class UncodedRepetitionFFT:
     def replicas(self) -> int:
         return self.n_workers // self.n_blocks
 
+    # -- CodedPlan shape metadata --------------------------------------------
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        return (self.shard_len,)
+
+    @property
+    def recovery_threshold(self) -> int:
+        """Worst-case threshold (Remark 4) -- contrast with MDS plans' m."""
+        return self.worst_case_threshold()
+
     def block_of_worker(self, w: int) -> tuple[int, int]:
         return divmod(w % self.n_blocks, self.m)
 
@@ -95,19 +121,27 @@ class UncodedRepetitionFFT:
         cols = jnp.arange(j * ell, (j + 1) * ell)
         return jnp.exp(-2j * jnp.pi * jnp.outer(rows, cols) / self.s).astype(self.dtype)
 
+    @functools.cached_property
+    def _worker_blocks(self) -> jax.Array:
+        """Stacked per-worker DFT blocks, shape (N, s/m, s/m)."""
+        return jnp.stack(
+            [self._dft_block(*self.block_of_worker(w))
+             for w in range(self.n_workers)])
+
+    @functools.cached_property
+    def _chunk_of_worker(self) -> jax.Array:
+        return jnp.asarray(
+            [self.block_of_worker(w)[1] for w in range(self.n_workers)])
+
     def encode(self, x: jax.Array) -> jax.Array:
-        """Worker storage: (N, s/m) -- worker w stores contiguous chunk x_{j_w}."""
-        chunks = x.astype(self.dtype).reshape(self.m, self.shard_len)
-        j_idx = jnp.asarray([self.block_of_worker(w)[1] for w in range(self.n_workers)])
-        return chunks[j_idx]
+        """Worker storage ``(*B, N, s/m)`` -- worker w stores chunk x_{j_w}."""
+        chunks = x.astype(self.dtype).reshape(
+            x.shape[:-1] + (self.m, self.shard_len))
+        return jnp.take(chunks, self._chunk_of_worker, axis=-2)
 
     def worker_compute(self, a: jax.Array) -> jax.Array:
-        """Worker w returns F_{i_w, j_w} @ x_{j_w}  (an s/m-vector)."""
-        outs = []
-        for w in range(self.n_workers):
-            i, j = self.block_of_worker(w)
-            outs.append(self._dft_block(i, j) @ a[w])
-        return jnp.stack(outs)
+        """Worker w returns F_{i_w, j_w} @ x_{j_w}; leading axes map through."""
+        return jnp.einsum("nij,...nj->...ni", self._worker_blocks, a)
 
     def decodable(self, mask: np.ndarray) -> bool:
         """Master can finish iff every (i, j) block has >= 1 live replica."""
@@ -116,25 +150,51 @@ class UncodedRepetitionFFT:
             got.add(self.block_of_worker(int(w)))
         return len(got) == self.n_blocks
 
-    def decode(self, b: jax.Array, mask: np.ndarray) -> jax.Array:
-        """Sum one replica of every block row-group; requires decodable(mask)."""
+    def decode(self, b: jax.Array, subset: Optional[np.ndarray] = None,
+               mask: Optional[np.ndarray] = None) -> jax.Array:
+        """Assemble X from one live replica per block (host-side numpy).
+
+        ``b``: ``(*B, N, s/m)`` worker results; ``mask``: ``(N,)`` or
+        ``(*B, N)`` availability (``subset`` of responder ids is accepted
+        for protocol uniformity and converted to a mask).  Raises if any
+        block lost all replicas.
+        """
+        if subset is not None:
+            if mask is not None:
+                raise ValueError("pass at most one of subset / mask")
+            mask = np.zeros(self.n_workers, bool)
+            mask[np.asarray(subset)] = True
+        if mask is None:
+            mask = np.ones(self.n_workers, bool)
+        batch = batch_shape(b, 2, "worker results")
+        if batch:
+            bf = np.asarray(b).reshape((-1,) + b.shape[len(batch):])
+            mf = np.broadcast_to(
+                np.asarray(mask), batch + (self.n_workers,)
+            ).reshape(bf.shape[0], -1)
+            out = np.stack([np.asarray(self._decode1(bi, mi))
+                            for bi, mi in zip(bf, mf)])
+            return jnp.asarray(out.reshape(batch + (self.s,)))
+        return self._decode1(b, np.asarray(mask))
+
+    def _decode1(self, b: jax.Array, mask: np.ndarray) -> jax.Array:
         if not self.decodable(mask):
             raise ValueError("not enough workers responded: some block missing")
         ell = self.shard_len
         x_out = jnp.zeros((self.s,), self.dtype)
         seen = set()
-        for w in np.nonzero(np.asarray(mask))[0]:
+        for w in np.nonzero(mask)[0]:
             i, j = self.block_of_worker(int(w))
             if (i, j) in seen:
                 continue
             seen.add((i, j))
-            x_out = x_out.at[i * ell : (i + 1) * ell].add(b[int(w)])
+            x_out = x_out.at[i * ell : (i + 1) * ell].add(b[..., int(w), :])
         return x_out
 
-    def run(self, x: jax.Array, mask: Optional[np.ndarray] = None) -> jax.Array:
-        if mask is None:
-            mask = np.ones(self.n_workers, bool)
-        return self.decode(self.worker_compute(self.encode(x)), mask)
+    def run(self, x: jax.Array, subset: Optional[np.ndarray] = None,
+            mask: Optional[np.ndarray] = None) -> jax.Array:
+        return self.decode(self.worker_compute(self.encode(x)),
+                           subset=subset, mask=mask)
 
     # -- empirical threshold verification ------------------------------------
     def worst_case_threshold(self) -> int:

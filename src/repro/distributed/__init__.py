@@ -1,6 +1,6 @@
 """Distribution substrate: logical sharding rules, meshes, coded runtime."""
 
-from repro.distributed.coded_runtime import DistributedCodedFFT
+from repro.distributed.coded_runtime import DistributedCodedFFT, DistributedCodedPlan
 from repro.distributed.elastic import reshard, reshard_like
 from repro.distributed.mesh import test_mesh
 from repro.distributed.sharding import (
@@ -16,6 +16,7 @@ from repro.distributed.straggler import StragglerModel, expected_kth_completion
 
 __all__ = [
     "DistributedCodedFFT",
+    "DistributedCodedPlan",
     "MULTI_POD_RULES",
     "SINGLE_POD_RULES",
     "StragglerModel",

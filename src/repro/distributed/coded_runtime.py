@@ -1,23 +1,27 @@
-"""shard_map execution of the coded FFT over a device mesh.
+"""shard_map execution of any MDS coded plan over a device mesh.
 
 The paper's master/worker topology mapped to SPMD (DESIGN.md §3):
 
-* **encode** -- each device holds the (replicated) input block, computes
-  only ITS coded shard: ``a_k = sum_i G[k,i] c_i`` (no collective; G row is
-  selected by ``axis_index``).
-* **worker compute** -- per-device FFT of its own shard, the hot loop.  On
-  TPU this is the Pallas four-step kernel; on CPU the jnp oracle.
-* **straggler mask** -- an explicit boolean input.  In production the
-  launcher populates it from collective timeouts; in tests/benchmarks the
-  straggler simulator does.  Masked workers' outputs are *zeroed then
-  ignored* by decode (decode reads only the first-m-available rows), so a
-  straggler may return garbage without affecting the result (verified in
-  tests by feeding NaNs).
+* **encode** -- each device holds the (replicated) message shards, computes
+  only ITS coded shards: ``a_k = sum_i G[k,i] c_i`` (no collective; G rows
+  are selected by ``axis_index``).  The message is produced host-side by
+  ``plan.message`` (interleave), so the runtime works for every
+  :class:`repro.core.plan.MDSPlan` -- 1-D, n-D, multi-input.
+* **worker compute** -- per-device transform of its own shards, the hot
+  loop.  ``plan.worker_compute`` acts on trailing shard axes, so the
+  (batch, n_local) leading layout maps through unchanged.  On TPU this is
+  the Pallas four-step kernel; on CPU the jnp oracle.
+* **straggler mask** -- an explicit boolean input, per request when the
+  input carries a batch axis.  In production the launcher populates it from
+  collective timeouts; in tests/benchmarks the straggler simulator does.
+  Masked workers' outputs are overwritten with ``masked_fill`` (0 by
+  default; NaN in tests to *prove* decode never reads them).
 * **decode** -- all-gather the worker results along the axis (the paper's
   fan-in to the master: exactly s coded symbols on the wire, the cut-set
-  optimum of Remark 5), then every device runs the same masked MDS solve +
-  recombine.  Replicated decode wastes no wall-clock vs a physical master
-  because the all-gather is the critical path either way.
+  optimum of Remark 5), then every device runs the same masked MDS decode
+  (fast-path dispatch per DESIGN.md §4) + recombine.  Replicated decode
+  wastes no wall-clock vs a physical master because the all-gather is the
+  critical path either way.
 
 ``n_local = N // axis_size`` coded shards live on each device, so N need
 not equal the device count (e.g. N=8 code on a 4-device axis).
@@ -26,8 +30,9 @@ not equal the device count (e.g. N=8 code on a 4-device axis).
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,18 +41,24 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import mds
 from repro.core.coded_fft import CodedFFT
-from repro.core.recombine import recombine
+from repro.core.plan import batch_shape
 
-__all__ = ["DistributedCodedFFT"]
+__all__ = ["DistributedCodedPlan", "DistributedCodedFFT"]
 
 
 @dataclasses.dataclass(frozen=True)
-class DistributedCodedFFT:
-    """Run a ``CodedFFT`` plan across a mesh axis with straggler masking."""
+class DistributedCodedPlan:
+    """Run any ``MDSPlan`` across a mesh axis with straggler masking.
 
-    plan: CodedFFT
+    ``masked_fill`` is the value written into masked-out workers' result
+    rows before they leave the device; the decode provably ignores those
+    rows, which tests assert by setting it to NaN.
+    """
+
+    plan: object  # any repro.core.plan.MDSPlan
     mesh: Mesh
     axis: str = "workers"
+    masked_fill: float = 0.0
 
     def __post_init__(self):
         size = self.mesh.shape[self.axis]
@@ -61,64 +72,87 @@ class DistributedCodedFFT:
         return self.plan.n_workers // self.mesh.shape[self.axis]
 
     # ------------------------------------------------------------------
-    def _worker_body(self, c: jax.Array, mask: jax.Array) -> jax.Array:
-        """Per-device: encode own shards from replicated c, FFT them.
+    def run(self, x: jax.Array, mask: Optional[jax.Array] = None,
+            *, method: str = "auto") -> jax.Array:
+        """End-to-end coded transform of ``x`` under the mesh.
 
-        c: (m, L) replicated message shards; mask: (N,) replicated.
-        Returns this device's (n_local, L) results, zeroed if masked out.
+        ``x``: ``(*B, *input_shape)``; ``mask``: bool ``(*B, N)`` or shared
+        ``(N,)`` worker availability (>= m True per request).  Default: all
+        up.  Returns ``(*B, *output_shape)``.
         """
         plan = self.plan
-        idx = jax.lax.axis_index(self.axis)
-        rows = idx * self.n_local + jnp.arange(self.n_local)
-        g_rows = jnp.take(plan.generator, rows, axis=0)          # (n_local, m)
-        a_local = jnp.einsum("nm,ml->nl", g_rows.astype(c.dtype), c)
-        b_local = plan.worker_fn(a_local)                         # (n_local, L)
-        alive = jnp.take(mask, rows)                              # (n_local,)
-        return jnp.where(alive[:, None], b_local, 0)
-
-    def run(self, x: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
-        """End-to-end coded FFT of ``x`` (length s) under the mesh.
-
-        ``mask``: bool (N,) worker availability (>= m True). Default: all up.
-        """
-        plan = self.plan
+        n, m = plan.n_workers, plan.recovery_threshold
+        shard = tuple(plan.worker_shard_shape)
+        payload = math.prod(shard)
+        batch = batch_shape(x, len(plan.input_shape), "plan input")
         if mask is None:
-            mask = jnp.ones((plan.n_workers,), bool)
+            mask = jnp.ones(batch + (n,), bool)
 
-        from repro.core.interleave import interleave
+        # host-side interleave -> (B, m, payload) flat message symbols
+        c = plan.message(x).reshape((-1, m, payload))
+        nb = c.shape[0]
+        maskf = jnp.broadcast_to(jnp.asarray(mask), batch + (n,)).reshape(nb, n)
+        fill = jnp.asarray(self.masked_fill, c.dtype)
 
-        c = interleave(x.astype(plan.dtype), plan.m)              # (m, L)
-
+        # the worker axis stays LEADING through both shard_map stages: the
+        # all-gather then tiles axis 0, which XLA:CPU's fft thunk tolerates
+        # (gathering a non-leading axis forces a transposed layout onto the
+        # worker FFT and trips its dim0-major RET_CHECK)
         @partial(
             shard_map, mesh=self.mesh,
             in_specs=(P(), P()),
-            out_specs=P(self.axis),
+            out_specs=P(self.axis, None, None),
             check_rep=False,
         )
         def workers(c_rep, mask_rep):
-            return self._worker_body(c_rep, mask_rep)
+            # per-device fused encode+compute: each device forms only its
+            # own coded shards from the replicated message symbols
+            idx = jax.lax.axis_index(self.axis)
+            rows = idx * self.n_local + jnp.arange(self.n_local)
+            g_rows = jnp.take(plan.generator, rows, axis=0)  # (n_local, m)
+            a = jnp.einsum("nm,bmp->nbp", g_rows.astype(c_rep.dtype), c_rep)
+            b = plan.worker_compute(a.reshape((self.n_local, nb) + shard))
+            b = b.reshape(self.n_local, nb, payload)
+            alive = jnp.take(mask_rep, rows, axis=1)          # (nb, n_local)
+            return jnp.where(alive.T[:, :, None], b, fill)
 
-        b = workers(c, mask)                                      # (N, L) sharded
+        b = workers(c, maskf)                                 # (N, nb, payload)
 
         @partial(
             shard_map, mesh=self.mesh,
-            in_specs=(P(self.axis), P()),
+            in_specs=(P(self.axis, None, None), P()),
             out_specs=P(),
             check_rep=False,
         )
         def master(b_local, mask_rep):
             # the paper's fan-in: gather the coded results to the master
             b_all = jax.lax.all_gather(b_local, self.axis, tiled=True)
-            subset = mds.first_available(mask_rep, plan.m)
-            c_hat = mds.decode_from_subset(plan.generator, b_all, subset)
-            return recombine(c_hat, plan.s)
+            b_all = jnp.swapaxes(b_all, 0, 1)                 # (nb, N, payload)
 
-        return master(b, mask)
+            def decode1(bi, mk, mth):
+                subset = mds.first_available(mk, m)
+                c_hat = mds.decode_auto(
+                    plan.generator, bi, subset, method=mth)
+                return plan.postdecode(c_hat.reshape((m,) + shard))
+
+            if nb == 1:
+                # single request: decode_auto's lax.cond stays a real branch
+                return decode1(b_all[0], mask_rep[0], method)[None]
+            # batched: under vmap the cond would select-execute BOTH decode
+            # paths per request -- resolve auto to the solve instead
+            mth = "solve" if method == "auto" else method
+            return jax.vmap(lambda bi, mk: decode1(bi, mk, mth))(
+                b_all, mask_rep)
+
+        out = master(b, maskf)                                # (nb, *out_shape)
+        if not batch:
+            return out[0]
+        return out.reshape(batch + tuple(plan.output_shape))
 
     # ------------------------------------------------------------------
-    def run_sharded(self, x: jax.Array, mask: Optional[jax.Array] = None
-                    ) -> jax.Array:
-        """Optimized pipeline (§Perf cell C): sharded-output decode.
+    def run_sharded(self, x: jax.Array, mask: Optional[jax.Array] = None,
+                    *, method: str = "auto") -> jax.Array:
+        """Optimized 1-D pipeline (§Perf cell C): sharded-output decode.
 
         The baseline ``run`` realizes the paper's master literally: every
         chip all-gathers all N coded results (N/m x s symbols per chip)
@@ -129,12 +163,17 @@ class DistributedCodedFFT:
         recombines locally (twiddles depend on the absolute column index,
         taken from ``axis_index``).
 
-        Returns the Cooley-Tukey output matrix ``Xmat`` of shape
-        ``(m, s/m)``, column-sharded over the worker axis;
-        ``X = Xmat.reshape(s)`` (row-major), since
+        Specific to the 1-D :class:`CodedFFT` layout (column-sharded
+        Cooley-Tukey output); other plans raise.  Returns the output
+        matrix ``Xmat`` of shape ``(m, s/m)``, column-sharded over the
+        worker axis; ``X = Xmat.reshape(s)`` (row-major), since
         ``Xmat[j, i] = X[j*(s/m) + i]``.
         """
         plan = self.plan
+        if not isinstance(plan, CodedFFT):
+            raise NotImplementedError(
+                "run_sharded implements the 1-D Cooley-Tukey output layout; "
+                f"got {type(plan).__name__} -- use run()")
         p_sz = self.mesh.shape[self.axis]
         ell = plan.shard_len
         if ell % p_sz != 0:
@@ -162,14 +201,16 @@ class DistributedCodedFFT:
             a_local = jnp.einsum("lm,nm->nl", xr, g_rows.astype(plan.dtype))
             b_local = plan.worker_fn(a_local)                 # (n_local, L)
             alive = jnp.take(mask_rep, rows)
-            b_local = jnp.where(alive[:, None], b_local, 0)
+            b_local = jnp.where(alive[:, None], b_local,
+                                jnp.asarray(self.masked_fill, plan.dtype))
             # row-shards -> column-shards: THE one collective of the
             # optimized path (s symbols per chip vs N/m x s for all-gather)
             b_cols = jax.lax.all_to_all(
                 b_local, self.axis, split_axis=1, concat_axis=0, tiled=True
             )                                                  # (N, L/P)
             subset = mds.first_available(mask_rep, plan.m)
-            c_cols = mds.decode_from_subset(plan.generator, b_cols, subset)
+            c_cols = mds.decode_auto(
+                plan.generator, b_cols, subset, method=method)
             idx = jax.lax.axis_index(self.axis)
             cols = idx * (ell // p_sz) + jnp.arange(ell // p_sz)
             ki = jnp.outer(jnp.arange(plan.m), cols)
@@ -182,7 +223,12 @@ class DistributedCodedFFT:
     # ------------------------------------------------------------------
     def lower(self, s_dtype=jnp.complex64, *, sharded: bool = False):
         """Lower for compile inspection (collective accounting)."""
-        x = jax.ShapeDtypeStruct((self.plan.s,), s_dtype)
+        x = jax.ShapeDtypeStruct(tuple(self.plan.input_shape), s_dtype)
         mask = jax.ShapeDtypeStruct((self.plan.n_workers,), jnp.bool_)
         fn = self.run_sharded if sharded else self.run
         return jax.jit(fn).lower(x, mask)
+
+
+# The 1-D name the seed exposed; the class has been generic since the
+# CodedPlan refactor, so this is a pure alias.
+DistributedCodedFFT = DistributedCodedPlan

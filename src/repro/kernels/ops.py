@@ -148,9 +148,19 @@ def recombine_fused(c_hat: jax.Array, s: int, *, interpret: bool | None = None):
 
 
 def make_kernel_worker_fn(interpret: bool | None = None):
-    """A ``CodedFFT.worker_fn`` that uses the Pallas four-step kernel."""
+    """A ``CodedFFT.worker_fn`` that uses the Pallas four-step kernel.
+
+    Satisfies the ``CodedPlan`` worker contract: transforms the LAST axis
+    and maps over arbitrary leading axes.  All leading axes -- (workers,),
+    (batch, workers) from the batched service scheduler, or (batch,
+    n_local) under the distributed runtime -- are collapsed into the
+    kernel's single grid dimension, so a bucket of requests costs one
+    Pallas launch instead of one per request.
+    """
 
     def worker_fn(a: jax.Array) -> jax.Array:
-        return fft_fourstep(a, interpret=interpret)
+        lead, ell = a.shape[:-1], a.shape[-1]
+        out = fft_fourstep(a.reshape(-1, ell), interpret=interpret)
+        return out.reshape(lead + (ell,))
 
     return worker_fn

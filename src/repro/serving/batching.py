@@ -1,0 +1,35 @@
+"""Shared request-batching helpers for the serving layer.
+
+Both schedulers (the LM generation engine and the coded-FFT service) pad
+variable request counts into fixed power-of-two buckets so the jitted
+compute functions never retrace on partial batches; finished/padded rows
+are masked rather than blocking the batch.
+"""
+
+from __future__ import annotations
+
+__all__ = ["bucket_size", "pad_requests"]
+
+
+def bucket_size(n: int, cap: int) -> int:
+    """Smallest power-of-two >= ``n``, clamped to ``cap``.
+
+    Keeps the set of compiled batch shapes to O(log cap) per request shape.
+    """
+    if n <= 0:
+        raise ValueError("need at least one request")
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+def pad_requests(requests: list, bucket: int, filler):
+    """Pad ``requests`` to ``bucket`` entries with ``filler()`` copies.
+
+    Returns ``(padded_list, n_live)``.  Raises if the bucket is too small.
+    """
+    n_live = len(requests)
+    if n_live > bucket:
+        raise ValueError(f"{n_live} requests exceed bucket size {bucket}")
+    return list(requests) + [filler() for _ in range(bucket - n_live)], n_live

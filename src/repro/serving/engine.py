@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model_factory import BuiltModel
+from repro.serving.batching import pad_requests
 from repro.serving.serve_step import make_serve_fns, sample_token
 
 __all__ = ["EngineConfig", "GenerationEngine"]
@@ -55,10 +56,8 @@ class GenerationEngine:
                  key: Optional[jax.Array] = None) -> list[list[int]]:
         """Greedy/temperature generation for a batch of prompts."""
         e = self.ecfg
-        assert len(prompts) <= e.batch_size
-        n_live = len(prompts)
         # pad request list to the fixed batch (no retrace on partial batches)
-        prompts = list(prompts) + [[0]] * (e.batch_size - n_live)
+        prompts, n_live = pad_requests(list(prompts), e.batch_size, lambda: [0])
         tokens = jnp.asarray(self._pad_prompts(prompts))
         if key is None:
             key = jax.random.PRNGKey(e.seed)

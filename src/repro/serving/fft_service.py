@@ -1,21 +1,27 @@
 """The paper's own end-to-end application: a straggler-tolerant FFT service.
 
-Clients submit transform requests (1-D vectors, n-D tensors, or multi-input
-bundles); the service executes them under a coded computation plan and
-answers as soon as the fastest ``m`` of ``N`` workers respond.  The
-straggler simulator assigns each worker a shifted-exponential latency per
-request; the service's reported latency is the m-th order statistic --
-benchmarks compare it against waiting for all N (uncoded) and against the
-repetition/short-dot thresholds (paper Remark 4).
+Clients submit transform requests; the service executes them under a coded
+computation plan and answers as soon as the fastest ``m`` of ``N`` workers
+respond.  The straggler simulator assigns each worker a shifted-exponential
+latency per request; the service's reported latency is the m-th order
+statistic -- benchmarks compare it against waiting for all N (uncoded) and
+against the repetition/short-dot thresholds (paper Remark 4).
 
-With a mesh, worker compute runs under ``DistributedCodedFFT`` (shard_map);
-without one, it runs vmapped on the local device with identical semantics.
+The scheduler is batched (DESIGN.md §5): submitted requests are bucketed by
+``(s, m)``, stacked along a leading batch axis, padded to a power-of-two
+bucket size, and pushed through ONE jitted encode -> worker -> decode call
+per bucket with a per-request straggler mask -- master-side work (MDS
+encode/decode, recombine) amortizes across the whole bucket instead of
+being paid per request.  ``submit`` is the batch-of-one special case.
+
+With a mesh, worker compute runs under ``DistributedCodedPlan`` (shard_map,
+batch axis threaded through the collectives); without one, it runs vmapped
+on the local device with identical semantics.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import jax
@@ -25,26 +31,30 @@ from jax.sharding import Mesh
 
 from repro.core.coded_fft import CodedFFT
 from repro.core.strategies import coded_fft_threshold
-from repro.distributed.coded_runtime import DistributedCodedFFT
+from repro.distributed.coded_runtime import DistributedCodedPlan
 from repro.distributed.straggler import StragglerModel, empirical_completion
+from repro.serving.batching import bucket_size
 
 __all__ = ["FFTServiceConfig", "FFTService", "ServiceStats"]
 
 
 @dataclasses.dataclass(frozen=True)
 class FFTServiceConfig:
-    s: int = 4096                 # transform length
+    s: int = 4096                 # default transform length
     m: int = 4                    # storage fraction 1/m
     n_workers: int = 8
     dtype: jnp.dtype = jnp.complex64
     straggler: StragglerModel = StragglerModel(t0=1.0, mu=1.0)
     seed: int = 0
     worker_fn: Optional[object] = None   # kernel plug-in (ops.make_kernel_worker_fn)
+    max_batch: int = 64           # scheduler bucket cap per (s, m)
+    decode_method: str = "auto"   # MDS decode dispatch (DESIGN.md §4)
 
 
 @dataclasses.dataclass
 class ServiceStats:
     requests: int = 0
+    batches: int = 0               # jitted scheduler invocations
     coded_latency: float = 0.0     # sum of m-th order statistics
     uncoded_latency: float = 0.0   # sum of "wait for everyone" latencies
     stragglers_tolerated: int = 0
@@ -53,6 +63,7 @@ class ServiceStats:
         n = max(self.requests, 1)
         return {
             "requests": self.requests,
+            "batches": self.batches,
             "mean_coded_latency": self.coded_latency / n,
             "mean_uncoded_latency": self.uncoded_latency / n,
             "speedup": (self.uncoded_latency / self.coded_latency
@@ -62,44 +73,127 @@ class ServiceStats:
 
 
 class FFTService:
+    """Batched straggler-tolerant FFT frontend over ``CodedPlan`` execution.
+
+    Requests of any length with ``m | s`` are accepted; each distinct
+    ``(s, m)`` gets its own cached plan and jitted bucket executors.
+    """
+
     def __init__(self, cfg: FFTServiceConfig, mesh: Optional[Mesh] = None,
                  axis: str = "workers"):
-        kwargs = {}
-        if cfg.worker_fn is not None:
-            kwargs["worker_fn"] = cfg.worker_fn
-        self.plan = CodedFFT(s=cfg.s, m=cfg.m, n_workers=cfg.n_workers,
-                             dtype=cfg.dtype, **kwargs)
         self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
         self.rng = np.random.default_rng(cfg.seed)
         self.stats = ServiceStats()
-        self.runtime = (DistributedCodedFFT(self.plan, mesh, axis)
-                        if mesh is not None else None)
-        if self.runtime is not None:
-            self._run = jax.jit(self.runtime.run)
-        else:
-            self._run = jax.jit(
-                lambda x, mask: self.plan.run(x, mask=mask))
+        self._plans: dict[tuple[int, int], CodedFFT] = {}
+        self._runtimes: dict[tuple[int, int], DistributedCodedPlan] = {}
+        self._runners: dict[tuple[int, int, int], object] = {}
+        # default-config plan/runtime, kept as attributes for introspection
+        # (and reused by the executor cache for default-length requests)
+        self.plan = self._plan_for(cfg.s)
+        self.runtime = self._runtime_for(cfg.s) if mesh is not None else None
+
+    # -- plan / compiled-executor caches --------------------------------
+    def _plan_for(self, s: int) -> CodedFFT:
+        cfg = self.cfg
+        key = (s, cfg.m)
+        if key not in self._plans:
+            kwargs = {}
+            if cfg.worker_fn is not None:
+                kwargs["worker_fn"] = cfg.worker_fn
+            self._plans[key] = CodedFFT(
+                s=s, m=cfg.m, n_workers=cfg.n_workers, dtype=cfg.dtype,
+                **kwargs)
+        return self._plans[key]
+
+    def _runtime_for(self, s: int) -> DistributedCodedPlan:
+        key = (s, self.cfg.m)
+        if key not in self._runtimes:
+            self._runtimes[key] = DistributedCodedPlan(
+                self._plan_for(s), self.mesh, self.axis)
+        return self._runtimes[key]
+
+    def _runner_for(self, s: int, bucket: int):
+        """One jitted batched encode->worker->decode per (s, m, bucket)."""
+        key = (s, self.cfg.m, bucket)
+        if key not in self._runners:
+            method = self.cfg.decode_method
+            if self.mesh is not None:
+                runtime = self._runtime_for(s)
+                fn = lambda xb, masks: runtime.run(xb, masks, method=method)
+            else:
+                plan = self._plan_for(s)
+                fn = lambda xb, masks: plan.run(xb, mask=masks, method=method)
+            self._runners[key] = jax.jit(fn)
+        return self._runners[key]
 
     # ------------------------------------------------------------------
-    def _simulate_arrivals(self) -> tuple[np.ndarray, np.ndarray]:
-        """Per-worker latencies and the availability mask at decode time."""
+    def _simulate_arrivals(self, n_requests: int
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-request worker latencies + availability masks at decode time."""
         cfg = self.cfg
-        lat = cfg.straggler.sample(cfg.n_workers, 1.0 / cfg.m, self.rng)
-        t_done = empirical_completion(lat, coded_fft_threshold(cfg.n_workers, cfg.m))
-        mask = lat <= t_done
+        k = coded_fft_threshold(cfg.n_workers, cfg.m)
+        lat = np.stack([
+            cfg.straggler.sample(cfg.n_workers, 1.0 / cfg.m, self.rng)
+            for _ in range(n_requests)])
+        t_done = np.sort(lat, axis=-1)[:, k - 1]
+        mask = lat <= t_done[:, None]
         return lat, mask
 
+    def _account(self, lat: np.ndarray, mask: np.ndarray) -> None:
+        cfg = self.cfg
+        k = coded_fft_threshold(cfg.n_workers, cfg.m)
+        for row_lat, row_mask in zip(lat, mask):
+            self.stats.requests += 1
+            self.stats.coded_latency += empirical_completion(row_lat, k)
+            self.stats.uncoded_latency += empirical_completion(
+                row_lat, cfg.n_workers)
+            self.stats.stragglers_tolerated += int((~row_mask).sum())
+
+    # ------------------------------------------------------------------
     def submit(self, x: jax.Array) -> jax.Array:
         """One request: returns F{x}, never waiting for stragglers."""
-        lat, mask = self._simulate_arrivals()
-        k = coded_fft_threshold(self.cfg.n_workers, self.cfg.m)
-        self.stats.requests += 1
-        self.stats.coded_latency += empirical_completion(lat, k)
-        self.stats.uncoded_latency += empirical_completion(lat, self.cfg.n_workers)
-        self.stats.stragglers_tolerated += int((~mask).sum())
-        # straggler rows deliver garbage; decode must ignore them
-        mask_j = jnp.asarray(mask)
-        return self._run(x.astype(self.cfg.dtype), mask_j)
+        return self.submit_batch([x])[0]
 
     def submit_batch(self, xs: Sequence[jax.Array]) -> list[jax.Array]:
-        return [self.submit(x) for x in xs]
+        """Serve a batch of requests, bucketed by transform length.
+
+        Master-side encode/decode for each bucket runs as ONE jitted call
+        over the stacked requests; each request still gets its own
+        simulated straggler pattern, and results come back in submission
+        order.
+        """
+        cfg = self.cfg
+        results: list[Optional[jax.Array]] = [None] * len(xs)
+        by_len: dict[int, list[int]] = {}
+        for i, x in enumerate(xs):
+            by_len.setdefault(int(x.shape[-1]), []).append(i)
+
+        for s, idxs in by_len.items():
+            for start in range(0, len(idxs), cfg.max_batch):
+                chunk = idxs[start:start + cfg.max_batch]
+                self._run_bucket(s, chunk, xs, results)
+        return results  # type: ignore[return-value]
+
+    def _run_bucket(self, s: int, idxs: list[int], xs, results) -> None:
+        cfg = self.cfg
+        n_live = len(idxs)
+        bucket = bucket_size(n_live, cfg.max_batch)
+        lat, mask = self._simulate_arrivals(n_live)
+        self._account(lat, mask)
+        self.stats.batches += 1
+
+        # allocate in the service dtype (NOT the first request's dtype --
+        # a real-valued request must not narrow the whole bucket's buffer)
+        xb = np.zeros((bucket, s), dtype=np.dtype(self.cfg.dtype))
+        for row, i in enumerate(idxs):
+            xb[row] = np.asarray(xs[i])
+        # padded rows: every worker "responds" so decode stays well-posed
+        masks = np.ones((bucket, cfg.n_workers), bool)
+        masks[:n_live] = mask
+
+        out = self._runner_for(s, bucket)(
+            jnp.asarray(xb, cfg.dtype), jnp.asarray(masks))
+        for row, i in enumerate(idxs):
+            results[i] = out[row]

@@ -4,8 +4,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.configs import ShapeConfig, get_reduced_config
 from repro.core.coded_fft import CodedFFT

@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import CodedFFT, mds
 from repro.kernels import (

@@ -1,0 +1,279 @@
+"""CodedPlan protocol: conformance, batched shapes, fast decode dispatch,
+batched service scheduler, and the generalized n-D distributed runtime."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CodedFFT,
+    CodedFFTMultiInput,
+    CodedFFTND,
+    CodedPlan,
+    MDSPlan,
+    UncodedRepetitionFFT,
+    mds,
+)
+
+C128 = jnp.complex128
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) + 1j * rng.normal(size=shape))
+
+
+def _plans():
+    return [
+        CodedFFT(s=64, m=4, n_workers=6, dtype=C128),
+        CodedFFTND(shape=(8, 8), factors=(2, 2), n_workers=6, dtype=C128),
+        CodedFFTMultiInput(q=4, shape=(8,), m_tilde=2, factors=(2,),
+                           n_workers=6, dtype=C128),
+        UncodedRepetitionFFT(s=64, m=2, n_workers=8, dtype=C128),
+    ]
+
+
+# ---------------- protocol conformance ---------------------------------------
+def test_all_four_strategies_satisfy_coded_plan():
+    for plan in _plans():
+        assert isinstance(plan, CodedPlan), type(plan).__name__
+        assert plan.recovery_threshold >= 1
+        assert len(plan.worker_shard_shape) >= 1
+
+
+def test_mds_plans_expose_message_postdecode():
+    for plan in _plans()[:3]:
+        assert isinstance(plan, MDSPlan), type(plan).__name__
+        x = _rand(plan.input_shape, seed=1)
+        c = plan.message(x)
+        assert c.shape == (plan.m,) + tuple(plan.worker_shard_shape)
+        # encode == DFT of the message symbols, decode o postdecode inverts
+        np.testing.assert_allclose(
+            np.asarray(plan.encode(x)),
+            np.asarray(mds.encode_dft(c, plan.n_workers)), atol=1e-9)
+    # repetition is deliberately NOT an MDS plan
+    assert not isinstance(_plans()[3], MDSPlan)
+
+
+def test_dense_and_dft_encode_agree():
+    for plan in _plans()[:3]:
+        x = _rand(plan.input_shape, seed=2)
+        np.testing.assert_allclose(
+            np.asarray(plan.encode(x)), np.asarray(plan.encode_dense(x)),
+            atol=1e-9)
+
+
+# ---------------- batched shapes == per-request oracle -----------------------
+@pytest.mark.parametrize("plan_idx", [0, 1, 2, 3])
+def test_batched_run_equals_per_request(plan_idx):
+    plan = _plans()[plan_idx]
+    nb = 3
+    xb = _rand((nb,) + tuple(plan.input_shape), seed=plan_idx)
+    a = plan.encode(xb)
+    assert a.shape == (nb, plan.n_workers) + tuple(plan.worker_shard_shape)
+    b = plan.worker_compute(a)
+    assert b.shape == a.shape
+    out = plan.decode(b)
+    assert out.shape == (nb,) + tuple(plan.output_shape)
+    for i in range(nb):
+        one = plan.run(xb[i])
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(one),
+                                   atol=1e-8)
+
+
+def test_batched_decode_per_request_masks():
+    plan = CodedFFT(s=48, m=4, n_workers=8, dtype=C128)
+    xb = _rand((3, 48), seed=7)
+    masks = jnp.asarray([
+        [True] * 8,
+        [False, True, False, True, True, False, True, False],
+        [True, True, False, False, True, True, False, False],
+    ])
+    b = plan.worker_compute(plan.encode(xb))
+    # stragglers return NaN garbage; per-request masks must shield decode
+    nan_rows = jnp.where(masks[:, :, None], b, jnp.nan)
+    out = plan.decode(nan_rows, mask=masks)
+    want = jnp.fft.fft(xb, axis=-1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-8)
+    # and per-request results equal the unbatched oracle
+    for i in range(3):
+        one = plan.decode(nan_rows[i], mask=masks[i])
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(one),
+                                   atol=1e-10)
+
+
+# ---------------- decode_ifft == Vandermonde solve ---------------------------
+@pytest.mark.parametrize("n,m", [(3, 2), (8, 4), (12, 8), (16, 16), (9, 1)])
+def test_decode_ifft_matches_solve_on_contiguous_subsets(n, m):
+    g = mds.rs_generator(n, m, C128)
+    c = _rand((m, 6), seed=n * m)
+    b = mds.encode(g, c)
+    for start in range(n):  # every rotation, including mod-n wraparound
+        sub = jnp.asarray([(start + j) % n for j in range(m)])
+        fast = mds.decode_ifft(b, sub, n)
+        dense = mds.decode_from_subset(g, b, sub)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(dense),
+                                   atol=1e-8)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(c), atol=1e-8)
+
+
+def test_decode_auto_dispatch_static_and_traced():
+    n, m = 10, 4
+    g = mds.rs_generator(n, m, C128)
+    c = _rand((m, 5), seed=3)
+    b = mds.encode(g, c)
+    assert mds.is_contiguous_subset(np.asarray([7, 8, 9, 0]), n)
+    assert not mds.is_contiguous_subset(np.asarray([0, 2, 4, 6]), n)
+    for sub in ([3, 4, 5, 6], [7, 8, 9, 0], [0, 2, 4, 6], [9, 1, 5, 2]):
+        sub = jnp.asarray(sub)
+        got = mds.decode_auto(g, b, sub)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(c), atol=1e-8)
+        # traced subset -> lax.cond dispatch inside jit
+        got_j = jax.jit(lambda bb, ss: mds.decode_auto(g, bb, ss))(b, sub)
+        np.testing.assert_allclose(np.asarray(got_j), np.asarray(c), atol=1e-8)
+
+
+def test_decode_ifft_full_set_exact_at_large_m():
+    """m == N is the literal inverse zero-padded DFT: stable at any size."""
+    for m in (64, 256, 1024):
+        g = mds.rs_generator(m, m, C128)
+        c = _rand((m, 4), seed=m)
+        b = mds.encode_dft(c, m)
+        got = mds.decode_ifft(b, jnp.arange(m), m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(c), atol=1e-9)
+        # auto routes the full set to the transform decode at any m
+        auto = mds.decode_auto(g, b, jnp.arange(m))
+        np.testing.assert_allclose(np.asarray(auto), np.asarray(c), atol=1e-9)
+
+
+def test_decode_auto_gates_large_m_contiguous_to_solve():
+    """Contiguous arcs are intrinsically ill-conditioned beyond small m;
+    auto must NOT route them to the Lagrange transform decode (regression:
+    CodedFFT(s=1024, m=16, n_workers=32).run() silently returned garbage)."""
+    n, m = 32, 16
+    g = mds.rs_generator(n, m, C128)
+    c = _rand((m, 5), seed=42)
+    b = mds.encode(g, c)
+    sub = jnp.arange(m)  # contiguous, m > IFFT_AUTO_MAX_M
+    auto = mds.decode_auto(g, b, sub)
+    dense = mds.decode_from_subset(g, b, sub)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(dense), atol=0)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(c), atol=1e-6)
+    # end to end: the exact scenario from the regression
+    plan = CodedFFT(s=1024, m=16, n_workers=32, dtype=C128)
+    x = _rand(1024, seed=9)
+    err = float(jnp.max(jnp.abs(plan.run(x) - jnp.fft.fft(x))))
+    assert err < 1e-5, err
+
+
+def test_plan_decode_method_forcing():
+    plan = CodedFFT(s=96, m=4, n_workers=8, dtype=C128)
+    x = _rand(96, seed=11)
+    b = plan.worker_compute(plan.encode(x))
+    want = jnp.fft.fft(x)
+    for method in ("auto", "ifft", "solve"):
+        got = plan.decode(b, subset=jnp.asarray([2, 3, 4, 5]), method=method)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-8)
+
+
+# ---------------- batched service == oracle ----------------------------------
+def test_service_batched_submit_matches_oracle():
+    from repro.distributed.straggler import StragglerModel
+    from repro.serving import FFTService, FFTServiceConfig
+
+    svc = FFTService(FFTServiceConfig(
+        s=256, m=4, n_workers=8,
+        straggler=StragglerModel(t0=1.0, mu=1.0), seed=5))
+    rng = np.random.default_rng(1)
+    sizes = [256, 128, 256, 256, 128, 256, 256]  # two (s, m) buckets
+    xs = [jnp.asarray((rng.normal(size=s) + 1j * rng.normal(size=s))
+                      .astype(np.complex64)) for s in sizes]
+    outs = svc.submit_batch(xs)
+    for x, y in zip(xs, outs):
+        err = float(jnp.max(jnp.abs(y - jnp.fft.fft(x))))
+        assert err < 1e-2, err
+    st = svc.stats.summary()
+    assert st["requests"] == len(sizes)
+    assert st["batches"] == 2  # one jitted call per (s, m) bucket
+    assert st["stragglers_tolerated"] == len(sizes) * 4  # waits for m of N
+    # batch-of-one path shares the same compiled stack
+    y = svc.submit(xs[0])
+    assert float(jnp.max(jnp.abs(y - jnp.fft.fft(xs[0])))) < 1e-2
+
+
+def test_service_bucket_keeps_service_dtype():
+    """A real-valued request first in a bucket must not narrow the buffer
+    and silently drop a complex request's imaginary part (regression)."""
+    from repro.serving import FFTService, FFTServiceConfig
+
+    svc = FFTService(FFTServiceConfig(s=64, m=4, n_workers=8, seed=0))
+    rng = np.random.default_rng(0)
+    xr = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    xc = jnp.asarray((rng.normal(size=64) + 1j * rng.normal(size=64))
+                     .astype(np.complex64))
+    outs = svc.submit_batch([xr, xc])
+    for x, y in zip([xr, xc], outs):
+        err = float(jnp.max(jnp.abs(y - jnp.fft.fft(x.astype(jnp.complex64)))))
+        assert err < 1e-3, err
+
+
+# ---------------- generalized distributed runtime (n-D, NaN stragglers) ------
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import CodedFFTND, CodedFFTMultiInput
+from repro.distributed import DistributedCodedPlan, test_mesh
+
+mesh = test_mesh((8,), ("workers",))
+rng = np.random.default_rng(0)
+
+# n-D plan under the generalized runtime; stragglers poisoned with NaN to
+# prove the decode never reads masked rows
+plan = CodedFFTND(shape=(16, 8), factors=(2, 2), n_workers=8, dtype=jnp.complex128)
+d = DistributedCodedPlan(plan, mesh, masked_fill=float("nan"))
+t = jnp.asarray(rng.normal(size=(16, 8)) + 1j * rng.normal(size=(16, 8)))
+mask = jnp.asarray([True, False, True, True, False, True, False, True])
+out = d.run(t, mask)
+err = float(jnp.max(jnp.abs(out - jnp.fft.fftn(t))))
+assert err < 1e-8, f"nd masked decode err {err}"
+
+# batched n-D with per-request masks
+tb = jnp.asarray(rng.normal(size=(3, 16, 8)) + 1j * rng.normal(size=(3, 16, 8)))
+masks = jnp.asarray([[True]*8,
+                     [False, True, False, True, True, False, True, False],
+                     [True, True, True, True, False, False, False, False]])
+outb = d.run(tb, masks)
+errb = float(jnp.max(jnp.abs(outb - jnp.fft.fftn(tb, axes=(-2, -1)))))
+assert errb < 1e-8, f"batched nd err {errb}"
+
+# multi-input plan through the same runtime
+pmi = CodedFFTMultiInput(q=4, shape=(8,), m_tilde=2, factors=(2,), n_workers=8,
+                         dtype=jnp.complex128)
+dmi = DistributedCodedPlan(pmi, mesh, masked_fill=float("nan"))
+tq = jnp.asarray(rng.normal(size=(4, 8)) + 1j * rng.normal(size=(4, 8)))
+got = dmi.run(tq, mask)
+want = jnp.stack([jnp.fft.fft(tq[h]) for h in range(4)])
+errq = float(jnp.max(jnp.abs(got - want)))
+assert errq < 1e-8, f"multi-input err {errq}"
+print("SUBPROC_PLAN_OK")
+"""
+
+
+@pytest.mark.slow
+def test_generalized_distributed_runtime_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], cwd=os.getcwd(),
+                       capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SUBPROC_PLAN_OK" in r.stdout

@@ -43,7 +43,7 @@ def test_repetition_with_stragglers():
     strat = UncodedRepetitionFFT(s=32, m=2, n_workers=8, dtype=C128)
     mask = np.ones(8, bool)
     mask[[0, 5]] = False  # blocks (0,0) and (0,1) still covered by replicas
-    got = strat.run(x, mask)
+    got = strat.run(x, mask=mask)
     np.testing.assert_allclose(np.asarray(got), np.fft.fft(np.asarray(x)), atol=1e-8)
 
 
@@ -63,7 +63,7 @@ def test_repetition_missing_block_fails():
     mask[[0, 4]] = False  # both replicas of block (0,0) dead
     assert not strat.decodable(mask)
     with pytest.raises(ValueError):
-        strat.run(x, mask)
+        strat.run(x, mask=mask)
 
 
 def test_coded_fft_empirical_threshold_beats_baselines():
