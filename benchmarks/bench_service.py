@@ -93,6 +93,17 @@ def run() -> list[str]:
     }
     # anchor to the repo root so the tracked artifact updates regardless of cwd
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_service.json"
+    # append to the perf trajectory rather than overwrite: the previous runs
+    # move into "history" (oldest first), the current run stays top-level
+    history: list = []
+    if out_path.exists():
+        try:
+            prev = json.loads(out_path.read_text())
+            history = prev.pop("history", [])
+            history.append(prev)
+        except (json.JSONDecodeError, AttributeError):
+            pass
+    result["history"] = history
     out_path.write_text(json.dumps(result, indent=2) + "\n")
     lines.append(
         f"  batched scheduler: {n_req} reqs in {dt_bat * 1e3:.1f} ms "

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +31,7 @@ from repro.core.interleave import interleave, interleave_nd
 from repro.core.plan import MDSPlanBase
 from repro.core import mds
 from repro.core.recombine import recombine, recombine_nd
+from repro.kernels import ops
 
 __all__ = ["CodedFFT", "CodedFFTND", "plan_factors"]
 
@@ -49,16 +50,20 @@ class CodedFFT(MDSPlanBase):
       m: storage fraction parameter -- each worker stores/processes s/m.
       n_workers: N >= m workers.
       dtype: complex dtype of the computation.
-      worker_fn: the per-worker DFT implementation; must transform the LAST
-        axis and map over arbitrary leading axes (default: jnp.fft; the
-        Pallas four-step kernel plugs in here).
+      worker_fn: explicit per-worker DFT plug-in; must transform the LAST
+        axis and map over arbitrary leading axes.  ``None`` (default)
+        dispatches on ``backend``: the Pallas four-step kernel for
+        complex64 plans, jnp.fft otherwise.
+      backend: ``"kernel"`` (default) or ``"reference"`` -- see
+        ``MDSPlanBase.resolved_backend`` for the dispatch rules.
     """
 
     s: int
     m: int
     n_workers: int
     dtype: jnp.dtype = jnp.complex64
-    worker_fn: Callable[[jax.Array], jax.Array] = _default_fft
+    worker_fn: Optional[Callable[[jax.Array], jax.Array]] = None
+    backend: str = "kernel"
 
     def __post_init__(self):
         if self.s % self.m != 0:
@@ -106,9 +111,18 @@ class CodedFFT(MDSPlanBase):
         return self.encode(x)
 
     # -- stage 3: worker computation -----------------------------------------
+    @property
+    def resolved_worker_fn(self) -> Callable[[jax.Array], jax.Array]:
+        """The active worker: explicit plug-in > kernel backend > jnp."""
+        if self.worker_fn is not None:
+            return self.worker_fn
+        if self.resolved_backend == "kernel":
+            return ops.make_kernel_worker_fn()
+        return _default_fft
+
     def worker_compute(self, a: jax.Array) -> jax.Array:
         """Each worker FFTs its own coded shard; any leading axes allowed."""
-        return self.worker_fn(a)
+        return self.resolved_worker_fn(a)
 
 
 def plan_factors(shape: tuple[int, ...], m: int) -> tuple[int, ...]:
@@ -153,6 +167,7 @@ class CodedFFTND(MDSPlanBase):
     factors: tuple[int, ...]
     n_workers: int
     dtype: jnp.dtype = jnp.complex64
+    backend: str = "kernel"
 
     def __post_init__(self):
         for sk, mk in zip(self.shape, self.factors):
@@ -197,5 +212,4 @@ class CodedFFTND(MDSPlanBase):
 
     def worker_compute(self, a: jax.Array) -> jax.Array:
         """n-D FFT of each coded tensor over the trailing shard axes."""
-        axes = tuple(range(-len(self.shape), 0))
-        return jnp.fft.fftn(a, axes=axes)
+        return self._fftn_worker(a, len(self.shape))

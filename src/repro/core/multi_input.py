@@ -38,6 +38,7 @@ class CodedFFTMultiInput(MDSPlanBase):
     factors: tuple[int, ...]
     n_workers: int
     dtype: jnp.dtype = jnp.complex64
+    backend: str = "kernel"
 
     def __post_init__(self):
         if self.q % self.m_tilde != 0:
@@ -109,5 +110,4 @@ class CodedFFTMultiInput(MDSPlanBase):
 
     def worker_compute(self, a: jax.Array) -> jax.Array:
         """n-D FFT of every coded tensor over the trailing spatial axes."""
-        axes = tuple(range(-len(self.shape), 0))
-        return jnp.fft.fftn(a, axes=axes)
+        return self._fftn_worker(a, len(self.shape))

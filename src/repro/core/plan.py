@@ -28,12 +28,14 @@ executors can fuse them per device (DESIGN.md §3):
 
 from __future__ import annotations
 
+import math
 from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import mds
+from repro.kernels import ops
 
 __all__ = ["CodedPlan", "MDSPlan", "MDSPlanBase", "batch_shape"]
 
@@ -94,9 +96,22 @@ class MDSPlan(CodedPlan, Protocol):
 class MDSPlanBase:
     """Shared batched encode/decode/run for MDS-coded strategies.
 
-    Subclasses provide the dataclass fields (``n_workers``, ``dtype``, ...),
-    the ``m`` / ``generator`` / shape properties, the unbatched stage cores
-    ``_message1`` / ``_postdecode1``, and a trailing-axes ``worker_compute``.
+    Subclasses provide the dataclass fields (``n_workers``, ``dtype``, ...,
+    and ``backend``), the ``m`` / ``generator`` / shape properties, the
+    unbatched stage cores ``_message1`` / ``_postdecode1``, and a
+    trailing-axes ``worker_compute``.
+
+    Backend dispatch (DESIGN.md §6): plans are constructed with
+    ``backend="kernel"`` by default, which routes encode / worker /
+    decode-apply through the Pallas kernel stack (interpret mode off-TPU).
+    The rules:
+
+    * kernels compute in f32 planes, so only ``complex64`` plans resolve to
+      the kernel backend -- ``complex128`` (the numerics/reference tier)
+      always resolves to the jnp oracle;
+    * ``backend="reference"`` forces the jnp path at any dtype;
+    * vmapped per-request decode keeps the jnp solve (the batched service
+      decodes through its own decode-matrix cache instead, §6).
     """
 
     # -- stage cores supplied by the concrete plan ---------------------------
@@ -105,6 +120,23 @@ class MDSPlanBase:
 
     def _postdecode1(self, c_hat: jax.Array) -> jax.Array:
         raise NotImplementedError
+
+    # -- backend dispatch ----------------------------------------------------
+    @property
+    def resolved_backend(self) -> str:
+        """The execution engine this plan actually runs on: ``"kernel"``
+        only when requested AND the dtype is kernel-eligible (c64)."""
+        backend = getattr(self, "backend", "reference")
+        if backend == "kernel" and ops.kernel_backend_supported(self.dtype):
+            return "kernel"
+        return "reference"
+
+    def _fftn_worker(self, a: jax.Array, nd: int) -> jax.Array:
+        """Backend-dispatched n-D FFT over the trailing ``nd`` axes --
+        the shared worker body of the n-D and multi-input plans."""
+        if self.resolved_backend == "kernel":
+            return ops.make_kernel_fftn_fn(nd)(a)
+        return jnp.fft.fftn(a, axes=tuple(range(-nd, 0)))
 
     # -- batch plumbing ------------------------------------------------------
     def _map_batched(self, fn, arr: jax.Array, core_ndim: int, what: str):
@@ -122,7 +154,24 @@ class MDSPlanBase:
             self._message1, x, len(self.input_shape), "plan input")
 
     def encode(self, x: jax.Array) -> jax.Array:
-        """Input -> coded worker shards via the O(N log N) DFT encode."""
+        """Input -> coded worker shards.
+
+        Reference backend: the O(N log N) zero-padded DFT encode.  Kernel
+        backend: ONE Pallas ``G @ c`` matmul with the whole batch folded
+        into the payload columns (no vmap-over-pallas, one launch per
+        batch).
+        """
+        if self.resolved_backend == "kernel":
+            c = self.message(x)                       # (*B, m, *shard)
+            shard = tuple(self.worker_shard_shape)
+            batch = c.shape[:c.ndim - 1 - len(shard)]
+            payload = math.prod(shard) if shard else 1
+            flat = c.reshape((-1, self.m, payload))
+            folded = jnp.swapaxes(flat, 0, 1).reshape(self.m, -1)
+            coded = ops.mds_apply(self.generator, folded)
+            out = jnp.swapaxes(
+                coded.reshape(self.n_workers, flat.shape[0], payload), 0, 1)
+            return out.reshape(batch + (self.n_workers,) + shard)
         return self._map_batched(
             self._encode1, x, len(self.input_shape), "plan input")
 
@@ -160,11 +209,13 @@ class MDSPlanBase:
         m = self.m
         core = 1 + len(self.worker_shard_shape)
         batch = batch_shape(b, core, "worker results")
+        use_kernel = self.resolved_backend == "kernel"
         if not batch:
             if subset is None:
                 subset = (mds.first_available(jnp.asarray(mask), m)
                           if mask is not None else jnp.arange(m))
-            return self._decode1(b, jnp.asarray(subset), method)
+            return self._decode1(b, jnp.asarray(subset), method,
+                                 use_kernel=use_kernel)
 
         flat = b.reshape((-1,) + b.shape[len(batch):])
         nb = flat.shape[0]
@@ -175,7 +226,8 @@ class MDSPlanBase:
                 subset = (mds.first_available(
                     jnp.asarray(mask).reshape(-1)[-self.n_workers:], m)
                     if mask is not None else jnp.arange(m))
-            out = self._decode1(flat[0], jnp.asarray(subset).reshape(m), method)
+            out = self._decode1(flat[0], jnp.asarray(subset).reshape(m),
+                                method, use_kernel=use_kernel)
             return out.reshape(batch + out.shape)
         # per-request subsets are traced under vmap, where decode_auto's
         # lax.cond would lower to a select that EXECUTES both decode paths
@@ -203,7 +255,18 @@ class MDSPlanBase:
                 flat, subsets)
         return out.reshape(batch + out.shape[1:])
 
-    def _decode1(self, b: jax.Array, subset: jax.Array, method: str) -> jax.Array:
+    def _decode1(self, b: jax.Array, subset: jax.Array, method: str,
+                 *, use_kernel: bool = False) -> jax.Array:
+        if use_kernel and method == "auto":
+            # kernel backend: decode-apply as an MXU matmul -- invert the
+            # subset generator once (payload-independent) and stream the
+            # responder rows through the Pallas cmatmul.  Rows outside the
+            # subset are never read (straggler garbage stays out).
+            rows = jnp.take(b, subset, axis=0)
+            dmat = mds.subset_decode_matrix(
+                self.generator, subset).astype(self.dtype)
+            c_hat = ops.mds_apply(dmat, rows)
+            return self._postdecode1(c_hat)
         c_hat = mds.decode_auto(self.generator, b, subset, method=method)
         return self._postdecode1(c_hat)
 

@@ -9,8 +9,9 @@ The paper's master/worker topology mapped to SPMD (DESIGN.md §3):
   :class:`repro.core.plan.MDSPlan` -- 1-D, n-D, multi-input.
 * **worker compute** -- per-device transform of its own shards, the hot
   loop.  ``plan.worker_compute`` acts on trailing shard axes, so the
-  (batch, n_local) leading layout maps through unchanged.  On TPU this is
-  the Pallas four-step kernel; on CPU the jnp oracle.
+  (batch, n_local) leading layout maps through unchanged.  Complex64 plans
+  dispatch to the Pallas four-step kernel by default (interpret mode
+  off-TPU, DESIGN.md §6); complex128 plans run the jnp oracle.
 * **straggler mask** -- an explicit boolean input, per request when the
   input carries a batch axis.  In production the launcher populates it from
   collective timeouts; in tests/benchmarks the straggler simulator does.
@@ -199,7 +200,7 @@ class DistributedCodedPlan:
             g_rows = jnp.take(plan.generator, rows, axis=0)   # (n_local, m)
             xr = x_rep.astype(plan.dtype).reshape(ell, plan.m)
             a_local = jnp.einsum("lm,nm->nl", xr, g_rows.astype(plan.dtype))
-            b_local = plan.worker_fn(a_local)                 # (n_local, L)
+            b_local = plan.resolved_worker_fn(a_local)        # (n_local, L)
             alive = jnp.take(mask_rep, rows)
             b_local = jnp.where(alive[:, None], b_local,
                                 jnp.asarray(self.masked_fill, plan.dtype))

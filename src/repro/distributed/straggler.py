@@ -35,9 +35,13 @@ class StragglerModel:
     t0: float = 1.0      # deterministic seconds per unit workload
     mu: float = 1.0      # exponential rate of the tail
 
-    def sample(self, n: int, workload: float, rng: np.random.Generator
+    def sample(self, n, workload: float, rng: np.random.Generator
                ) -> np.ndarray:
-        """Finish times of n workers each processing ``workload`` units."""
+        """Finish times of workers each processing ``workload`` units.
+
+        ``n``: worker count or a shape tuple (e.g. ``(requests, workers)``
+        for one vectorized draw per scheduler bucket).
+        """
         return workload * (self.t0 + rng.exponential(1.0 / self.mu, size=n))
 
     def expected_kth(self, n: int, k: int, workload: float) -> float:

@@ -1,33 +1,54 @@
 """Pallas TPU kernels for the framework's hot spots.
 
-Four kernels (see DESIGN.md §3 for the TPU adaptation rationale):
+The kernel stack is the DEFAULT execution engine for complex64 MDS plans
+(DESIGN.md §6); the jnp oracle path is the reference/escape hatch.
 
-* ``fourstep_fft`` -- the per-worker DFT as two MXU matmuls + twiddle;
-* ``cmatmul``      -- planar complex matmul for MDS encode/decode-apply;
-* ``recombine``    -- fused twiddle + length-m DFT for the master;
-* ``wkv``          -- RWKV-6 recurrence with the (K x V) state resident in
-                      VMEM across the sequential time grid (the HBM-floor
-                      answer to §Perf cell B's elementwise-bound knee).
+Kernels (see DESIGN.md §3/§6 for the TPU adaptation rationale):
 
-``ops`` holds the jit'd complex-in/complex-out wrappers; ``ref`` the
-pure-jnp oracles used by the allclose sweeps in tests/test_kernels.py
-and tests/test_wkv_kernel.py.
+* ``fourstep_fft``        -- the per-worker DFT as two MXU matmuls +
+                             twiddle, batch-blocked;
+* ``encode_fourstep_fused`` -- MDS encode folded into the four-step
+                             stage-1 matmul: message shards transform in
+                             VMEM and coded shards never round-trip HBM;
+* ``cmatmul``/``bcmatmul`` -- planar complex matmul for MDS encode and
+                             per-request decode-matrix apply;
+* ``recombine``           -- fused twiddle + length-m DFT for the master,
+                             single and bucket-batched;
+* ``wkv``                 -- RWKV-6 recurrence with the (K x V) state
+                             resident in VMEM across the time grid.
+
+``ops`` is the backend-dispatch layer (complex/planar wrappers, block
+policies, interpret-mode grid collapse); ``ref`` holds the pure-jnp
+oracles used by the allclose sweeps in tests/test_kernels.py,
+tests/test_kernel_pipeline.py and tests/test_wkv_kernel.py.
 """
 
 from repro.kernels.ops import (
+    decode_apply,
+    encode_worker,
     fft_fourstep,
+    fourstep_planar,
+    kernel_backend_supported,
+    make_kernel_fftn_fn,
     make_kernel_worker_fn,
     mds_apply,
     recombine_fused,
+    recombine_planar,
     split_factor,
 )
 from repro.kernels.wkv import wkv_pallas
 
 __all__ = [
+    "decode_apply",
+    "encode_worker",
     "fft_fourstep",
+    "fourstep_planar",
+    "kernel_backend_supported",
+    "make_kernel_fftn_fn",
     "make_kernel_worker_fn",
     "mds_apply",
     "recombine_fused",
+    "recombine_planar",
     "split_factor",
     "wkv_pallas",
 ]

@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: the WHOLE coded-FFT bucket in one launch.
+
+The batched service hot path (DESIGN.md §5/§6) is, per request,
+
+    interleave -> MDS encode -> worker DFT -> MDS decode -> recombine
+
+and every stage is either a (shared-matrix) matmul, a batched matmul
+against per-request decode matrices, or an elementwise twiddle.  For
+bucket shapes that fit VMEM there is no reason for ANY intermediate to
+touch HBM: this kernel runs the full pipeline per batch block --
+
+    c   = interleave(x)                       (pure relabeling, free)
+    t   = ((F_A @ c) * W) @ F_B               (four-step worker DFT of the
+                                               m MESSAGE shards)
+    b   = G @ t                               (MDS encode; commutes with
+                                               the DFT, N/m flop saving)
+    c^  = D_q @ b                             (per-request scatter decode
+                                               matrices, stragglers = zero
+                                               columns)
+    X   = F_m @ (c^ * W_s)                    (recombine butterfly)
+
+-- six MXU contractions and two VPU twiddles per block, one HBM read of
+the requests and one HBM write of the spectra.  Off-TPU the ops layer
+collapses the batch into a single grid step, so the interpret-mode
+lowering is one straight-line XLA program (this is what makes the fused
+kernel the fastest CPU path as well, see BENCH_kernels.json).
+
+Stage-level kernels (fourstep_fft.py, cmatmul.py, recombine.py) remain the
+fallback for bucket shapes whose working set exceeds VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.cmatmul import bcmatmul_body, cmatmul_body
+from repro.kernels.fourstep_fft import encode_fourstep_body
+
+__all__ = ["bucket_body", "bucket_body_fftworker", "coded_fft_bucket"]
+
+
+def bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                twr, twi, fmr, fmi):
+    """The full pipeline on one (bq, s) block of requests.
+
+    Shared between the Pallas kernel (one block per grid step, everything
+    VMEM-resident) and the off-TPU direct path (full batch as straight
+    XLA, DESIGN.md §6).  Stages 1-4 are :func:`encode_fourstep_body`.
+
+    Layout note: the four-step DFT produces shard spectra in the scrambled
+    order ``B_k[c + d*A] = out[k, c, d]``.  Decode only mixes the shard
+    axis, so the scrambled payload order is carried THROUGH the decode and
+    undone by the single output transpose at the end -- ``twr/twi`` must be
+    the recombine twiddle pre-permuted to that order (``ops`` builds it),
+    which saves the largest intermediate copy (the (bq, N, L) unscramble).
+    """
+    bq, s = xr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    ell = a * b
+    # interleave: c_i[j] = x[i + j*m] -- a relabeling, stays in VMEM
+    cr = jnp.transpose(xr.reshape(bq, ell, m), (0, 2, 1)).reshape(bq, m, a, b)
+    ci = jnp.transpose(xi.reshape(bq, ell, m), (0, 2, 1)).reshape(bq, m, a, b)
+    # stages 1-4: fused four-step DFT + MDS encode -> (bq, n, a, b)
+    er, ei = encode_fourstep_body(
+        cr, ci, gr, gi, far, fai, wr, wi, fbr, fbi)
+    # stage 5: per-request decode matrices (batched contraction over N) --
+    # payload stays in scrambled (c, d) order, decode never reads it
+    hr, hi = bcmatmul_body(dr, di, er.reshape(bq, n, ell),
+                           ei.reshape(bq, n, ell))
+    # stage 6: recombine twiddle (pre-scrambled) + length-m DFT
+    twr = twr[None]
+    twi = twi[None]
+    ur = hr * twr - hi * twi
+    ui = hr * twi + hi * twr
+    ur = jnp.transpose(ur, (1, 0, 2)).reshape(m, bq * ell)
+    ui = jnp.transpose(ui, (1, 0, 2)).reshape(m, bq * ell)
+    outr, outi = cmatmul_body(fmr, fmi, ur, ui)
+    # output + unscramble in ONE transpose: X_q[j*L + c + d*A] lives at
+    # out[j, q, c, d] -> (q, j, d, c)
+    outr = outr.reshape(m, bq, a, b).transpose(1, 0, 3, 2).reshape(bq, s)
+    outi = outi.reshape(m, bq, a, b).transpose(1, 0, 3, 2).reshape(bq, s)
+    return outr, outi
+
+
+def bucket_body_fftworker(xr, xi, dvr, dvi, subsets, gr, gi,
+                          twr, twi, fmr, fmi):
+    """Direct-mode (off-TPU) bucket pipeline.
+
+    Identical stage structure to :func:`bucket_body` -- planar ingress,
+    fused encode-after-transform on the m MESSAGE shards, per-request
+    decode matrices, fused recombine -- with two platform-appropriate
+    lowerings the Mosaic kernel cannot express:
+
+    * the worker DFT runs on the host FFT (``jnp.fft``) instead of the
+      four-step matmul factorization, which trades ~2x the flops for MXU
+      shape on TPU but has no business on CPU scalar units;
+    * decode gathers the m responder rows (``subsets``) and applies the
+      COMPACT ``(m, m)`` inverses ``dvr/dvi`` -- dynamic gathers are cheap
+      here and halve the decode contraction vs the scatter form.
+
+    On TPU the Pallas bucket kernel above runs instead (DESIGN.md §6).
+    """
+    bq, s = xr.shape
+    n, m = gr.shape
+    ell = s // m
+    # interleave on planes: c_i[j] = x[i + j*m]
+    cr = jnp.transpose(xr.reshape(bq, ell, m), (0, 2, 1))
+    ci = jnp.transpose(xi.reshape(bq, ell, m), (0, 2, 1))
+    # worker DFT of the m message shards (linear -> commutes with encode)
+    spec = jnp.fft.fft(cr + 1j * ci, axis=-1)
+    sr = jnp.real(spec).astype(xr.dtype)
+    si = jnp.imag(spec).astype(xr.dtype)
+    # MDS encode: one shared matmul, batch folded into the columns
+    tr = jnp.transpose(sr, (1, 0, 2)).reshape(m, bq * ell)
+    ti = jnp.transpose(si, (1, 0, 2)).reshape(m, bq * ell)
+    er, ei = cmatmul_body(gr, gi, tr, ti)
+    er = jnp.transpose(er.reshape(n, bq, ell), (1, 0, 2))  # (bq, N, L)
+    ei = jnp.transpose(ei.reshape(n, bq, ell), (1, 0, 2))
+    # decode: gather each request's m responder rows, compact batched matmul
+    idx = subsets[:, :, None]
+    rr = jnp.take_along_axis(er, idx, axis=1)              # (bq, m, L)
+    ri = jnp.take_along_axis(ei, idx, axis=1)
+    hr, hi = bcmatmul_body(dvr, dvi, rr, ri)
+    # recombine twiddle (natural order) + length-m DFT
+    ur = hr * twr[None] - hi * twi[None]
+    ui = hr * twi[None] + hi * twr[None]
+    ur = jnp.transpose(ur, (1, 0, 2)).reshape(m, bq * ell)
+    ui = jnp.transpose(ui, (1, 0, 2)).reshape(m, bq * ell)
+    outr, outi = cmatmul_body(fmr, fmi, ur, ui)
+    return (jnp.transpose(outr.reshape(m, bq, ell), (1, 0, 2)).reshape(bq, s),
+            jnp.transpose(outi.reshape(m, bq, ell), (1, 0, 2)).reshape(bq, s))
+
+
+def _bucket_kernel(xr_ref, xi_ref, dr_ref, di_ref, gr_ref, gi_ref,
+                   far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
+                   twr_ref, twi_ref, fmr_ref, fmi_ref, or_ref, oi_ref):
+    or_ref[...], oi_ref[...] = bucket_body(
+        xr_ref[...], xi_ref[...], dr_ref[...], di_ref[...],
+        gr_ref[...], gi_ref[...], far_ref[...], fai_ref[...],
+        wr_ref[...], wi_ref[...], fbr_ref[...], fbi_ref[...],
+        twr_ref[...], twi_ref[...], fmr_ref[...], fmi_ref[...])
+
+
+def coded_fft_bucket(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                     twr, twi, fmr, fmi, *, block_q: int = 1,
+                     interpret: bool = False):
+    """Fused bucket pipeline: request planes -> output spectrum planes.
+
+    ``xr, xi``: (q, s) request planes; ``dr, di``: (q, m, N) per-request
+    scatter decode matrices; ``gr, gi``: (N, m) generator;
+    ``far/wr/fbr``: four-step DFT/twiddle planes for L = s/m = A*B;
+    ``twr``: (m, L) recombine twiddle; ``fmr``: (m, m) DFT.
+    Returns (q, s) planes of ``fft(x, axis=-1)`` decoded from the masked
+    worker subset each ``D_q`` encodes.
+    """
+    q, s = xr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    ell = a * b
+    block_q = max(1, min(block_q, q))
+    spec_x = pl.BlockSpec((block_q, s), lambda i: (i, 0))
+    spec_d = pl.BlockSpec((block_q, m, n), lambda i: (i, 0, 0))
+    spec_g = pl.BlockSpec((n, m), lambda i: (0, 0))
+    spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
+    spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
+    spec_fb = pl.BlockSpec((b, b), lambda i: (0, 0))
+    spec_tw = pl.BlockSpec((m, ell), lambda i: (0, 0))
+    spec_fm = pl.BlockSpec((m, m), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((q, s), xr.dtype),
+        jax.ShapeDtypeStruct((q, s), xr.dtype),
+    ]
+    return pl.pallas_call(
+        _bucket_kernel,
+        grid=(pl.cdiv(q, block_q),),
+        in_specs=[spec_x, spec_x, spec_d, spec_d, spec_g, spec_g,
+                  spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb,
+                  spec_tw, spec_tw, spec_fm, spec_fm],
+        out_specs=[spec_x, spec_x],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="coded_fft_bucket",
+    )(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi, twr, twi, fmr, fmi)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched four-step (Bailey) FFT.
+"""Pallas TPU kernels: batched four-step (Bailey) FFT + fused MDS encode.
 
 The per-worker hot loop of coded FFT is a length-L DFT of the worker's coded
 shard (paper §III-B step 3).  On TPU we do NOT port a butterfly-network FFT
@@ -12,17 +12,30 @@ i.e. two dense DFT-matrix matmuls (MXU work) plus one elementwise twiddle
 (VPU work).  Complex arithmetic is planar: separate f32 real/imag planes,
 4-real-matmul complex products with f32 accumulation.
 
-Two variants:
+Every kernel here blocks over the BATCH as well (``block_q`` elements per
+grid step) with the batch block folded into the matmul row/column dims, so
+one grid step issues the same two big MXU contractions regardless of
+``block_q``.  Off-TPU (interpret mode) the ops-layer collapses the whole
+batch into one grid step, which lowers to plain XLA matmuls with no
+per-element loop — that is what makes the kernel path the *default* engine
+rather than a TPU-only demo (DESIGN.md §6).
 
-* ``fourstep_fused_kernel`` -- one ``pallas_call``; per grid step the whole
-  (A, B) matrix of one batch element lives in VMEM together with F_A, F_B
-  and the twiddle.  VMEM footprint ~ 2*(A*B + A*A + B*B + A*B) * 4 bytes;
-  good up to A = B = 512.
-* ``stage1 / stage2`` two-pass -- stage 1 blocks over B-columns (column DFT
-  + twiddle are column-local), stage 2 blocks over A-rows (row DFT is
-  row-local); supports sizes whose full matrix would not fit VMEM.
+Kernels:
 
-The jit wrappers with layout pack/unpack live in ops.py; the jnp oracle in
+* ``fourstep_fused`` — whole (A, B) matrix per element resident in VMEM.
+  VMEM footprint ~ 2*(bq*A*B + A*A + B*B + A*B) * 4 bytes.
+* ``fourstep_stage1 / fourstep_stage2`` two-pass — stage 1 blocks over
+  B-columns (column DFT + twiddle are column-local), stage 2 blocks over
+  A-rows (row DFT is row-local); supports sizes whose full matrix would
+  not fit VMEM.
+* ``encode_fourstep_fused`` — the coded-FFT stage-1 fusion: the MDS encode
+  ``a = G @ c`` is itself a (roots-of-unity) matmul across the shard axis
+  and commutes with the per-shard DFT, so the kernel transforms the ``m``
+  MESSAGE shards (not the ``N`` coded ones — an N/m flop saving) and
+  applies the generator contraction in VMEM.  Coded shards never
+  round-trip through HBM between encode and worker compute.
+
+The jit wrappers with layout pack/unpack live in ops.py; the jnp oracles in
 ref.py.
 """
 
@@ -35,9 +48,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = [
+    "fourstep_body",
     "fourstep_fused",
+    "stage1_body",
+    "stage2_body",
     "fourstep_stage1",
     "fourstep_stage2",
+    "encode_fourstep_body",
+    "encode_fourstep_fused",
 ]
 
 
@@ -47,32 +65,53 @@ def _cmul_mm(ar, ai, br, bi):
     return dot(ar, br) - dot(ai, bi), dot(ar, bi) + dot(ai, br)
 
 
-def _fused_kernel(xr_ref, xi_ref, far_ref, fai_ref, wr_ref, wi_ref,
-                  fbr_ref, fbi_ref, or_ref, oi_ref):
-    """One batch element per grid step: out = ((F_A @ M) * W) @ F_B."""
-    xr = xr_ref[0]      # (A, B)
-    xi = xi_ref[0]
-    # step 1: column DFTs  (A, A) @ (A, B)
-    t1r, t1i = _cmul_mm(far_ref[...], fai_ref[...], xr, xi)
-    # step 2: twiddle (elementwise, VPU)
-    wr = wr_ref[...]
-    wi = wi_ref[...]
+def fourstep_body(xr, xi, far, fai, wr, wi, fbr, fbi):
+    """The four-step math on one (bq, A, B) block: ((F_A @ M) * W) @ F_B.
+
+    Shared between the Pallas kernel (one block per grid step) and the
+    off-TPU direct path, which evaluates the body on the full batch as
+    straight XLA (DESIGN.md §6).  The batch block is folded into the
+    contraction dims (columns for stage 1, rows for stage 3), so the MXU
+    sees two dense matmuls per call for any bq.
+    """
+    bq, a, b = xr.shape
+    # step 1: column DFTs -- contract A with the batch folded into columns
+    mr = jnp.transpose(xr, (1, 0, 2)).reshape(a, bq * b)
+    mi = jnp.transpose(xi, (1, 0, 2)).reshape(a, bq * b)
+    t1r, t1i = _cmul_mm(far, fai, mr, mi)
+    t1r = t1r.reshape(a, bq, b)
+    t1i = t1i.reshape(a, bq, b)
+    # step 2: twiddle (elementwise, VPU), broadcast over the batch block
+    wr = wr[:, None, :]
+    wi = wi[:, None, :]
     t2r = t1r * wr - t1i * wi
     t2i = t1r * wi + t1i * wr
-    # step 3: row DFTs  (A, B) @ (B, B)
-    t3r, t3i = _cmul_mm(t2r, t2i, fbr_ref[...], fbi_ref[...])
-    or_ref[0] = t3r
-    oi_ref[0] = t3i
+    # step 3: row DFTs -- contract B with the batch folded into rows
+    rr = jnp.transpose(t2r, (1, 0, 2)).reshape(bq * a, b)
+    ri = jnp.transpose(t2i, (1, 0, 2)).reshape(bq * a, b)
+    t3r, t3i = _cmul_mm(rr, ri, fbr, fbi)
+    return t3r.reshape(bq, a, b), t3i.reshape(bq, a, b)
 
 
-def fourstep_fused(xr, xi, far, fai, wr, wi, fbr, fbi, *, interpret=False):
+def _fused_kernel(xr_ref, xi_ref, far_ref, fai_ref, wr_ref, wi_ref,
+                  fbr_ref, fbi_ref, or_ref, oi_ref):
+    or_ref[...], oi_ref[...] = fourstep_body(
+        xr_ref[...], xi_ref[...], far_ref[...], fai_ref[...],
+        wr_ref[...], wi_ref[...], fbr_ref[...], fbi_ref[...])
+
+
+def fourstep_fused(xr, xi, far, fai, wr, wi, fbr, fbi, *, block_q: int = 1,
+                   interpret=False):
     """Batched fused four-step FFT.
 
     ``xr, xi``: (batch, A, B) planes of M[a,b] = x[a*B+b].
     Returns planes of out[c, d] with X[c + d*A] = out[c, d].
+    ``block_q`` batch elements are processed per grid step (the ops layer
+    collapses the grid entirely in interpret mode).
     """
     batch, a, b = xr.shape
-    spec_x = pl.BlockSpec((1, a, b), lambda i: (i, 0, 0))
+    block_q = max(1, min(block_q, batch))
+    spec_x = pl.BlockSpec((block_q, a, b), lambda i: (i, 0, 0))
     spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
     spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
     spec_fb = pl.BlockSpec((b, b), lambda i: (0, 0))
@@ -82,7 +121,7 @@ def fourstep_fused(xr, xi, far, fai, wr, wi, fbr, fbi, *, interpret=False):
     ]
     return pl.pallas_call(
         _fused_kernel,
-        grid=(batch,),
+        grid=(pl.cdiv(batch, block_q),),
         in_specs=[spec_x, spec_x, spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb],
         out_specs=[spec_x, spec_x],
         out_shape=out_shape,
@@ -91,22 +130,110 @@ def fourstep_fused(xr, xi, far, fai, wr, wi, fbr, fbi, *, interpret=False):
     )(xr, xi, far, fai, wr, wi, fbr, fbi)
 
 
+def encode_fourstep_body(cr, ci, gr, gi, far, fai, wr, wi, fbr, fbi):
+    """Fused MDS-encode + four-step worker DFT on MESSAGE shards.
+
+    ``c`` block: (bq, m, A, B) message planes; ``g``: (n, m) generator
+    planes.  The DFT stages act per shard and the generator contraction
+    acts across shards, so they commute: transforming the m message shards
+    first saves an N/m factor of DFT flops, and the encode is one more
+    (n, m) x (m, bq*A*B) MXU matmul on VMEM-resident data.
+    """
+    bq, m, a, b = cr.shape
+    n = gr.shape[0]
+    # stage 1: column DFTs of every message shard -- contract A
+    mr = jnp.transpose(cr, (2, 0, 1, 3)).reshape(a, bq * m * b)
+    mi = jnp.transpose(ci, (2, 0, 1, 3)).reshape(a, bq * m * b)
+    t1r, t1i = _cmul_mm(far, fai, mr, mi)
+    t1r = t1r.reshape(a, bq, m, b)
+    t1i = t1i.reshape(a, bq, m, b)
+    # stage 2: twiddle, shared across batch and shard index
+    wr = wr[:, None, None, :]
+    wi = wi[:, None, None, :]
+    t2r = t1r * wr - t1i * wi
+    t2i = t1r * wi + t1i * wr
+    # stage 3: row DFTs -- contract B ((a, bq, m, b) rows are contiguous)
+    t3r, t3i = _cmul_mm(t2r.reshape(-1, b), t2i.reshape(-1, b), fbr, fbi)
+    # stage 4: MDS encode -- contract the shard axis m with G
+    t3r = t3r.reshape(a, bq, m, b).transpose(2, 1, 0, 3).reshape(m, -1)
+    t3i = t3i.reshape(a, bq, m, b).transpose(2, 1, 0, 3).reshape(m, -1)
+    er, ei = _cmul_mm(gr, gi, t3r, t3i)
+    return (er.reshape(n, bq, a, b).transpose(1, 0, 2, 3),
+            ei.reshape(n, bq, a, b).transpose(1, 0, 2, 3))
+
+
+def _encode_fused_kernel(cr_ref, ci_ref, gr_ref, gi_ref, far_ref, fai_ref,
+                         wr_ref, wi_ref, fbr_ref, fbi_ref, or_ref, oi_ref):
+    or_ref[...], oi_ref[...] = encode_fourstep_body(
+        cr_ref[...], ci_ref[...], gr_ref[...], gi_ref[...],
+        far_ref[...], fai_ref[...], wr_ref[...], wi_ref[...],
+        fbr_ref[...], fbi_ref[...])
+
+
+def encode_fourstep_fused(cr, ci, gr, gi, far, fai, wr, wi, fbr, fbi, *,
+                          block_q: int = 1, interpret=False):
+    """Fused encode + worker DFT: message planes -> coded worker spectra.
+
+    ``cr, ci``: (batch, m, A, B) planes of the m message shards,
+    M_i[a, b] = c_i[a*B+b]; ``gr, gi``: (n, m) generator planes.
+    Returns (batch, n, A, B) planes of out[k, c, d] with
+    ``B_k[c + d*A] = out[k, c, d]`` -- the same scrambled four-step order
+    as :func:`fourstep_fused`, unscrambled by the ops layer.
+    """
+    batch, m, a, b = cr.shape
+    n = gr.shape[0]
+    block_q = max(1, min(block_q, batch))
+    spec_c = pl.BlockSpec((block_q, m, a, b), lambda i: (i, 0, 0, 0))
+    spec_g = pl.BlockSpec((n, m), lambda i: (0, 0))
+    spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
+    spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
+    spec_fb = pl.BlockSpec((b, b), lambda i: (0, 0))
+    spec_o = pl.BlockSpec((block_q, n, a, b), lambda i: (i, 0, 0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, n, a, b), cr.dtype),
+        jax.ShapeDtypeStruct((batch, n, a, b), cr.dtype),
+    ]
+    return pl.pallas_call(
+        _encode_fused_kernel,
+        grid=(pl.cdiv(batch, block_q),),
+        in_specs=[spec_c, spec_c, spec_g, spec_g, spec_fa, spec_fa,
+                  spec_w, spec_w, spec_fb, spec_fb],
+        out_specs=[spec_o, spec_o],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="encode_fourstep_fused",
+    )(cr, ci, gr, gi, far, fai, wr, wi, fbr, fbi)
+
+
+def stage1_body(xr, xi, far, fai, wr, wi):
+    """Column-blocked: out = (F_A @ M_block) * W_block, batch folded in."""
+    bq, a, bb = xr.shape
+    mr = jnp.transpose(xr, (1, 0, 2)).reshape(a, bq * bb)
+    mi = jnp.transpose(xi, (1, 0, 2)).reshape(a, bq * bb)
+    t1r, t1i = _cmul_mm(far, fai, mr, mi)
+    t1r = t1r.reshape(a, bq, bb)
+    t1i = t1i.reshape(a, bq, bb)
+    wr = wr[:, None, :]
+    wi = wi[:, None, :]
+    return (jnp.transpose(t1r * wr - t1i * wi, (1, 0, 2)),
+            jnp.transpose(t1r * wi + t1i * wr, (1, 0, 2)))
+
+
 def _stage1_kernel(xr_ref, xi_ref, far_ref, fai_ref, wr_ref, wi_ref,
                    or_ref, oi_ref):
-    """Column-blocked: out = (F_A @ M_block) * W_block."""
-    t1r, t1i = _cmul_mm(far_ref[...], fai_ref[...], xr_ref[0], xi_ref[0])
-    wr = wr_ref[...]
-    wi = wi_ref[...]
-    or_ref[0] = t1r * wr - t1i * wi
-    oi_ref[0] = t1r * wi + t1i * wr
+    or_ref[...], oi_ref[...] = stage1_body(
+        xr_ref[...], xi_ref[...], far_ref[...], fai_ref[...],
+        wr_ref[...], wi_ref[...])
 
 
-def fourstep_stage1(xr, xi, far, fai, wr, wi, *, block_b=256, interpret=False):
+def fourstep_stage1(xr, xi, far, fai, wr, wi, *, block_q: int = 1,
+                    block_b=256, interpret=False):
     """Stage 1+2 of the four-step FFT, blocked over columns of B."""
     batch, a, b = xr.shape
     block_b = min(block_b, b)
-    grid = (batch, pl.cdiv(b, block_b))
-    spec_x = pl.BlockSpec((1, a, block_b), lambda i, j: (i, 0, j))
+    block_q = max(1, min(block_q, batch))
+    grid = (pl.cdiv(batch, block_q), pl.cdiv(b, block_b))
+    spec_x = pl.BlockSpec((block_q, a, block_b), lambda i, j: (i, 0, j))
     spec_fa = pl.BlockSpec((a, a), lambda i, j: (0, 0))
     spec_w = pl.BlockSpec((a, block_b), lambda i, j: (0, j))
     out_shape = [
@@ -124,19 +251,27 @@ def fourstep_stage1(xr, xi, far, fai, wr, wi, *, block_b=256, interpret=False):
     )(xr, xi, far, fai, wr, wi)
 
 
+def stage2_body(tr, ti, fbr, fbi):
+    """Row-blocked: out = T_block @ F_B, batch folded into the rows."""
+    bq, ba, b = tr.shape
+    t3r, t3i = _cmul_mm(tr.reshape(bq * ba, b), ti.reshape(bq * ba, b),
+                        fbr, fbi)
+    return t3r.reshape(bq, ba, b), t3i.reshape(bq, ba, b)
+
+
 def _stage2_kernel(tr_ref, ti_ref, fbr_ref, fbi_ref, or_ref, oi_ref):
-    """Row-blocked: out = T_block @ F_B."""
-    t3r, t3i = _cmul_mm(tr_ref[0], ti_ref[0], fbr_ref[...], fbi_ref[...])
-    or_ref[0] = t3r
-    oi_ref[0] = t3i
+    or_ref[...], oi_ref[...] = stage2_body(
+        tr_ref[...], ti_ref[...], fbr_ref[...], fbi_ref[...])
 
 
-def fourstep_stage2(tr, ti, fbr, fbi, *, block_a=256, interpret=False):
+def fourstep_stage2(tr, ti, fbr, fbi, *, block_q: int = 1, block_a=256,
+                    interpret=False):
     """Stage 3 of the four-step FFT, blocked over rows of A."""
     batch, a, b = tr.shape
     block_a = min(block_a, a)
-    grid = (batch, pl.cdiv(a, block_a))
-    spec_t = pl.BlockSpec((1, block_a, b), lambda i, j: (i, j, 0))
+    block_q = max(1, min(block_q, batch))
+    grid = (pl.cdiv(batch, block_q), pl.cdiv(a, block_a))
+    spec_t = pl.BlockSpec((block_q, block_a, b), lambda i, j: (i, j, 0))
     spec_fb = pl.BlockSpec((b, b), lambda i, j: (0, 0))
     out_shape = [
         jax.ShapeDtypeStruct((batch, a, b), tr.dtype),

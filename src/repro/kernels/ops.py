@@ -1,9 +1,27 @@
-"""Jit'd wrappers around the Pallas kernels (planar layout management).
+"""Backend-dispatch layer: jit'd wrappers around the Pallas kernels.
 
-These are the public entry points; they accept/return natural complex
-arrays, handle the planar split, pick factorizations and block sizes, and
-thread ``interpret=True`` on non-TPU backends so the same code validates on
-CPU and runs compiled on TPU.
+These are the public entry points the core plans and the FFT service route
+through (DESIGN.md §6).  They accept/return either natural complex arrays
+or planar f32 planes, handle the planar split, and pick factorizations and
+block sizes.
+
+Execution-mode policy (the reason the kernel path is the *default* engine
+and not a TPU-only demo).  Every kernel's math lives in a pure
+``*_body`` function shared by two callers:
+
+* **pallas** -- ``pl.pallas_call`` with VMEM-sized blocks; compiled on
+  TPU, ``interpret=True`` elsewhere.  The parity tests pin
+  ``interpret=True`` so every body is exercised through the real Pallas
+  machinery on CPU in every PR.
+* **direct** -- the body evaluated on the full batch as straight XLA.
+  This is the off-TPU default (``interpret=None``): the interpret-mode
+  grid emulation pays per-call buffer-copy overhead (~ms per bucket at
+  service sizes) that would hand the hot path back to the jnp oracle,
+  while the direct body is the identical math (bit-identical results)
+  at zero overhead.
+
+``interpret=None`` therefore means "compiled pallas on TPU, direct body
+elsewhere"; an explicit ``interpret=True/False`` forces the Pallas call.
 """
 
 from __future__ import annotations
@@ -15,23 +33,60 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.cmatmul import cmatmul
-from repro.kernels.fourstep_fft import fourstep_fused, fourstep_stage1, fourstep_stage2
-from repro.kernels.recombine import recombine_twiddle_dft
+from repro.kernels.cmatmul import (
+    bcmatmul,
+    bcmatmul_body,
+    cmatmul,
+    cmatmul_body,
+)
+from repro.kernels.coded_pipeline import (
+    bucket_body,
+    bucket_body_fftworker,
+    coded_fft_bucket,
+)
+from repro.kernels.fourstep_fft import (
+    encode_fourstep_body,
+    encode_fourstep_fused,
+    fourstep_body,
+    fourstep_fused,
+    fourstep_stage1,
+    fourstep_stage2,
+    stage1_body,
+    stage2_body,
+)
+from repro.kernels.recombine import (
+    recombine_batched_body,
+    recombine_body,
+    recombine_twiddle_dft,
+    recombine_twiddle_dft_batched,
+)
 
 __all__ = [
     "default_interpret",
+    "kernel_backend_supported",
     "split_factor",
     "fft_fourstep",
+    "fourstep_planar",
+    "encode_worker",
+    "decode_apply",
+    "recombine_planar",
+    "coded_bucket",
+    "coded_bucket_direct",
+    "coded_bucket_fusable",
     "mds_apply",
     "recombine_fused",
     "make_kernel_worker_fn",
+    "make_kernel_fftn_fn",
 ]
 
-# VMEM budget heuristic: fused kernel keeps ~4 (A,B) planes + 2 (A,A) +
-# 2 (B,B) + 2 (A,B) twiddle planes resident; cap the fused path at the size
-# where that stays under ~12 MB of the 16 MB VMEM.
+# VMEM budget heuristic (TPU, compiled): fused kernel keeps ~4 (A,B) planes
+# + 2 (A,A) + 2 (B,B) + 2 (A,B) twiddle planes resident; cap the fused path
+# at the size where that stays under ~12 MB of the 16 MB VMEM.
 _FUSED_MAX_ELEMS = 512 * 512
+# Interpret-mode (host) block budget: collapse the batch into one grid step
+# whenever a block stays under ~32 MB/plane -- the collapsed call traces the
+# kernel body once and lowers to plain fused XLA matmuls.
+_INTERPRET_BLOCK_ELEMS = 1 << 23
 
 
 def default_interpret() -> bool:
@@ -39,16 +94,48 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _mode(interpret: bool | None) -> str:
+    """Resolve the execution mode: ``"compiled"`` | ``"interpret"`` |
+    ``"direct"`` (see module docstring)."""
+    if interpret is None:
+        return "direct" if default_interpret() else "compiled"
+    return "interpret" if interpret else "compiled"
+
+
+def kernel_backend_supported(dtype) -> bool:
+    """The planar kernels compute in f32 planes: complex64 plans only.
+
+    complex128 plans (the numerics/reference tier) resolve to the jnp
+    backend -- the dispatch rule in DESIGN.md §6.
+    """
+    return jnp.dtype(dtype) == jnp.dtype(jnp.complex64)
+
+
 def split_factor(n: int) -> tuple[int, int]:
     """Factor ``n = a * b`` with a, b as close as possible (a <= b).
 
     MXU-friendliness: prefers multiples of 128 when available; for powers of
-    two this returns (2^floor(k/2), 2^ceil(k/2)).
+    two this returns (2^floor(k/2), 2^ceil(k/2)).  Primes fall back to
+    (1, n): stage 1 degenerates to the identity and stage 2 is one dense
+    DFT matmul.
     """
     a = int(math.isqrt(n))
     while a > 1 and n % a != 0:
         a -= 1
     return a, n // a
+
+
+def _block_q(batch: int, per_elem: int, interpret: bool) -> int:
+    """Batch elements per grid step under the active memory budget."""
+    budget = _INTERPRET_BLOCK_ELEMS if interpret else _FUSED_MAX_ELEMS
+    return max(1, min(batch, budget // max(per_elem, 1)))
+
+
+def _block_l(total: int, rows: int, interpret: bool) -> int:
+    """Payload columns per grid step for the streaming matmul kernels."""
+    if interpret:
+        return max(1, min(total, _INTERPRET_BLOCK_ELEMS // max(rows, 1)))
+    return min(total, 512)
 
 
 def _dft_planes(n: int, dtype=jnp.float32):
@@ -64,57 +151,272 @@ def _twiddle_planes(a: int, b: int, dtype=jnp.float32):
     return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("a", "b", "interpret", "fused"))
-def _fft_fourstep_impl(x, a, b, interpret, fused):
-    batch = x.shape[0]
-    ell = a * b
-    xr, xi = ref.planar(x)
+def _recombine_planes(s: int, m: int, dtype=jnp.float32):
+    # recombine twiddle W[k, i] = omega_s^{ik} plus the length-m DFT planes
+    ki = jnp.outer(jnp.arange(m), jnp.arange(s // m))
+    ang = -2.0 * jnp.pi * (ki % s) / s
+    return (jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype),
+            *_dft_planes(m, dtype))
+
+
+def _recombine_planes_scrambled(s: int, m: int, a: int, b: int,
+                                dtype=jnp.float32):
+    """Recombine planes with the twiddle permuted to the four-step payload
+    order ``l' = c*B + d`` for natural ``l = c + d*A`` -- the bucket kernel
+    carries that order through decode and unscrambles only at the output
+    (kernels/coded_pipeline.py)."""
+    twr, twi, fr, fi = _recombine_planes(s, m, dtype)
+    perm = lambda t: jnp.transpose(
+        t.reshape(m, b, a), (0, 2, 1)).reshape(m, a * b)
+    return perm(twr), perm(twi), fr, fi
+
+
+# ---------------------------------------------------------------- four-step
+def fourstep_planar(xr: jax.Array, xi: jax.Array, *,
+                    interpret: bool | None = None,
+                    fused: bool | None = None):
+    """Batched planar FFT along the last axis via the four-step kernels.
+
+    ``xr, xi``: (batch, L) f32 planes.  Returns natural-order (batch, L)
+    planes of ``fft(x, axis=-1)``.  ``fused=None`` picks the single-kernel
+    path when the (A, B) matrix fits the VMEM budget, else the two-pass
+    stage1/stage2 kernels.  Degenerate factorizations (prime or
+    near-prime L, where the dense (B, B) DFT factor would dwarf an FFT's
+    flops AND its plane would not fit VMEM) fall back to the platform FFT.
+    """
+    mode = _mode(interpret)
+    batch, ell = xr.shape
+    a, b = split_factor(ell)
+    if b * b > _FUSED_MAX_ELEMS:
+        z = jnp.fft.fft(xr + 1j * xi, axis=-1)
+        return jnp.real(z).astype(xr.dtype), jnp.imag(z).astype(xr.dtype)
+    if fused is None:
+        fused = (a * b) <= _FUSED_MAX_ELEMS
     xr = xr.reshape(batch, a, b)
     xi = xi.reshape(batch, a, b)
     far, fai = _dft_planes(a)
     fbr, fbi = _dft_planes(b)
     wr, wi = _twiddle_planes(a, b)
-    if fused:
-        outr, outi = fourstep_fused(
-            xr, xi, far, fai, wr, wi, fbr, fbi, interpret=interpret
-        )
+    if mode == "direct":
+        if fused:
+            outr, outi = fourstep_body(xr, xi, far, fai, wr, wi, fbr, fbi)
+        else:
+            t1r, t1i = stage1_body(xr, xi, far, fai, wr, wi)
+            outr, outi = stage2_body(t1r, t1i, fbr, fbi)
     else:
-        t1r, t1i = fourstep_stage1(xr, xi, far, fai, wr, wi, interpret=interpret)
-        outr, outi = fourstep_stage2(t1r, t1i, fbr, fbi, interpret=interpret)
+        itp = mode == "interpret"
+        bq = _block_q(batch, a * b, itp)
+        if fused:
+            outr, outi = fourstep_fused(
+                xr, xi, far, fai, wr, wi, fbr, fbi,
+                block_q=bq, interpret=itp)
+        else:
+            t1r, t1i = fourstep_stage1(
+                xr, xi, far, fai, wr, wi, block_q=bq, interpret=itp)
+            outr, outi = fourstep_stage2(
+                t1r, t1i, fbr, fbi, block_q=bq, interpret=itp)
     # out[c, d] holds X[c + d*A]  ->  transpose to (d, c) then flatten
-    z = ref.unplanar(outr, outi)
-    return jnp.swapaxes(z, -1, -2).reshape(batch, ell)
+    outr = jnp.swapaxes(outr, -1, -2).reshape(batch, ell)
+    outi = jnp.swapaxes(outi, -1, -2).reshape(batch, ell)
+    return outr, outi
 
 
-def fft_fourstep(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("interpret", "fused"))
+def _fft_fourstep_impl(x, interpret, fused):
+    xr, xi = ref.planar(x)
+    outr, outi = fourstep_planar(xr, xi, interpret=interpret, fused=fused)
+    return ref.unplanar(outr, outi)
+
+
+def fft_fourstep(x: jax.Array, *, interpret: bool | None = None,
+                 fused: bool | None = None) -> jax.Array:
     """Batched FFT along the last axis via the Pallas four-step kernel.
 
     ``x``: (..., L) complex; L is factored automatically.  Non-batched
     inputs are promoted.  Output matches ``jnp.fft.fft(x, axis=-1)`` up to
     f32 planar precision.
     """
-    if interpret is None:
-        interpret = default_interpret()
     squeeze = x.ndim == 1
     if squeeze:
         x = x[None]
     batch_shape = x.shape[:-1]
     ell = x.shape[-1]
-    a, b = split_factor(ell)
-    fused = (a * b) <= _FUSED_MAX_ELEMS
     out = _fft_fourstep_impl(
-        x.reshape(-1, ell), a, b, interpret, fused
+        x.reshape(-1, ell), interpret, fused
     ).reshape(batch_shape + (ell,))
     return out[0] if squeeze else out
 
 
+# ------------------------------------------------- fused encode + worker
+def encode_worker(cr: jax.Array, ci: jax.Array,
+                  gr: jax.Array, gi: jax.Array, *,
+                  interpret: bool | None = None,
+                  fused: bool | None = None):
+    """Message planes -> coded worker spectra: ``B = fft(G @ c, axis=-1)``.
+
+    ``cr, ci``: (q, m, L) planes of the message shards; ``gr, gi``: (n, m)
+    generator planes.  Returns natural-order (q, n, L) planes.
+
+    ``fused=None`` picks the single-kernel fused path (encode contraction
+    in VMEM, m-shard DFTs -- an N/m flop saving over transforming coded
+    shards) when the per-element footprint fits the VMEM budget, else the
+    two-pass fallback: streamed cmatmul encode, then the four-step worker
+    on the coded rows.
+    """
+    mode = _mode(interpret)
+    q, m, ell = cr.shape
+    n = gr.shape[0]
+    a, b = split_factor(ell)
+    if fused is None:
+        # degenerate factorization (b*b over budget): two-pass, whose
+        # four-step stage falls back to the platform FFT
+        fused = ((m + n) * a * b <= 2 * _FUSED_MAX_ELEMS
+                 and b * b <= _FUSED_MAX_ELEMS)
+    if fused:
+        planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b))
+        if mode == "direct":
+            br_, bi_ = encode_fourstep_body(
+                cr.reshape(q, m, a, b), ci.reshape(q, m, a, b), gr, gi,
+                *planes)
+        else:
+            itp = mode == "interpret"
+            bq = _block_q(q, (m + n) * a * b, itp)
+            br_, bi_ = encode_fourstep_fused(
+                cr.reshape(q, m, a, b), ci.reshape(q, m, a, b), gr, gi,
+                *planes, block_q=bq, interpret=itp)
+        br_ = jnp.swapaxes(br_, -1, -2).reshape(q, n, ell)
+        bi_ = jnp.swapaxes(bi_, -1, -2).reshape(q, n, ell)
+        return br_, bi_
+    # two-pass: encode via the streaming cmatmul (batch folded into the
+    # payload columns -- G is shared), then the planar four-step worker
+    tr = jnp.transpose(cr, (1, 0, 2)).reshape(m, q * ell)
+    ti = jnp.transpose(ci, (1, 0, 2)).reshape(m, q * ell)
+    if mode == "direct":
+        er, ei = cmatmul_body(gr, gi, tr, ti)
+    else:
+        itp = mode == "interpret"
+        bl = _block_l(q * ell, m + n, itp)
+        er, ei = cmatmul(gr, gi, tr, ti, block_l=bl, interpret=itp)
+    ar = jnp.transpose(er.reshape(n, q, ell), (1, 0, 2)).reshape(q * n, ell)
+    ai = jnp.transpose(ei.reshape(n, q, ell), (1, 0, 2)).reshape(q * n, ell)
+    br_, bi_ = fourstep_planar(ar, ai, interpret=interpret)
+    return br_.reshape(q, n, ell), bi_.reshape(q, n, ell)
+
+
+# ------------------------------------------------------------ decode apply
+def decode_apply(dr: jax.Array, di: jax.Array,
+                 br: jax.Array, bi: jax.Array, *,
+                 interpret: bool | None = None):
+    """Per-request decode matrices applied as one batched MXU matmul.
+
+    ``dr, di``: (q, m, N) planes of scatter decode matrices (zero columns
+    for stragglers -- DESIGN.md §6); ``br, bi``: (q, N, L) worker-result
+    planes.  Returns (q, m, L) decoded sub-transform planes.
+    """
+    mode = _mode(interpret)
+    if mode == "direct":
+        return bcmatmul_body(dr, di, br, bi)
+    itp = mode == "interpret"
+    q, m, n = dr.shape
+    ell = br.shape[-1]
+    bq = _block_q(q, (m + n) * ell, itp)
+    bl = _block_l(ell, m + n, itp)
+    return bcmatmul(dr, di, br, bi, block_q=bq, block_l=bl, interpret=itp)
+
+
+# -------------------------------------------------------------- recombine
+def recombine_planar(cr: jax.Array, ci: jax.Array, s: int, *,
+                     interpret: bool | None = None):
+    """Batched master recombination on planes: (q, m, s/m) -> (q, s)."""
+    mode = _mode(interpret)
+    q, m, ell = cr.shape
+    wr, wi, fr, fi = _recombine_planes(s, m)
+    if mode == "direct":
+        outr, outi = recombine_batched_body(cr, ci, wr, wi, fr, fi)
+    else:
+        itp = mode == "interpret"
+        bq = _block_q(q, 2 * m * ell, itp)
+        bl = _block_l(ell, 2 * m, itp)
+        outr, outi = recombine_twiddle_dft_batched(
+            cr, ci, wr, wi, fr, fi, block_q=bq, block_l=bl, interpret=itp)
+    return outr.reshape(q, s), outi.reshape(q, s)
+
+
+# ---------------------------------------------------- fused bucket pipeline
+def coded_bucket_fusable(s: int, m: int, n: int) -> bool:
+    """Does the whole-bucket pipeline fit one kernel's VMEM working set?
+
+    Per batch element the kernel keeps the request, the m message shards,
+    the N coded spectra, the decoded shards and the output resident:
+    roughly ``2 * (2*s + (m + n) * L)`` f32 values.  Degenerate
+    factorizations (dense (B, B) DFT factor over budget) are excluded --
+    the stage path's four-step falls back to the platform FFT there.
+    """
+    ell = s // m
+    a, b = split_factor(ell)
+    return ((2 * s + (m + n) * ell) <= 2 * _FUSED_MAX_ELEMS
+            and b * b <= _FUSED_MAX_ELEMS)
+
+
+def coded_bucket(xr: jax.Array, xi: jax.Array,
+                 dr: jax.Array, di: jax.Array,
+                 gr: jax.Array, gi: jax.Array, s: int, *,
+                 interpret: bool | None = None):
+    """The service's whole-bucket hot path as ONE Pallas launch.
+
+    ``xr, xi``: (q, s) request planes; ``dr, di``: (q, m, N) per-request
+    scatter decode matrices; ``gr, gi``: (N, m) generator planes.  Returns
+    (q, s) output planes -- interleave, fused encode+worker, decode matmul
+    and recombine with no HBM round-trips between stages (DESIGN.md §6).
+    Caller must check :func:`coded_bucket_fusable` first.
+    """
+    mode = _mode(interpret)
+    q, s_ = xr.shape
+    n, m = gr.shape
+    ell = s // m
+    a, b = split_factor(ell)
+    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
+              *_recombine_planes_scrambled(s, m, a, b))
+    if mode == "direct":
+        return bucket_body(xr, xi, dr, di, gr, gi, *planes)
+    itp = mode == "interpret"
+    bq = _block_q(q, 2 * s + (m + n) * ell, itp)
+    return coded_fft_bucket(
+        xr, xi, dr, di, gr, gi, *planes, block_q=bq, interpret=itp)
+
+
+def coded_bucket_direct(xr: jax.Array, xi: jax.Array,
+                        dvr: jax.Array, dvi: jax.Array,
+                        subsets: jax.Array,
+                        gr: jax.Array, gi: jax.Array, s: int):
+    """The off-TPU bucket executor: same fused pipeline, host lowerings.
+
+    Same stage structure as :func:`coded_bucket`, with the worker DFT on
+    the platform FFT and the decode as gathered compact ``(m, m)``
+    matmuls (``dvr/dvi`` inverses + ``subsets`` responder indices from
+    ``DecodeMatrixCache.compact``) -- the lowerings a Mosaic kernel cannot
+    express but a CPU wants (DESIGN.md §6).  No VMEM gate: valid at any
+    bucket shape.
+    """
+    m = gr.shape[1]
+    return bucket_body_fftworker(
+        xr, xi, dvr, dvi, subsets, gr, gi, *_recombine_planes(s, m))
+
+
+# ----------------------------------------------------- complex entry points
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _mds_apply_impl(g, c, interpret):
+    mode = _mode(interpret)
     gr, gi = ref.planar(g)
     payload = c.shape[1:]
     flat = c.reshape(c.shape[0], -1)
     cr, ci = ref.planar(flat)
-    outr, outi = cmatmul(gr, gi, cr, ci, interpret=interpret)
+    if mode == "direct":
+        outr, outi = cmatmul_body(gr, gi, cr, ci)
+    else:
+        itp = mode == "interpret"
+        bl = _block_l(flat.shape[1], g.shape[0] + g.shape[1], itp)
+        outr, outi = cmatmul(gr, gi, cr, ci, block_l=bl, interpret=itp)
     return ref.unplanar(outr, outi).reshape((g.shape[0],) + payload)
 
 
@@ -123,30 +425,31 @@ def mds_apply(g: jax.Array, c: jax.Array, *, interpret: bool | None = None):
 
     ``g``: (n, m) complex code matrix; ``c``: (m, *payload).
     """
-    if interpret is None:
-        interpret = default_interpret()
     return _mds_apply_impl(g, c, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "interpret"))
 def _recombine_impl(c_hat, s, interpret):
+    mode = _mode(interpret)
     m, ell = c_hat.shape
     cr, ci = ref.planar(c_hat)
-    ki = jnp.outer(jnp.arange(m), jnp.arange(ell))
-    ang = -2.0 * jnp.pi * (ki % s) / s
-    wr, wi = jnp.cos(ang).astype(jnp.float32), jnp.sin(ang).astype(jnp.float32)
-    fr, fi = _dft_planes(m)
-    outr, outi = recombine_twiddle_dft(cr, ci, wr, wi, fr, fi, interpret=interpret)
+    wr, wi, fr, fi = _recombine_planes(s, m)
+    if mode == "direct":
+        outr, outi = recombine_body(cr, ci, wr, wi, fr, fi)
+    else:
+        itp = mode == "interpret"
+        bl = _block_l(ell, 2 * m, itp)
+        outr, outi = recombine_twiddle_dft(
+            cr, ci, wr, wi, fr, fi, block_l=bl, interpret=itp)
     return ref.unplanar(outr, outi).reshape(s)
 
 
 def recombine_fused(c_hat: jax.Array, s: int, *, interpret: bool | None = None):
     """Kernel-backed master recombination: (m, s/m) decoded C -> X (s,)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _recombine_impl(c_hat, s, interpret)
 
 
+# ------------------------------------------------------------- worker fns
 def make_kernel_worker_fn(interpret: bool | None = None):
     """A ``CodedFFT.worker_fn`` that uses the Pallas four-step kernel.
 
@@ -154,13 +457,27 @@ def make_kernel_worker_fn(interpret: bool | None = None):
     and maps over arbitrary leading axes.  All leading axes -- (workers,),
     (batch, workers) from the batched service scheduler, or (batch,
     n_local) under the distributed runtime -- are collapsed into the
-    kernel's single grid dimension, so a bucket of requests costs one
-    Pallas launch instead of one per request.
+    kernel's batch dimension, so a bucket of requests costs one Pallas
+    launch instead of one per request.
     """
 
     def worker_fn(a: jax.Array) -> jax.Array:
         lead, ell = a.shape[:-1], a.shape[-1]
         out = fft_fourstep(a.reshape(-1, ell), interpret=interpret)
         return out.reshape(lead + (ell,))
+
+    return worker_fn
+
+
+def make_kernel_fftn_fn(nd: int, interpret: bool | None = None):
+    """An n-D worker fn: the four-step kernel swept over the last ``nd``
+    axes (separability of the multidimensional DFT).  Used by the n-D and
+    multi-input plans when the kernel backend is active."""
+    worker_1d = make_kernel_worker_fn(interpret)
+
+    def worker_fn(a: jax.Array) -> jax.Array:
+        for ax in range(a.ndim - nd, a.ndim):
+            a = jnp.moveaxis(worker_1d(jnp.moveaxis(a, ax, -1)), -1, ax)
+        return a
 
     return worker_fn

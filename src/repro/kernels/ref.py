@@ -15,7 +15,10 @@ __all__ = [
     "fourstep_fft_ref",
     "fft_ref_complex",
     "cmatmul_ref",
+    "bcmatmul_ref",
+    "encode_worker_ref",
     "recombine_ref",
+    "recombine_batched_ref",
     "planar",
     "unplanar",
 ]
@@ -57,6 +60,30 @@ def cmatmul_ref(
     return cr, ci
 
 
+def bcmatmul_ref(
+    ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Batched planar complex matmul oracle: (q, M, K) @ (q, K, L)."""
+    cr = jnp.einsum("qmk,qkl->qml", ar, br) - jnp.einsum("qmk,qkl->qml", ai, bi)
+    ci = jnp.einsum("qmk,qkl->qml", ar, bi) + jnp.einsum("qmk,qkl->qml", ai, br)
+    return cr, ci
+
+
+def encode_worker_ref(
+    cr: jax.Array, ci: jax.Array, g: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fused encode+worker oracle: message planes -> coded worker spectra.
+
+    ``cr, ci``: (q, m, L) planes; ``g``: (n, m) complex generator.  The
+    mathematical answer -- encode with G then FFT each coded shard --
+    computed in natural complex arithmetic, independent of the kernel's
+    stage ordering and four-step factorization.
+    """
+    c = unplanar(cr, ci)
+    a = jnp.einsum("nm,qml->qnl", g.astype(c.dtype), c)
+    return planar(jnp.fft.fft(a, axis=-1), cr.dtype)
+
+
 def recombine_ref(
     cr: jax.Array,
     ci: jax.Array,
@@ -70,4 +97,20 @@ def recombine_ref(
     ti = cr * wi + ci * wr
     outr = fr @ tr - fi @ ti
     outi = fr @ ti + fi @ tr
+    return outr, outi
+
+
+def recombine_batched_ref(
+    cr: jax.Array,
+    ci: jax.Array,
+    wr: jax.Array,
+    wi: jax.Array,
+    fr: jax.Array,
+    fi: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched twiddle+DFT oracle on planar (q, m, L) data."""
+    tr = cr * wr[None] - ci * wi[None]
+    ti = cr * wi[None] + ci * wr[None]
+    outr = jnp.einsum("jm,qml->qjl", fr, tr) - jnp.einsum("jm,qml->qjl", fi, ti)
+    outi = jnp.einsum("jm,qml->qjl", fr, ti) + jnp.einsum("jm,qml->qjl", fi, tr)
     return outr, outi

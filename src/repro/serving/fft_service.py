@@ -14,9 +14,21 @@ per bucket with a per-request straggler mask -- master-side work (MDS
 encode/decode, recombine) amortizes across the whole bucket instead of
 being paid per request.  ``submit`` is the batch-of-one special case.
 
+The default bucket executor is the Pallas kernel pipeline (DESIGN.md §6):
+requests are split to f32 real/imag planes ONCE at ingress, interleaved on
+planes, pushed through the fused encode+worker kernel (coded shards never
+round-trip HBM between encode and the worker DFT), decoded by one batched
+MXU matmul against per-request scatter decode matrices from the
+:class:`~repro.serving.decode_cache.DecodeMatrixCache` LRU, recombined by
+the fused twiddle+DFT kernel, and recombined to complex ONCE at egress.
+``use_reference=True`` is the escape hatch back to the jnp-oracle
+``plan.run`` executor (as is any config the kernel path does not cover:
+a mesh, an explicit ``worker_fn`` plug-in, a pinned ``decode_method``, or
+a non-complex64 dtype).
+
 With a mesh, worker compute runs under ``DistributedCodedPlan`` (shard_map,
-batch axis threaded through the collectives); without one, it runs vmapped
-on the local device with identical semantics.
+batch axis threaded through the collectives); without one, it runs on the
+local device with identical semantics.
 """
 
 from __future__ import annotations
@@ -32,8 +44,10 @@ from jax.sharding import Mesh
 from repro.core.coded_fft import CodedFFT
 from repro.core.strategies import coded_fft_threshold
 from repro.distributed.coded_runtime import DistributedCodedPlan
-from repro.distributed.straggler import StragglerModel, empirical_completion
+from repro.distributed.straggler import StragglerModel
+from repro.kernels import ops, ref
 from repro.serving.batching import bucket_size
+from repro.serving.decode_cache import DecodeMatrixCache
 
 __all__ = ["FFTServiceConfig", "FFTService", "ServiceStats"]
 
@@ -46,9 +60,15 @@ class FFTServiceConfig:
     dtype: jnp.dtype = jnp.complex64
     straggler: StragglerModel = StragglerModel(t0=1.0, mu=1.0)
     seed: int = 0
-    worker_fn: Optional[object] = None   # kernel plug-in (ops.make_kernel_worker_fn)
+    worker_fn: Optional[object] = None   # explicit worker plug-in (overrides
+    #                                      the default kernel dispatch)
+    use_reference: bool = False   # escape hatch: jnp-oracle hot path
     max_batch: int = 64           # scheduler bucket cap per (s, m)
-    decode_method: str = "auto"   # MDS decode dispatch (DESIGN.md §4)
+    decode_method: str = "auto"   # MDS decode dispatch (DESIGN.md §4);
+    #                               non-"auto" pins the reference executor
+    decode_cache_size: int = 512  # LRU size of per-mask decode matrices
+    #                               (past the C(N, k) mask-pattern count for
+    #                               small fleets, so steady state is all-hit)
 
 
 @dataclasses.dataclass
@@ -58,6 +78,8 @@ class ServiceStats:
     coded_latency: float = 0.0     # sum of m-th order statistics
     uncoded_latency: float = 0.0   # sum of "wait for everyone" latencies
     stragglers_tolerated: int = 0
+    decode_cache_hits: int = 0     # decode-matrix LRU hits (kernel path)
+    decode_cache_misses: int = 0   # ... and misses (host inversions paid)
 
     def summary(self) -> dict:
         n = max(self.requests, 1)
@@ -69,6 +91,8 @@ class ServiceStats:
             "speedup": (self.uncoded_latency / self.coded_latency
                         if self.coded_latency > 0 else float("nan")),
             "stragglers_tolerated": self.stragglers_tolerated,
+            "decode_cache_hits": self.decode_cache_hits,
+            "decode_cache_misses": self.decode_cache_misses,
         }
 
 
@@ -76,7 +100,8 @@ class FFTService:
     """Batched straggler-tolerant FFT frontend over ``CodedPlan`` execution.
 
     Requests of any length with ``m | s`` are accepted; each distinct
-    ``(s, m)`` gets its own cached plan and jitted bucket executors.
+    ``(s, m)`` gets its own cached plan, decode-matrix LRU, and jitted
+    bucket executors.
     """
 
     def __init__(self, cfg: FFTServiceConfig, mesh: Optional[Mesh] = None,
@@ -88,7 +113,8 @@ class FFTService:
         self.stats = ServiceStats()
         self._plans: dict[tuple[int, int], CodedFFT] = {}
         self._runtimes: dict[tuple[int, int], DistributedCodedPlan] = {}
-        self._runners: dict[tuple[int, int, int], object] = {}
+        self._runners: dict[tuple, object] = {}
+        self._decode_caches: dict[tuple[int, int], DecodeMatrixCache] = {}
         # default-config plan/runtime, kept as attributes for introspection
         # (and reused by the executor cache for default-length requests)
         self.plan = self._plan_for(cfg.s)
@@ -104,6 +130,7 @@ class FFTService:
                 kwargs["worker_fn"] = cfg.worker_fn
             self._plans[key] = CodedFFT(
                 s=s, m=cfg.m, n_workers=cfg.n_workers, dtype=cfg.dtype,
+                backend="reference" if cfg.use_reference else "kernel",
                 **kwargs)
         return self._plans[key]
 
@@ -114,29 +141,108 @@ class FFTService:
                 self._plan_for(s), self.mesh, self.axis)
         return self._runtimes[key]
 
+    def _decode_cache_for(self, s: int) -> DecodeMatrixCache:
+        key = (s, self.cfg.m)
+        if key not in self._decode_caches:
+            self._decode_caches[key] = DecodeMatrixCache(
+                np.asarray(self._plan_for(s).generator),
+                maxsize=self.cfg.decode_cache_size)
+        return self._decode_caches[key]
+
+    def _kernel_path(self, s: int) -> bool:
+        """Does this bucket run the fused planar kernel executor?
+
+        The kernel path owns the default local config; anything it does not
+        cover -- a mesh (the distributed runtime executes instead), an
+        explicit ``worker_fn`` plug-in, a pinned ``decode_method``, a
+        reference request, or a non-c64 dtype -- falls back to ``plan.run``.
+        """
+        cfg = self.cfg
+        return (self.mesh is None
+                and not cfg.use_reference
+                and cfg.worker_fn is None
+                and cfg.decode_method == "auto"
+                and self._plan_for(s).resolved_backend == "kernel")
+
     def _runner_for(self, s: int, bucket: int):
         """One jitted batched encode->worker->decode per (s, m, bucket)."""
-        key = (s, self.cfg.m, bucket)
+        kernel = self._kernel_path(s)
+        key = (s, self.cfg.m, bucket, kernel)
         if key not in self._runners:
-            method = self.cfg.decode_method
-            if self.mesh is not None:
-                runtime = self._runtime_for(s)
-                fn = lambda xb, masks: runtime.run(xb, masks, method=method)
+            if kernel:
+                self._runners[key] = self._make_kernel_runner(s, bucket)
             else:
-                plan = self._plan_for(s)
-                fn = lambda xb, masks: plan.run(xb, mask=masks, method=method)
-            self._runners[key] = jax.jit(fn)
+                method = self.cfg.decode_method
+                if self.mesh is not None:
+                    runtime = self._runtime_for(s)
+                    fn = lambda xb, masks: runtime.run(xb, masks, method=method)
+                else:
+                    plan = self._plan_for(s)
+                    fn = lambda xb, masks: plan.run(xb, mask=masks, method=method)
+                self._runners[key] = jax.jit(fn)
         return self._runners[key]
+
+    def _make_kernel_runner(self, s: int, bucket: int):
+        """The fused planar bucket executor (DESIGN.md §6).
+
+        One planar split at ingress, planes threaded end-to-end, one
+        complex recombine at egress.  Straggler handling lives entirely in
+        the per-request decode matrices (zero columns for non-responders),
+        so the jitted function takes no mask.  Bucket shapes that fit the
+        VMEM working set run the whole pipeline as ONE Pallas launch
+        (``ops.coded_bucket``); larger shapes fall back to the stage
+        kernels (fused encode+worker -> decode matmul -> recombine).
+        """
+        plan = self._plan_for(s)
+        m, ell = plan.m, plan.shard_len
+        gr, gi = ref.planar(plan.generator)
+
+        if ops.default_interpret():
+            # off-TPU: the direct executor (platform-FFT worker stage,
+            # gathered compact decode -- DESIGN.md §6)
+            def fn(xb: jax.Array, dplanes: jax.Array,
+                   subsets: jax.Array) -> jax.Array:
+                # dplanes: (2, bucket, m, m) stacked real/imag inverse
+                # planes -- ONE transfer per bucket, split for free in-jit
+                xr, xi = ref.planar(xb)                  # ingress split
+                yr, yi = ops.coded_bucket_direct(
+                    xr, xi, dplanes[0], dplanes[1], subsets, gr, gi, s)
+                return ref.unplanar(yr, yi)              # egress recombine
+
+            return jax.jit(fn)
+
+        whole = ops.coded_bucket_fusable(s, m, plan.n_workers)
+
+        def fn(xb: jax.Array, dplanes: jax.Array) -> jax.Array:
+            # dplanes: (2, bucket, m, N) stacked real/imag scatter decode
+            # planes -- ONE host->device transfer, split for free in-jit
+            dr, di = dplanes[0], dplanes[1]
+            xr, xi = ref.planar(xb)                      # ingress split
+            if whole:
+                yr, yi = ops.coded_bucket(xr, xi, dr, di, gr, gi, s)
+                return ref.unplanar(yr, yi)              # egress recombine
+            # interleave on planes: c_i[j] = x[i + j*m]
+            cr = jnp.swapaxes(xr.reshape(bucket, ell, m), -1, -2)
+            ci = jnp.swapaxes(xi.reshape(bucket, ell, m), -1, -2)
+            br, bi = ops.encode_worker(cr, ci, gr, gi)   # fused stage 1+2+3
+            hr, hi = ops.decode_apply(dr, di, br, bi)    # batched MXU decode
+            yr, yi = ops.recombine_planar(hr, hi, s)     # fused twiddle+DFT
+            return ref.unplanar(yr, yi)                  # egress recombine
+
+        return jax.jit(fn)
 
     # ------------------------------------------------------------------
     def _simulate_arrivals(self, n_requests: int
                            ) -> tuple[np.ndarray, np.ndarray]:
-        """Per-request worker latencies + availability masks at decode time."""
+        """Per-request worker latencies + availability masks at decode time.
+
+        One vectorized draw per bucket -- a per-request sampling loop costs
+        more host time than the whole decode at service bucket sizes.
+        """
         cfg = self.cfg
         k = coded_fft_threshold(cfg.n_workers, cfg.m)
-        lat = np.stack([
-            cfg.straggler.sample(cfg.n_workers, 1.0 / cfg.m, self.rng)
-            for _ in range(n_requests)])
+        lat = cfg.straggler.sample(
+            (n_requests, cfg.n_workers), 1.0 / cfg.m, self.rng)
         t_done = np.sort(lat, axis=-1)[:, k - 1]
         mask = lat <= t_done[:, None]
         return lat, mask
@@ -144,28 +250,27 @@ class FFTService:
     def _account(self, lat: np.ndarray, mask: np.ndarray) -> None:
         cfg = self.cfg
         k = coded_fft_threshold(cfg.n_workers, cfg.m)
-        for row_lat, row_mask in zip(lat, mask):
-            self.stats.requests += 1
-            self.stats.coded_latency += empirical_completion(row_lat, k)
-            self.stats.uncoded_latency += empirical_completion(
-                row_lat, cfg.n_workers)
-            self.stats.stragglers_tolerated += int((~row_mask).sum())
+        lat_sorted = np.sort(lat, axis=-1)
+        self.stats.requests += lat.shape[0]
+        self.stats.coded_latency += float(lat_sorted[:, k - 1].sum())
+        self.stats.uncoded_latency += float(lat_sorted[:, -1].sum())
+        self.stats.stragglers_tolerated += int((~mask).sum())
 
     # ------------------------------------------------------------------
-    def submit(self, x: jax.Array) -> jax.Array:
+    def submit(self, x: jax.Array) -> np.ndarray:
         """One request: returns F{x}, never waiting for stragglers."""
         return self.submit_batch([x])[0]
 
-    def submit_batch(self, xs: Sequence[jax.Array]) -> list[jax.Array]:
+    def submit_batch(self, xs: Sequence[jax.Array]) -> list[np.ndarray]:
         """Serve a batch of requests, bucketed by transform length.
 
         Master-side encode/decode for each bucket runs as ONE jitted call
         over the stacked requests; each request still gets its own
         simulated straggler pattern, and results come back in submission
-        order.
+        order as host arrays (one device->host transfer per bucket).
         """
         cfg = self.cfg
-        results: list[Optional[jax.Array]] = [None] * len(xs)
+        results: list[Optional[np.ndarray]] = [None] * len(xs)
         by_len: dict[int, list[int]] = {}
         for i, x in enumerate(xs):
             by_len.setdefault(int(x.shape[-1]), []).append(i)
@@ -193,7 +298,32 @@ class FFTService:
         masks = np.ones((bucket, cfg.n_workers), bool)
         masks[:n_live] = mask
 
-        out = self._runner_for(s, bucket)(
-            jnp.asarray(xb, cfg.dtype), jnp.asarray(masks))
+        if self._kernel_path(s):
+            # per-request decode matrices from the LRU (host-side: the
+            # masks are host data already, and repeats hit the cache)
+            cache = self._decode_cache_for(s)
+            h0, m0 = cache.hits, cache.misses
+            if ops.default_interpret():
+                invs, subsets = cache.compact(masks)
+                dplanes = np.stack([invs.real, invs.imag]).astype(np.float32)
+                args = (jnp.asarray(xb, cfg.dtype), jnp.asarray(dplanes),
+                        jnp.asarray(subsets))
+            else:
+                dmats = cache.matrices(masks)
+                dplanes = np.stack([dmats.real, dmats.imag]).astype(np.float32)
+                args = (jnp.asarray(xb, cfg.dtype), jnp.asarray(dplanes))
+            # deltas, not lifetime cache totals: every other ServiceStats
+            # field accumulates, so a stats reset must window these too
+            self.stats.decode_cache_hits += cache.hits - h0
+            self.stats.decode_cache_misses += cache.misses - m0
+            out = self._runner_for(s, bucket)(*args)
+        else:
+            out = self._runner_for(s, bucket)(
+                jnp.asarray(xb, cfg.dtype), jnp.asarray(masks))
+        # ONE device->host transfer per bucket: per-request eager jax slices
+        # would pay a python lax.slice dispatch per request instead, which
+        # dominates the bucket at CPU latencies.  Results are host arrays
+        # (views into the bucket transfer); they interop with jnp directly.
+        out_rows = np.asarray(out)
         for row, i in enumerate(idxs):
-            results[i] = out[row]
+            results[i] = out_rows[row]

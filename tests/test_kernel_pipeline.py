@@ -1,0 +1,302 @@
+"""Kernel-first hot path: fused pipeline parity, backend dispatch rules,
+and decode-matrix LRU correctness (DESIGN.md §6).
+
+Parity tests pin ``interpret=True`` so the fused kernels are exercised
+through the real Pallas machinery on CPU in every PR (the CI
+kernels-interpret job runs this module); dispatch tests cover the
+``interpret=None`` default (direct kernel-body evaluation off-TPU) and
+the plan/service backend-selection rules.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CodedFFT, CodedFFTND, mds
+from repro.core.coded_fft import _default_fft
+from repro.kernels import ops, ref
+from repro.serving import FFTService, FFTServiceConfig
+from repro.serving.decode_cache import DecodeMatrixCache
+
+pytestmark = pytest.mark.kernels
+
+RTOL = 3e-4
+
+
+def _randc(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.normal(size=shape) + 1j * rng.normal(size=shape))
+        .astype(np.complex64))
+
+
+def _relerr(got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    return np.abs(got - want).max() / max(np.abs(want).max(), 1e-12)
+
+
+# --------------------------------------------- fused encode+worker parity
+@pytest.mark.parametrize("m,n,ell", [
+    (4, 8, 512),     # the service default shape (pow2)
+    (4, 6, 384),     # non-power-of-two composite L
+    (4, 6, 189),     # odd composite L (split_factor -> 9 x 21)
+    (2, 5, 127),     # prime L: split_factor falls back to (1, L)
+    (3, 7, 96),      # odd m
+])
+@pytest.mark.parametrize("fused", [True, False])
+def test_encode_worker_parity_interpret(m, n, ell, fused):
+    """Fused encode+worker == encode_dft + fft oracle, through Pallas
+    interpret mode, for non-power-of-two and odd L (split_factor
+    fallbacks) in both the fused and the two-pass (separate) paths."""
+    c = _randc((3, m, ell), seed=ell + m)
+    g = mds.rs_generator(n, m, jnp.complex64)
+    cr, ci = ref.planar(c)
+    gr, gi = ref.planar(g)
+    br, bi = ops.encode_worker(cr, ci, gr, gi, interpret=True, fused=fused)
+    wr, wi = ref.encode_worker_ref(cr, ci, g)
+    assert _relerr(ref.unplanar(br, bi), ref.unplanar(wr, wi)) < RTOL
+    # and the default dispatch (direct path off-TPU) is the same math
+    # (not bit-identical: XLA may reassociate the f32 accumulations)
+    br2, bi2 = ops.encode_worker(cr, ci, gr, gi, fused=fused)
+    assert _relerr(ref.unplanar(br2, bi2), ref.unplanar(br, bi)) < 1e-5
+
+
+def test_split_factor_prime_fallback():
+    assert ops.split_factor(127) == (1, 127)
+    a, b = ops.split_factor(189)
+    assert a * b == 189 and 1 < a <= b
+
+
+def test_degenerate_factorization_falls_back_to_platform_fft():
+    """A large prime shard length must NOT build a dense (L, L) DFT matrix
+    (regression: the default kernel worker at L=10007 would have allocated
+    ~800 MB of DFT planes and run O(L^2) flops); fourstep_planar falls
+    back to the platform FFT past the (B, B) budget and stays exact."""
+    ell = 10007  # prime
+    a, b = ops.split_factor(ell)
+    assert b * b > ops._FUSED_MAX_ELEMS
+    x = _randc((2, ell), seed=13)
+    xr, xi = ref.planar(x)
+    got = ref.unplanar(*ops.fourstep_planar(xr, xi))
+    want = np.fft.fft(np.asarray(x, np.complex128), axis=-1)
+    assert _relerr(got, want) < 1e-3
+    # end-to-end through the default plan (s = m * L)
+    plan = CodedFFT(s=4 * ell, m=4, n_workers=8)
+    xs = _randc((4 * ell,), seed=14)
+    y = plan.run(xs)
+    assert _relerr(y, np.fft.fft(np.asarray(xs, np.complex128))) < 1e-3
+
+
+# --------------------------------------------------- whole-bucket pipeline
+@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (756, 4, 6), (254, 2, 5)])
+def test_coded_bucket_kernel_parity(s, m, n):
+    """One-launch bucket pipeline (interleave -> encode -> worker ->
+    decode -> recombine) == jnp.fft, via Pallas interpret, including odd
+    and prime shard lengths."""
+    assert ops.coded_bucket_fusable(s, m, n)
+    q = 3
+    xb = _randc((q, s), seed=s)
+    g = mds.rs_generator(n, m, jnp.complex64)
+    rng = np.random.default_rng(s)
+    masks = np.zeros((q, n), bool)
+    for row in masks:
+        row[rng.choice(n, size=m, replace=False)] = True
+    cache = DecodeMatrixCache(np.asarray(g))
+    dmats = cache.matrices(masks)
+    xr, xi = ref.planar(xb)
+    gr, gi = ref.planar(g)
+    dr = jnp.asarray(dmats.real.astype(np.float32))
+    di = jnp.asarray(dmats.imag.astype(np.float32))
+    yr, yi = ops.coded_bucket(xr, xi, dr, di, gr, gi, s, interpret=True)
+    want = np.fft.fft(np.asarray(xb, np.complex128), axis=-1)
+    assert _relerr(ref.unplanar(yr, yi), want) < 1e-3
+    # direct path (off-TPU default) computes the identical body
+    # (not bit-identical: XLA may reassociate the f32 accumulations)
+    yr2, yi2 = ops.coded_bucket(xr, xi, dr, di, gr, gi, s)
+    assert _relerr(ref.unplanar(yr2, yi2), ref.unplanar(yr, yi)) < 1e-5
+
+
+@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (756, 4, 6)])
+def test_coded_bucket_direct_matches_pallas_bucket(s, m, n):
+    """The off-TPU direct executor (platform-FFT worker stage, gathered
+    compact decode) == the Pallas bucket kernel == jnp.fft."""
+    q = 3
+    xb = _randc((q, s), seed=s + 1)
+    g = mds.rs_generator(n, m, jnp.complex64)
+    rng = np.random.default_rng(s)
+    masks = np.zeros((q, n), bool)
+    for row in masks:
+        row[rng.choice(n, size=m, replace=False)] = True
+    cache = DecodeMatrixCache(np.asarray(g))
+    invs, subsets = cache.compact(masks)
+    dmats = cache.matrices(masks)
+    xr, xi = ref.planar(xb)
+    gr, gi = ref.planar(g)
+    yr, yi = ops.coded_bucket_direct(
+        xr, xi, jnp.asarray(invs.real.astype(np.float32)),
+        jnp.asarray(invs.imag.astype(np.float32)),
+        jnp.asarray(subsets), gr, gi, s)
+    want = np.fft.fft(np.asarray(xb, np.complex128), axis=-1)
+    assert _relerr(ref.unplanar(yr, yi), want) < 1e-3
+    kr, ki = ops.coded_bucket(
+        xr, xi, jnp.asarray(dmats.real.astype(np.float32)),
+        jnp.asarray(dmats.imag.astype(np.float32)), gr, gi, s,
+        interpret=True)
+    assert _relerr(ref.unplanar(yr, yi), ref.unplanar(kr, ki)) < 1e-4
+
+
+def test_bcmatmul_and_batched_recombine_parity():
+    q, m, n, ell = 5, 4, 8, 96
+    a = _randc((q, m, n), seed=1)
+    b = _randc((q, n, ell), seed=2)
+    from repro.kernels.cmatmul import bcmatmul
+    from repro.kernels.recombine import recombine_twiddle_dft_batched
+
+    ar, ai = ref.planar(a)
+    br, bi = ref.planar(b)
+    cr, ci = bcmatmul(ar, ai, br, bi, block_q=2, block_l=32, interpret=True)
+    wr, wi = ref.bcmatmul_ref(ar, ai, br, bi)
+    np.testing.assert_allclose(np.asarray(cr), np.asarray(wr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ci), np.asarray(wi), rtol=1e-4,
+                               atol=1e-4)
+
+    c = _randc((q, m, ell), seed=3)
+    s = m * ell
+    cr, ci = ref.planar(c)
+    twr, twi, fr, fi = ops._recombine_planes(s, m)
+    got = recombine_twiddle_dft_batched(
+        cr, ci, twr, twi, fr, fi, block_q=2, block_l=32, interpret=True)
+    want = ref.recombine_batched_ref(cr, ci, twr, twi, fr, fi)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------- backend dispatch rules
+def test_backend_dispatch_rules():
+    # c64 + default backend -> kernel engine
+    plan = CodedFFT(s=256, m=4, n_workers=6)
+    assert plan.backend == "kernel" and plan.resolved_backend == "kernel"
+    # explicit reference backend wins
+    assert CodedFFT(s=256, m=4, n_workers=6,
+                    backend="reference").resolved_backend == "reference"
+    # complex128 (numerics tier) always resolves to the jnp oracle
+    p128 = CodedFFT(s=256, m=4, n_workers=6, dtype=jnp.complex128)
+    assert p128.resolved_backend == "reference"
+    # explicit worker_fn plug-in overrides the backend worker
+    p = CodedFFT(s=256, m=4, n_workers=6, worker_fn=_default_fft)
+    assert p.resolved_worker_fn is _default_fft
+
+
+def test_kernel_backend_plan_run_matches_fft():
+    """Default (kernel-backend) plan.run == jnp.fft, batched and unbatched,
+    including NaN-poisoned stragglers under a mask."""
+    plan = CodedFFT(s=756, m=4, n_workers=6)  # odd L = 189
+    xb = _randc((3, 756), seed=5)
+    out = plan.run(xb)
+    want = np.fft.fft(np.asarray(xb, np.complex128), axis=-1)
+    assert _relerr(out, want) < 1e-3
+    b = plan.worker_compute(plan.encode(xb[0]))
+    b = b.at[jnp.asarray([1, 4])].set(jnp.nan)
+    mask = jnp.asarray([True, False, True, True, False, True])
+    got = plan.decode(b, mask=mask)
+    assert _relerr(got, want[0]) < 1e-3
+
+
+def test_kernel_backend_nd_plan():
+    plan = CodedFFTND(shape=(16, 12), factors=(2, 2), n_workers=6)
+    assert plan.resolved_backend == "kernel"
+    t = _randc((16, 12), seed=9)
+    got = plan.run(t)
+    want = np.fft.fft2(np.asarray(t, np.complex128))
+    assert _relerr(got, want) < 1e-3
+
+
+# ------------------------------------------------------- decode-matrix LRU
+def test_decode_cache_hit_miss_and_eviction():
+    g = np.asarray(mds.rs_generator(8, 4, jnp.complex64))
+    cache = DecodeMatrixCache(g, maxsize=2)
+    m1 = np.array([1, 1, 1, 1, 0, 0, 0, 0], bool)
+    m2 = np.array([0, 1, 1, 1, 1, 0, 0, 0], bool)
+    m3 = np.array([1, 0, 1, 0, 1, 0, 1, 0], bool)
+    d1 = cache.matrix(m1)
+    assert (cache.hits, cache.misses) == (0, 1)
+    assert np.array_equal(cache.matrix(m1), d1)
+    assert (cache.hits, cache.misses) == (1, 1)
+    cache.matrix(m2)
+    cache.matrix(m1)            # refresh m1 -> m2 is now LRU
+    cache.matrix(m3)            # evicts m2
+    assert len(cache) == 2
+    assert (cache.hits, cache.misses) == (2, 3)
+    cache.matrix(m2)            # recomputed after eviction, same value
+    assert cache.misses == 4
+    # matrices are the true scatter inverses regardless of cache churn
+    for mask in (m1, m2, m3):
+        d, inv, sub = cache._compute(mask)
+        np.testing.assert_array_equal(sub, DecodeMatrixCache.subset_of(mask, 4))
+        np.testing.assert_allclose(
+            d[:, sub] @ g[sub, :].astype(np.complex128), np.eye(4),
+            atol=1e-5)
+        np.testing.assert_array_equal(d[:, sub], inv)
+        assert np.all(d[:, [k for k in range(8) if k not in sub]] == 0)
+
+
+def test_decode_cache_rejects_undecodable_mask():
+    g = np.asarray(mds.rs_generator(8, 4, jnp.complex64))
+    cache = DecodeMatrixCache(g)
+    with pytest.raises(ValueError, match="responders"):
+        cache.matrix(np.array([1, 1, 1, 0, 0, 0, 0, 0], bool))
+
+
+def test_service_lru_churn_stays_correct():
+    """With a tiny decode cache, straggler-mask churn forces constant
+    evictions; every request must still decode exactly."""
+    svc = FFTService(FFTServiceConfig(
+        s=256, m=4, n_workers=8, seed=11, decode_cache_size=2))
+    rng = np.random.default_rng(0)
+    worst = 0.0
+    for _ in range(6):
+        xs = [jnp.asarray((rng.normal(size=256) + 1j * rng.normal(size=256))
+                          .astype(np.complex64)) for _ in range(8)]
+        for x, y in zip(xs, svc.submit_batch(xs)):
+            worst = max(worst, float(np.max(np.abs(y - np.fft.fft(x)))))
+    assert worst < 1e-2, worst
+    st = svc.stats.summary()
+    # churn proof: far more misses than the cache can hold
+    assert st["decode_cache_misses"] > 2
+    assert st["requests"] == 48
+
+
+# ----------------------------------------------- service path selection
+def test_service_default_uses_kernel_path_with_reference_escape():
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8))
+    assert svc._kernel_path(256)
+    assert svc.plan.resolved_backend == "kernel"
+    ref_svc = FFTService(FFTServiceConfig(
+        s=256, m=4, n_workers=8, use_reference=True))
+    assert not ref_svc._kernel_path(256)
+    assert ref_svc.plan.resolved_backend == "reference"
+    # explicit worker plug-in or pinned decode method -> plan.run executor
+    plug = FFTService(FFTServiceConfig(
+        s=256, m=4, n_workers=8,
+        worker_fn=ops.make_kernel_worker_fn(interpret=True)))
+    assert not plug._kernel_path(256)
+    pinned = FFTService(FFTServiceConfig(
+        s=256, m=4, n_workers=8, decode_method="solve"))
+    assert not pinned._kernel_path(256)
+
+
+def test_service_kernel_vs_reference_same_results():
+    """Same seed => same straggler draws => kernel and reference executors
+    must agree to f32 tolerance on every request."""
+    cfgs = [FFTServiceConfig(s=512, m=4, n_workers=8, seed=7,
+                             use_reference=flag) for flag in (False, True)]
+    rng = np.random.default_rng(2)
+    xs = [jnp.asarray((rng.normal(size=512) + 1j * rng.normal(size=512))
+                      .astype(np.complex64)) for _ in range(5)]
+    outs = [FFTService(c).submit_batch(xs) for c in cfgs]
+    for yk, yr in zip(*outs):
+        assert float(np.max(np.abs(yk - yr))) < 1e-3

@@ -24,6 +24,8 @@ from repro.kernels.fourstep_fft import fourstep_fused, fourstep_stage1, fourstep
 from repro.kernels.cmatmul import cmatmul
 from repro.kernels.recombine import recombine_twiddle_dft
 
+pytestmark = pytest.mark.kernels
+
 RTOL = 2e-4  # f32 planar complex, reductions up to 4096
 ATOL = 1e-3
 

@@ -8,6 +8,8 @@ import pytest
 from repro.kernels.wkv import wkv_pallas
 from repro.models.rwkv6 import wkv_scan_reference
 
+pytestmark = pytest.mark.kernels
+
 
 def _inputs(b, h, t, kd, seed=0, decay=1.0):
     keys = jax.random.split(jax.random.PRNGKey(seed), 6)
