@@ -91,6 +91,51 @@ def run() -> list[str]:
         "batch_speedup": dt_seq / dt_bat,
         "batches": bat.stats.summary()["batches"],
     }
+
+    # ---- real-input (r2c) bucket config (DESIGN.md §7) ----------------------
+    # same shape, REAL traffic: half-payload worker shards through the
+    # r2c executor vs serving the same signals as complex requests
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    xs_real = [jnp.asarray(rng.normal(size=s).astype(np.float32))
+               for _ in range(n_req)]
+    rsvc = FFTService(cfg)
+    outs_r = rsvc.submit_batch(xs_real, kind="r2c")     # compile warm-up
+    worst_r = max(
+        float(np.abs(y - np.fft.rfft(np.asarray(x))).max())
+        for x, y in zip(xs_real, outs_r))
+    assert worst_r < 1e-2
+    xs_cplx = [x.astype(jnp.complex64) for x in xs_real]
+    rsvc.submit_batch(xs_cplx)                          # compile warm-up
+    t_r2c, t_c2c = [], []
+    for r in range(10):
+        order = ((("r2c",), t_r2c), (("c2c",), t_c2c))
+        for (kind,), acc in (order if r % 2 == 0 else order[::-1]):
+            t0 = time.perf_counter()
+            if kind == "r2c":
+                rsvc.submit_batch(xs_real, kind="r2c")
+            else:
+                rsvc.submit_batch(xs_cplx)
+            acc.append(time.perf_counter() - t0)
+    import statistics
+
+    r_med, c_med = statistics.median(t_r2c), statistics.median(t_c2c)
+    result["rfft"] = {
+        "s": s, "m": cfg.m, "n_workers": cfg.n_workers,
+        "n_requests": n_req,
+        "r2c_rps": n_req / r_med,
+        "c2c_on_real_rps": n_req / c_med,
+        "speedup_vs_c2c_on_real": c_med / r_med,
+        "worker_payload_bytes_r2c": (s // cfg.m // 2) * 8,
+        "worker_payload_bytes_c2c": (s // cfg.m) * 8,
+        "worst_abs_err": worst_r,
+    }
+    lines.append(
+        f"  rfft bucket: {n_req} real reqs {r_med * 1e3:.1f} ms "
+        f"({n_req / r_med:.0f} rps) vs c2c-on-real {c_med * 1e3:.1f} ms "
+        f"({n_req / c_med:.0f} rps) -> "
+        f"{c_med / r_med:.2f}x, worst err {worst_r:.1e}")
     # anchor to the repo root so the tracked artifact updates regardless of cwd
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_service.json"
     # append to the perf trajectory rather than overwrite: the previous runs

@@ -26,7 +26,22 @@ from repro.core.mds import (
 )
 from repro.core.plan import CodedPlan, MDSPlan, MDSPlanBase
 from repro.core.multi_input import CodedFFTMultiInput
-from repro.core.recombine import dft_matrix, recombine, recombine_nd, twiddle
+from repro.core.recombine import (
+    dft_matrix,
+    recombine,
+    recombine_half,
+    recombine_nd,
+    twiddle,
+)
+from repro.core.rfft import (
+    CodedIFFT,
+    CodedIRFFT,
+    CodedRFFT,
+    hermitian_extend,
+    pack_half,
+    pack_pairs,
+    split_packed,
+)
 from repro.core.strategies import (
     UncodedRepetitionFFT,
     coded_fft_threshold,
@@ -38,6 +53,14 @@ __all__ = [
     "CodedFFT",
     "CodedFFTND",
     "CodedFFTMultiInput",
+    "CodedRFFT",
+    "CodedIFFT",
+    "CodedIRFFT",
+    "pack_pairs",
+    "pack_half",
+    "split_packed",
+    "hermitian_extend",
+    "recombine_half",
     "CodedPlan",
     "MDSPlan",
     "MDSPlanBase",

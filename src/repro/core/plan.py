@@ -138,6 +138,14 @@ class MDSPlanBase:
             return ops.make_kernel_fftn_fn(nd)(a)
         return jnp.fft.fftn(a, axes=tuple(range(-nd, 0)))
 
+    def _fft1_worker(self, a: jax.Array, inverse: bool = False) -> jax.Array:
+        """Backend-dispatched 1-D (i)FFT along the last axis -- the shared
+        worker body of the 1-D forward/real/inverse plans (DESIGN.md §7)."""
+        if self.resolved_backend == "kernel":
+            return ops.make_kernel_worker_fn(inverse=inverse)(a)
+        fn = jnp.fft.ifft if inverse else jnp.fft.fft
+        return fn(a, axis=-1)
+
     # -- batch plumbing ------------------------------------------------------
     def _map_batched(self, fn, arr: jax.Array, core_ndim: int, what: str):
         batch = batch_shape(arr, core_ndim, what)

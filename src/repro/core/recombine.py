@@ -9,6 +9,14 @@ i.e. an elementwise *twiddle* ``C[k, i] * omega_s^{ik}`` followed by a batch
 of ``s/m`` independent length-``m`` DFTs along the shard axis.  This is the
 final butterfly stage of Cooley-Tukey, expressed as a dense length-``m``
 DFT so it maps onto an MXU matmul (see kernels/recombine.py).
+
+The same butterfly serves three directions (DESIGN.md §7):
+
+* ``sign=-1`` (default) -- the forward transform;
+* ``sign=+1`` with a ``1/m`` scale -- the inverse transform, whose worker
+  stage is ``ifft`` (each sub-transform carries its own ``1/L``);
+* :func:`recombine_half` -- the real-input forward transform, which only
+  materializes the non-redundant half spectrum ``X[0 .. s/2]``.
 """
 
 from __future__ import annotations
@@ -16,7 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["twiddle", "dft_matrix", "recombine", "recombine_nd"]
+__all__ = ["twiddle", "dft_matrix", "recombine", "recombine_half",
+           "recombine_nd"]
 
 
 def dft_matrix(m: int, dtype=jnp.complex64, sign: float = -1.0) -> jax.Array:
@@ -25,19 +34,43 @@ def dft_matrix(m: int, dtype=jnp.complex64, sign: float = -1.0) -> jax.Array:
     return jnp.exp(sign * 2j * jnp.pi * jk / m).astype(dtype)
 
 
-def twiddle(s: int, m: int, dtype=jnp.complex64) -> jax.Array:
+def twiddle(s: int, m: int, dtype=jnp.complex64,
+            sign: float = -1.0) -> jax.Array:
     """Twiddle plane ``W[k, i] = omega_s^{ik}``, shape ``(m, s/m)``."""
     ell = s // m
     ki = jnp.outer(jnp.arange(m), jnp.arange(ell))
-    return jnp.exp(-2j * jnp.pi * ki / s).astype(dtype)
+    return jnp.exp(sign * 2j * jnp.pi * ki / s).astype(dtype)
 
 
-def recombine(c_hat: jax.Array, s: int) -> jax.Array:
-    """``(m, s/m)`` decoded sub-transforms -> length-``s`` output ``X``."""
+def recombine(c_hat: jax.Array, s: int, sign: float = -1.0) -> jax.Array:
+    """``(m, s/m)`` decoded sub-transforms -> length-``s`` output ``X``.
+
+    ``sign=-1`` recombines forward sub-DFTs; ``sign=+1`` recombines inverse
+    sub-DFTs (caller applies the remaining ``1/m`` normalization -- the
+    per-shard ``1/L`` already lives in the workers' ``ifft``).
+    """
     m = c_hat.shape[0]
-    w = twiddle(s, m, c_hat.dtype)
-    x_mat = dft_matrix(m, c_hat.dtype) @ (c_hat * w)  # (m, s/m)
+    w = twiddle(s, m, c_hat.dtype, sign)
+    x_mat = dft_matrix(m, c_hat.dtype, sign) @ (c_hat * w)  # (m, s/m)
     return x_mat.reshape(s)
+
+
+def recombine_half(c_full: jax.Array, s: int) -> jax.Array:
+    """Symmetry-aware butterfly: Hermitian sub-transforms -> ``X[0..s/2]``.
+
+    ``c_full``: ``(m, L)`` decoded sub-transforms of REAL message shards
+    (each Hermitian along its length-``L`` axis).  Only the DFT rows
+    ``j <= m//2`` are computed -- output index ``u = i + j*L <= s/2`` never
+    touches higher rows -- then the flattened block is cut to the
+    ``s//2 + 1`` non-redundant bins.  The discarded half is recoverable as
+    ``X[s-u] = conj(X[u])``.
+    """
+    m, ell = c_full.shape
+    w = twiddle(s, m, c_full.dtype)
+    rows = m // 2 + 1
+    f_half = dft_matrix(m, c_full.dtype)[:rows]
+    x_mat = f_half @ (c_full * w)  # (m//2 + 1, s/m)
+    return x_mat.reshape(rows * ell)[: s // 2 + 1]
 
 
 def recombine_nd(

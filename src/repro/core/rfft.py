@@ -1,0 +1,294 @@
+"""Real-input and inverse coded transforms as first-class plans (DESIGN.md §7).
+
+The paper's pipeline is linear in the input, so it applies verbatim to
+real signals and to the inverse transform -- what changes is only what the
+shards *carry*.  Three plans live here, all :class:`repro.core.plan.MDSPlan`
+instances over the SAME ``(N, m)`` complex-RS code, with shape-preserving
+worker stages (a plain fft/ifft along the last axis), so the whole encode /
+decode / distributed / kernel stack is reused unchanged:
+
+* :class:`CodedRFFT` (r2c) -- real input, half-spectrum output.  The real
+  interleave shards ``c_i`` (length ``L = s/m``) are *pair-packed* into
+  complex shards ``z_i[j] = c_i[2j] + 1j*c_i[2j+1]`` of length ``L/2``
+  before encoding.  Workers transform HALF-length shards (≈½ the flops)
+  and ship HALF the payload of the complex plan -- exactly the coded-FFT
+  communication overhead (Jeong et al.) that conjugate symmetry removes.
+  Decode recovers ``fft(z_i)``; the master's symmetry-aware butterfly
+  (:func:`split_packed` + Hermitian extension +
+  :func:`repro.core.recombine.recombine_half`) produces ``rfft(x)``.
+  The split uses conjugation -- anti-linear, so it CANNOT commute with the
+  complex MDS code; it must (and does) run after decode.
+
+* :class:`CodedIFFT` (c2c inverse) -- same interleave/encode, workers run
+  ``ifft``, and the recombine butterfly flips its twiddle sign
+  (``recombine(c, s, sign=+1) / m``).
+
+* :class:`CodedIRFFT` (c2r) -- the adjoint of :class:`CodedRFFT`: the
+  master Hermitian-extends the half spectrum, applies the ADJOINT of the
+  recombine butterfly (fold = conj-twiddle + length-``m`` inverse DFT),
+  packs the per-shard Hermitian half spectra (:func:`pack_half`), workers
+  ``ifft`` the half-length packed shards, and postdecode just unpacks
+  real/imag pairs back into the interleave.  Same half-size payloads,
+  same decode stack.
+
+``s % (2m) == 0`` is required for the pair packing (``L`` even).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mds
+from repro.core.interleave import deinterleave, interleave
+from repro.core.plan import MDSPlanBase
+from repro.core.recombine import dft_matrix, recombine, recombine_half, twiddle
+
+__all__ = [
+    "CodedRFFT",
+    "CodedIFFT",
+    "CodedIRFFT",
+    "pack_pairs",
+    "split_packed",
+    "pack_half",
+    "hermitian_extend",
+]
+
+
+# ---------------------------------------------------------------- symmetry ops
+def pack_pairs(c: jax.Array, dtype=jnp.complex64) -> jax.Array:
+    """Real ``(..., L)`` -> packed complex ``(..., L/2)``:
+    ``z[j] = c[2j] + 1j*c[2j+1]``."""
+    ell = c.shape[-1]
+    pairs = c.reshape(c.shape[:-1] + (ell // 2, 2))
+    return (pairs[..., 0] + 1j * pairs[..., 1].astype(dtype)).astype(dtype)
+
+
+def unpack_pairs(z: jax.Array, real_dtype) -> jax.Array:
+    """Inverse of :func:`pack_pairs`: ``(..., n)`` complex -> ``(..., 2n)``
+    real."""
+    n = z.shape[-1]
+    pairs = jnp.stack(
+        [jnp.real(z).astype(real_dtype), jnp.imag(z).astype(real_dtype)],
+        axis=-1)
+    return pairs.reshape(z.shape[:-1] + (2 * n,))
+
+
+def split_packed(z_hat: jax.Array, ell: int) -> jax.Array:
+    """Packed spectrum ``fft_{L/2}(z)`` -> half spectrum ``rfft_L(c)``.
+
+    ``z_hat``: ``(..., L/2)`` with ``z = pack_pairs(c)``, ``c`` real of
+    length ``ell = L``.  Returns ``(..., L/2 + 1)``.  The even/odd split
+    ``E_p = (Z_p + conj(Z_{n-p}))/2``, ``O_p = -j(Z_p - conj(Z_{n-p}))/2``
+    recombines as ``C_p = E_p + O_p * omega_L^p``.  Anti-linear (conjugates
+    its input): master-side only, never inside the code.
+    """
+    zext = jnp.concatenate([z_hat, z_hat[..., :1]], axis=-1)
+    zrev = jnp.conj(zext[..., ::-1])
+    even = 0.5 * (zext + zrev)
+    odd = -0.5j * (zext - zrev)
+    n = z_hat.shape[-1]
+    w = jnp.exp(-2j * jnp.pi * jnp.arange(n + 1) / ell).astype(z_hat.dtype)
+    return even + odd * w
+
+
+def pack_half(c_half: jax.Array, ell: int) -> jax.Array:
+    """Inverse of :func:`split_packed`: half spectrum ``(..., L/2 + 1)`` of a
+    real length-``ell`` signal -> packed spectrum ``(..., L/2)`` with
+    ``ifft_{L/2}(Z)[j] = c[2j] + 1j*c[2j+1]``."""
+    n = c_half.shape[-1] - 1
+    crev = jnp.conj(c_half[..., ::-1])
+    even = 0.5 * (c_half + crev)
+    w = jnp.exp(2j * jnp.pi * jnp.arange(n + 1) / ell).astype(c_half.dtype)
+    odd = 0.5 * (c_half - crev) * w
+    return (even + 1j * odd)[..., :n]
+
+
+def hermitian_extend(c_half: jax.Array) -> jax.Array:
+    """Half spectrum ``(..., L/2 + 1)`` -> full Hermitian ``(..., L)``:
+    ``C[L-p] = conj(C[p])``."""
+    n = c_half.shape[-1] - 1
+    return jnp.concatenate(
+        [c_half, jnp.conj(c_half[..., n - 1:0:-1])], axis=-1)
+
+
+def _real_dtype(dtype) -> jnp.dtype:
+    return jnp.float64 if jnp.dtype(dtype) == jnp.complex128 else jnp.float32
+
+
+# ------------------------------------------------------------------ the plans
+@dataclasses.dataclass(frozen=True)
+class _RS1DPlanBase(MDSPlanBase):
+    """Shared fields/metadata of the 1-D RS-coded transform plans.
+
+    Subclasses set ``_EVEN_SHARDS`` (class attr): the real kinds pair-pack,
+    so their shard length ``L = s/m`` must be even (``2m | s``, ``s > 0``).
+    """
+
+    s: int
+    m: int
+    n_workers: int
+    dtype: jnp.dtype = jnp.complex64
+    backend: str = "kernel"
+
+    _EVEN_SHARDS = False  # class attribute, not a dataclass field
+
+    def __post_init__(self):
+        if self._EVEN_SHARDS:
+            if self.s < 2 * self.m or self.s % (2 * self.m) != 0:
+                raise ValueError(
+                    f"real packing needs 2m | s (s > 0), "
+                    f"got s={self.s} m={self.m}")
+        elif self.s % self.m != 0:
+            raise ValueError(f"m={self.m} must divide s={self.s}")
+        if self.n_workers < self.m:
+            raise ValueError(
+                f"need N >= m, got N={self.n_workers} m={self.m}")
+
+    @property
+    def shard_len(self) -> int:
+        """The per-worker TIME-domain shard length ``L`` (real kinds ship
+        packed payloads of ``L/2``)."""
+        return self.s // self.m
+
+    @property
+    def real_dtype(self) -> jnp.dtype:
+        return _real_dtype(self.dtype)
+
+    @property
+    def recovery_threshold(self) -> int:
+        return self.m
+
+    @property
+    def generator(self) -> jax.Array:
+        return mds.rs_generator(self.n_workers, self.m, self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedRFFT(_RS1DPlanBase):
+    """Real-input forward coded FFT: ``(s,)`` real -> ``(s//2+1,)`` complex.
+
+    Worker shards are the pair-packed message spectra: ``L/2`` complex
+    values each, vs ``L`` for :class:`~repro.core.coded_fft.CodedFFT` on
+    the same ``(s, m)`` -- half the payload bytes on the wire and half the
+    per-worker transform length.  The worker stage is an ordinary fft along
+    the last axis, so the kernel four-step path, the distributed runtime,
+    and the MDS decode stack apply unchanged.
+    """
+
+    kind: str = dataclasses.field(default="r2c", init=False)
+
+    _EVEN_SHARDS = True
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return (self.s // 2 + 1,)
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        return (self.shard_len // 2,)
+
+    def _message1(self, x: jax.Array) -> jax.Array:
+        if jnp.iscomplexobj(x):
+            x = jnp.real(x)
+        c = interleave(x.astype(self.real_dtype), self.m)   # (m, L) real
+        return pack_pairs(c, self.dtype)                    # (m, L/2)
+
+    def _postdecode1(self, z_hat: jax.Array) -> jax.Array:
+        c_half = split_packed(z_hat, self.shard_len)        # (m, L/2+1)
+        return recombine_half(hermitian_extend(c_half), self.s)
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        return self._fft1_worker(a)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedIFFT(_RS1DPlanBase):
+    """Inverse coded FFT (c2c): ``(s,)`` spectrum -> ``(s,)`` signal.
+
+    Identical interleave and code; workers run ``ifft`` on their coded
+    shards (linearity keeps the code intact) and the recombine butterfly
+    conjugates its twiddles, carrying the remaining ``1/m`` of the ``1/s``
+    normalization (the workers' ``ifft`` supplies the ``1/L``).
+    """
+
+    kind: str = dataclasses.field(default="c2c_inv", init=False)
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        return (self.shard_len,)
+
+    def _message1(self, x: jax.Array) -> jax.Array:
+        return interleave(x.astype(self.dtype), self.m)
+
+    def _postdecode1(self, c_hat: jax.Array) -> jax.Array:
+        return recombine(c_hat, self.s, sign=+1.0) / self.m
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        return self._fft1_worker(a, inverse=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedIRFFT(_RS1DPlanBase):
+    """Inverse real coded FFT (c2r): ``(s//2+1,)`` half spectrum -> ``(s,)``
+    real signal -- the adjoint of :class:`CodedRFFT`.
+
+    Message stage (master, before encode): Hermitian-extend the half
+    spectrum, run the ADJOINT recombine butterfly (length-``m`` inverse DFT
+    across the fold of the spectrum + conjugate twiddle), and pack each
+    resulting per-shard Hermitian half spectrum into ``L/2`` complex
+    values.  Workers ``ifft`` the packed coded shards; decode returns the
+    packed interleave of the real output, which postdecode just relabels.
+    Endpoint bins (``Y[0]``, ``Y[s/2]``) have their imaginary parts
+    discarded, matching ``numpy.fft.irfft``.
+    """
+
+    kind: str = dataclasses.field(default="c2r", init=False)
+
+    _EVEN_SHARDS = True
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.s // 2 + 1,)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return (self.s,)
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        return (self.shard_len // 2,)
+
+    def _message1(self, y: jax.Array) -> jax.Array:
+        s, m, ell = self.s, self.m, self.shard_len
+        y = y.astype(self.dtype)
+        head = jnp.real(y[:1]).astype(self.dtype)
+        tail = jnp.real(y[-1:]).astype(self.dtype)
+        mid = y[1:-1]
+        full = jnp.concatenate([head, mid, tail, jnp.conj(mid[::-1])])  # (s,)
+        # adjoint recombine: fold_i[t] = sum_r X[t + r*L] * omega_m^{+ir}
+        #                                * omega_s^{+it}
+        folded = dft_matrix(m, self.dtype, sign=+1.0) @ full.reshape(m, ell)
+        folded = folded * jnp.conj(twiddle(s, m, self.dtype))
+        return pack_half(folded[:, : ell // 2 + 1], ell)     # (m, L/2)
+
+    def _postdecode1(self, z_hat: jax.Array) -> jax.Array:
+        o = unpack_pairs(z_hat, self.real_dtype) / self.m    # (m, L) real
+        return deinterleave(o)                               # (s,) real
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        return self._fft1_worker(a, inverse=True)

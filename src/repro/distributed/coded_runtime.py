@@ -26,6 +26,14 @@ The paper's master/worker topology mapped to SPMD (DESIGN.md §3):
 
 ``n_local = N // axis_size`` coded shards live on each device, so N need
 not equal the device count (e.g. N=8 code on a 4-device axis).
+
+The runtime is plan-generic by construction: every stage touches only
+``plan.message`` / ``plan.worker_compute`` / ``plan.postdecode`` and the
+``worker_shard_shape`` metadata, so the real-input and inverse plans of
+DESIGN.md §7 (``CodedRFFT``/``CodedIFFT``/``CodedIRFFT``) run UNCHANGED:
+their half-length packed shard shapes and per-request masks thread
+through both shard_map stages exactly like the complex plans' (the r2c
+wire payload per worker is half the c2c plan's for the same ``(s, m)``).
 """
 
 from __future__ import annotations

@@ -38,7 +38,19 @@ from jax.experimental import pallas as pl
 from repro.kernels.cmatmul import bcmatmul_body, cmatmul_body
 from repro.kernels.fourstep_fft import encode_fourstep_body
 
-__all__ = ["bucket_body", "bucket_body_fftworker", "coded_fft_bucket"]
+__all__ = [
+    "bucket_body",
+    "bucket_body_fftworker",
+    "coded_fft_bucket",
+    "pack_real_planes",
+    "half_postdecode_body",
+    "rbucket_body",
+    "rbucket_body_fftworker",
+    "coded_rfft_bucket",
+    "ir_message_body",
+    "ir_unpack_body",
+    "irbucket_body_fftworker",
+]
 
 
 def bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
@@ -133,6 +145,267 @@ def bucket_body_fftworker(xr, xi, dvr, dvi, subsets, gr, gi,
     outr, outi = cmatmul_body(fmr, fmi, ur, ui)
     return (jnp.transpose(outr.reshape(m, bq, ell), (1, 0, 2)).reshape(bq, s),
             jnp.transpose(outi.reshape(m, bq, ell), (1, 0, 2)).reshape(bq, s))
+
+
+# ===================================================== real-input (r2c) path
+#
+# The r2c bucket (DESIGN.md §7) carries HALF-length payloads through the
+# identical stage structure: the real request is relabeled into pair-packed
+# message shards z_i[j] = x[i + 2jm] + 1j*x[i + (2j+1)m] (free on planes --
+# the real input IS the plane), the fused encode+worker transforms L/2-point
+# shards, decode is the same batched matmul, and the one NEW stage is the
+# symmetry-aware postdecode: split each packed spectrum into the rfft of its
+# real shard (conjugation = a sign flip on the imag plane, real-linear),
+# Hermitian-extend, and recombine only the m//2+1 butterfly rows that feed
+# the non-redundant bins X[0..s/2].
+
+
+def pack_real_planes(xr, m):
+    """Real request plane -> packed message planes, pure relabeling.
+
+    ``(bq, s)`` real -> ``((bq, m, L/2), (bq, m, L/2))`` planes of
+    ``z_i[j] = x[i + 2jm] + 1j*x[i + (2j+1)m]``.
+    """
+    bq, s = xr.shape
+    n2 = s // m // 2
+    x3 = xr.reshape(bq, n2, 2, m)
+    zr = jnp.transpose(x3[:, :, 0, :], (0, 2, 1))
+    zi = jnp.transpose(x3[:, :, 1, :], (0, 2, 1))
+    return zr, zi
+
+
+def half_postdecode_body(hr, hi, swr, swi, twr, twi, fhr, fhi, s):
+    """Decoded packed spectra -> half-spectrum output planes.
+
+    ``hr, hi``: ``(bq, m, L/2)`` NATURAL-order planes of ``fft(z_i)``;
+    ``swr, swi``: ``(1, L/2+1)`` split twiddle ``omega_L^p``; ``twr, twi``:
+    ``(m, L)`` recombine twiddle; ``fhr, fhi``: ``(m//2+1, m)`` DFT rows.
+    Returns ``(bq, s//2+1)`` planes of ``rfft(x)``.  Conjugation is a sign
+    flip on the imag plane, so every step is f32-plane-native.
+    """
+    bq, m, n2 = hr.shape
+    ell = 2 * n2
+    # split butterfly: Zext[p] = Z[p mod n2], Zrev[p] = conj(Zext[n2-p])
+    hre = jnp.concatenate([hr, hr[..., :1]], axis=-1)
+    hie = jnp.concatenate([hi, hi[..., :1]], axis=-1)
+    rre = jnp.flip(hre, axis=-1)
+    rie = -jnp.flip(hie, axis=-1)
+    er = 0.5 * (hre + rre)
+    ei = 0.5 * (hie + rie)
+    our = 0.5 * (hie - rie)
+    oui = -0.5 * (hre - rre)
+    sw_r = swr[0][None, None, :]
+    sw_i = swi[0][None, None, :]
+    cr = er + our * sw_r - oui * sw_i            # C = E + O * omega_L^p
+    ci = ei + our * sw_i + oui * sw_r            # (bq, m, n2+1)
+    # Hermitian extension: C[L-p] = conj(C[p])
+    cfr = jnp.concatenate([cr, jnp.flip(cr[..., 1:n2], axis=-1)], axis=-1)
+    cfi = jnp.concatenate([ci, -jnp.flip(ci[..., 1:n2], axis=-1)], axis=-1)
+    # recombine twiddle + the m//2+1 non-redundant DFT rows
+    ur = cfr * twr[None] - cfi * twi[None]
+    ui = cfr * twi[None] + cfi * twr[None]
+    ur = jnp.transpose(ur, (1, 0, 2)).reshape(m, bq * ell)
+    ui = jnp.transpose(ui, (1, 0, 2)).reshape(m, bq * ell)
+    outr, outi = cmatmul_body(fhr, fhi, ur, ui)  # (m//2+1, bq*L)
+    rows = m // 2 + 1
+    sh = s // 2 + 1
+    outr = outr.reshape(rows, bq, ell).transpose(1, 0, 2).reshape(bq, -1)
+    outi = outi.reshape(rows, bq, ell).transpose(1, 0, 2).reshape(bq, -1)
+    return outr[:, :sh], outi[:, :sh]
+
+
+def rbucket_body(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                 swr, swi, twr, twi, fhr, fhi, s):
+    """The full r2c pipeline on one (bq, s) block of REAL requests.
+
+    Identical structure to :func:`bucket_body` on half-length payloads
+    (L/2 = A*B four-step planes), plus the symmetry postdecode.  Unlike the
+    c2c bucket, the scrambled four-step order is undone BEFORE the
+    butterfly -- the split needs natural reversed indexing -- which costs
+    one (bq, m, L/2) transpose instead of the c2c path's pre-permuted
+    twiddle trick.
+    """
+    bq, s_ = xr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    n2 = a * b
+    zr, zi = pack_real_planes(xr, m)
+    er, ei = encode_fourstep_body(
+        zr.reshape(bq, m, a, b), zi.reshape(bq, m, a, b),
+        gr, gi, far, fai, wr, wi, fbr, fbi)      # (bq, n, a, b) scrambled
+    hr, hi = bcmatmul_body(dr, di, er.reshape(bq, n, n2),
+                           ei.reshape(bq, n, n2))
+    # unscramble: scr[c*B + d] holds B[c + d*A] -> natural flat index d*A + c
+    hr = hr.reshape(bq, m, a, b).transpose(0, 1, 3, 2).reshape(bq, m, n2)
+    hi = hi.reshape(bq, m, a, b).transpose(0, 1, 3, 2).reshape(bq, m, n2)
+    return half_postdecode_body(hr, hi, swr, swi, twr, twi, fhr, fhi, s)
+
+
+def rbucket_body_fftworker(xr, dvr, dvi, subsets, gr, gi,
+                           swr, swi, twr, twi, fhr, fhi, s):
+    """Direct-mode (off-TPU) r2c bucket: platform-FFT worker on the packed
+    half-length shards, gathered compact decode (cf.
+    :func:`bucket_body_fftworker`), symmetry postdecode."""
+    bq, s_ = xr.shape
+    n, m = gr.shape
+    n2 = s // m // 2
+    zr, zi = pack_real_planes(xr, m)                   # (bq, m, n2)
+    spec = jnp.fft.fft(zr + 1j * zi, axis=-1)
+    sr = jnp.real(spec).astype(xr.dtype)
+    si = jnp.imag(spec).astype(xr.dtype)
+    tr = jnp.transpose(sr, (1, 0, 2)).reshape(m, bq * n2)
+    ti = jnp.transpose(si, (1, 0, 2)).reshape(m, bq * n2)
+    er, ei = cmatmul_body(gr, gi, tr, ti)
+    er = jnp.transpose(er.reshape(n, bq, n2), (1, 0, 2))   # (bq, N, n2)
+    ei = jnp.transpose(ei.reshape(n, bq, n2), (1, 0, 2))
+    idx = subsets[:, :, None]
+    rr = jnp.take_along_axis(er, idx, axis=1)
+    ri = jnp.take_along_axis(ei, idx, axis=1)
+    hr, hi = bcmatmul_body(dvr, dvi, rr, ri)
+    return half_postdecode_body(hr, hi, swr, swi, twr, twi, fhr, fhi, s)
+
+
+def _rbucket_kernel(s):
+    def kernel(xr_ref, dr_ref, di_ref, gr_ref, gi_ref,
+               far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
+               swr_ref, swi_ref, twr_ref, twi_ref, fhr_ref, fhi_ref,
+               or_ref, oi_ref):
+        or_ref[...], oi_ref[...] = rbucket_body(
+            xr_ref[...], dr_ref[...], di_ref[...], gr_ref[...], gi_ref[...],
+            far_ref[...], fai_ref[...], wr_ref[...], wi_ref[...],
+            fbr_ref[...], fbi_ref[...], swr_ref[...], swi_ref[...],
+            twr_ref[...], twi_ref[...], fhr_ref[...], fhi_ref[...], s)
+
+    return kernel
+
+
+def coded_rfft_bucket(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                      swr, swi, twr, twi, fhr, fhi, s, *, block_q: int = 1,
+                      interpret: bool = False):
+    """Fused r2c bucket pipeline: real request planes -> half-spectrum
+    planes, one Pallas launch per grid step.
+
+    ``xr``: (q, s) REAL request plane (no imag plane exists); ``dr, di``:
+    (q, m, N) scatter decode matrices; ``far/wr/fbr``: four-step planes for
+    the HALF length L/2 = A*B; ``swr``: (1, L/2+1) split twiddle; ``twr``:
+    (m, L) recombine twiddle; ``fhr``: (m//2+1, m) DFT rows.  Returns
+    (q, s//2+1) planes of ``rfft(x, axis=-1)``.
+    """
+    q, s_ = xr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    n2 = a * b
+    ell = 2 * n2
+    sh = s // 2 + 1
+    rows = m // 2 + 1
+    block_q = max(1, min(block_q, q))
+    spec_x = pl.BlockSpec((block_q, s), lambda i: (i, 0))
+    spec_o = pl.BlockSpec((block_q, sh), lambda i: (i, 0))
+    spec_d = pl.BlockSpec((block_q, m, n), lambda i: (i, 0, 0))
+    spec_g = pl.BlockSpec((n, m), lambda i: (0, 0))
+    spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
+    spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
+    spec_fb = pl.BlockSpec((b, b), lambda i: (0, 0))
+    spec_sw = pl.BlockSpec((1, n2 + 1), lambda i: (0, 0))
+    spec_tw = pl.BlockSpec((m, ell), lambda i: (0, 0))
+    spec_fh = pl.BlockSpec((rows, m), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((q, sh), xr.dtype),
+        jax.ShapeDtypeStruct((q, sh), xr.dtype),
+    ]
+    return pl.pallas_call(
+        _rbucket_kernel(s),
+        grid=(pl.cdiv(q, block_q),),
+        in_specs=[spec_x, spec_d, spec_d, spec_g, spec_g,
+                  spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb,
+                  spec_sw, spec_sw, spec_tw, spec_tw, spec_fh, spec_fh],
+        out_specs=[spec_o, spec_o],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="coded_rfft_bucket",
+    )(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+      swr, swi, twr, twi, fhr, fhi)
+
+
+# ===================================================== real-output (c2r) path
+def ir_message_body(yr, yi, fpr, fpi, ctwr, ctwi, pwr, pwi, s, m):
+    """c2r message stage on planes (the ADJOINT of the r2c postdecode).
+
+    ``yr, yi``: (bq, s//2+1) half-spectrum request planes.  Hermitian-
+    extends (endpoint imag parts dropped, matching numpy.irfft), applies
+    the adjoint recombine butterfly (``fpr``: (m, m) +sign DFT planes,
+    ``ctwr``: (m, L) conjugate twiddle), and packs each per-shard Hermitian
+    half spectrum (``pwr``: (1, L/2+1) pack twiddle ``omega_L^{-p}``
+    conjugate) into the (bq, m, L/2) packed message planes workers ifft.
+    """
+    bq, h = yr.shape
+    ell = s // m
+    n2 = ell // 2
+    zeros = jnp.zeros((bq, 1), yr.dtype)
+    midr, midi = yr[:, 1:h - 1], yi[:, 1:h - 1]
+    fullr = jnp.concatenate(
+        [yr[:, :1], midr, yr[:, h - 1:], jnp.flip(midr, axis=-1)], axis=-1)
+    fulli = jnp.concatenate(
+        [zeros, midi, zeros, -jnp.flip(midi, axis=-1)], axis=-1)   # (bq, s)
+    xr3 = jnp.transpose(fullr.reshape(bq, m, ell), (1, 0, 2)).reshape(m, -1)
+    xi3 = jnp.transpose(fulli.reshape(bq, m, ell), (1, 0, 2)).reshape(m, -1)
+    fr_, fi_ = cmatmul_body(fpr, fpi, xr3, xi3)            # +sign m-DFT
+    foldr = jnp.transpose(fr_.reshape(m, bq, ell), (1, 0, 2))
+    foldi = jnp.transpose(fi_.reshape(m, bq, ell), (1, 0, 2))
+    tr = foldr * ctwr[None] - foldi * ctwi[None]
+    ti = foldr * ctwi[None] + foldi * ctwr[None]           # (bq, m, L)
+    # pack_half on planes: E + 1j * (0.5*(M - conj(M_rev)) * omega_L^{+p})
+    mr, mi = tr[..., :n2 + 1], ti[..., :n2 + 1]
+    rvr = jnp.flip(mr, axis=-1)
+    rvi = -jnp.flip(mi, axis=-1)
+    er = 0.5 * (mr + rvr)
+    ei = 0.5 * (mi + rvi)
+    dr_ = 0.5 * (mr - rvr)
+    di_ = 0.5 * (mi - rvi)
+    pw_r = pwr[0][None, None, :]
+    pw_i = pwi[0][None, None, :]
+    our = dr_ * pw_r - di_ * pw_i
+    oui = dr_ * pw_i + di_ * pw_r
+    zr = (er - oui)[..., :n2]
+    zi = (ei + our)[..., :n2]
+    return zr, zi                                          # (bq, m, L/2)
+
+
+def ir_unpack_body(hr, hi):
+    """Decoded packed interleave planes -> real output plane.
+
+    ``hr, hi``: (bq, m, L/2) planes of ``ifft(z_i)`` where
+    ``z_i[j] = o_i[2j] + 1j*o_i[2j+1]`` times ``m``.  Returns (bq, s).
+    """
+    bq, m, n2 = hr.shape
+    ell = 2 * n2
+    op = jnp.stack([hr, hi], axis=-1).reshape(bq, m, ell) / m
+    return jnp.transpose(op, (0, 2, 1)).reshape(bq, m * ell)
+
+
+def irbucket_body_fftworker(yr, yi, dvr, dvi, subsets, gr, gi,
+                            fpr, fpi, ctwr, ctwi, pwr, pwi, s):
+    """Direct-mode (off-TPU) c2r bucket: message stage on planes, platform
+    ifft worker on packed half-length shards, gathered compact decode,
+    relabel unpack.  Returns ONE real plane (bq, s)."""
+    n, m = gr.shape
+    n2 = s // m // 2
+    bq = yr.shape[0]
+    zr, zi = ir_message_body(yr, yi, fpr, fpi, ctwr, ctwi, pwr, pwi, s, m)
+    tr = jnp.transpose(zr, (1, 0, 2)).reshape(m, bq * n2)
+    ti = jnp.transpose(zi, (1, 0, 2)).reshape(m, bq * n2)
+    ar_, ai_ = cmatmul_body(gr, gi, tr, ti)
+    coded = (ar_ + 1j * ai_).reshape(n, bq, n2)
+    spec = jnp.fft.ifft(coded, axis=-1)
+    er = jnp.transpose(jnp.real(spec).astype(yr.dtype), (1, 0, 2))
+    ei = jnp.transpose(jnp.imag(spec).astype(yr.dtype), (1, 0, 2))
+    idx = subsets[:, :, None]
+    rr = jnp.take_along_axis(er, idx, axis=1)
+    ri = jnp.take_along_axis(ei, idx, axis=1)
+    hr, hi = bcmatmul_body(dvr, dvi, rr, ri)
+    return ir_unpack_body(hr, hi)
 
 
 def _bucket_kernel(xr_ref, xi_ref, dr_ref, di_ref, gr_ref, gi_ref,

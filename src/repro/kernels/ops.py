@@ -31,6 +31,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.cmatmul import (
@@ -43,6 +44,14 @@ from repro.kernels.coded_pipeline import (
     bucket_body,
     bucket_body_fftworker,
     coded_fft_bucket,
+    coded_rfft_bucket,
+    half_postdecode_body,
+    ir_message_body,
+    ir_unpack_body,
+    irbucket_body_fftworker,
+    pack_real_planes,
+    rbucket_body,
+    rbucket_body_fftworker,
 )
 from repro.kernels.fourstep_fft import (
     encode_fourstep_body,
@@ -73,6 +82,14 @@ __all__ = [
     "coded_bucket",
     "coded_bucket_direct",
     "coded_bucket_fusable",
+    "coded_rbucket",
+    "coded_rbucket_direct",
+    "coded_rbucket_fusable",
+    "coded_irbucket_direct",
+    "pack_real_planes",
+    "rfft_postdecode_planar",
+    "irfft_message_planar",
+    "irfft_unpack_planar",
     "mds_apply",
     "recombine_fused",
     "make_kernel_worker_fn",
@@ -138,36 +155,65 @@ def _block_l(total: int, rows: int, interpret: bool) -> int:
     return min(total, 512)
 
 
-def _dft_planes(n: int, dtype=jnp.float32):
-    jk = jnp.outer(jnp.arange(n), jnp.arange(n))
-    ang = -2.0 * jnp.pi * (jk % n) / n
-    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+# Twiddle/DFT planes are computed with NUMPY and memoized: called inside a
+# jit trace they embed as concrete constants, so the cos/sin construction
+# is paid once per (shape) at trace time -- XLA:CPU does NOT constant-fold
+# a traced transcendental table, and rebuilding the (m, L) recombine planes
+# per bucket call used to cost about as much as the decode matmul itself.
+@functools.lru_cache(maxsize=None)
+def _dft_planes(n: int, dtype=np.float32, sign: float = -1.0):
+    # sign=-1 forward DFT; sign=+1 the adjoint (c2r fold, DESIGN.md §7)
+    jk = np.outer(np.arange(n), np.arange(n))
+    ang = sign * 2.0 * np.pi * (jk % n) / n
+    return np.cos(ang).astype(dtype), np.sin(ang).astype(dtype)
 
 
-def _twiddle_planes(a: int, b: int, dtype=jnp.float32):
+@functools.lru_cache(maxsize=None)
+def _twiddle_planes(a: int, b: int, dtype=np.float32):
     # W[c, b] = omega_{a*b}^{c*b}
-    cb = jnp.outer(jnp.arange(a), jnp.arange(b))
-    ang = -2.0 * jnp.pi * (cb % (a * b)) / (a * b)
-    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+    cb = np.outer(np.arange(a), np.arange(b))
+    ang = -2.0 * np.pi * (cb % (a * b)) / (a * b)
+    return np.cos(ang).astype(dtype), np.sin(ang).astype(dtype)
 
 
-def _recombine_planes(s: int, m: int, dtype=jnp.float32):
-    # recombine twiddle W[k, i] = omega_s^{ik} plus the length-m DFT planes
-    ki = jnp.outer(jnp.arange(m), jnp.arange(s // m))
-    ang = -2.0 * jnp.pi * (ki % s) / s
-    return (jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype),
-            *_dft_planes(m, dtype))
+@functools.lru_cache(maxsize=None)
+def _recombine_planes(s: int, m: int, dtype=np.float32, sign: float = -1.0):
+    # recombine twiddle W[k, i] = omega_s^{ik} plus the length-m DFT planes;
+    # sign=+1 gives the adjoint pair (conjugate twiddle, F+) the c2r
+    # message stage uses
+    ki = np.outer(np.arange(m), np.arange(s // m))
+    ang = sign * 2.0 * np.pi * (ki % s) / s
+    return (np.cos(ang).astype(dtype), np.sin(ang).astype(dtype),
+            *_dft_planes(m, dtype, sign))
 
 
+@functools.lru_cache(maxsize=None)
+def _half_dft_planes(m: int, dtype=np.float32):
+    # the m//2 + 1 non-redundant butterfly rows of the length-m DFT
+    jk = np.outer(np.arange(m // 2 + 1), np.arange(m))
+    ang = -2.0 * np.pi * (jk % m) / m
+    return np.cos(ang).astype(dtype), np.sin(ang).astype(dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _split_planes(ell: int, dtype=np.float32, sign: float = -1.0):
+    # r2c split twiddle exp(sign*2j*pi*p/L), p <= L/2, as (1, L/2+1);
+    # sign=+1 is the c2r pack twiddle (the inverse butterfly's)
+    ang = sign * 2.0 * np.pi * np.arange(ell // 2 + 1) / ell
+    return (np.cos(ang)[None, :].astype(dtype),
+            np.sin(ang)[None, :].astype(dtype))
+
+
+@functools.lru_cache(maxsize=None)
 def _recombine_planes_scrambled(s: int, m: int, a: int, b: int,
-                                dtype=jnp.float32):
+                                dtype=np.float32):
     """Recombine planes with the twiddle permuted to the four-step payload
     order ``l' = c*B + d`` for natural ``l = c + d*A`` -- the bucket kernel
     carries that order through decode and unscrambles only at the output
     (kernels/coded_pipeline.py)."""
     twr, twi, fr, fi = _recombine_planes(s, m, dtype)
-    perm = lambda t: jnp.transpose(
-        t.reshape(m, b, a), (0, 2, 1)).reshape(m, a * b)
+    perm = lambda t: np.ascontiguousarray(
+        t.reshape(m, b, a).transpose(0, 2, 1).reshape(m, a * b))
     return perm(twr), perm(twi), fr, fi
 
 
@@ -403,6 +449,103 @@ def coded_bucket_direct(xr: jax.Array, xi: jax.Array,
         xr, xi, dvr, dvi, subsets, gr, gi, *_recombine_planes(s, m))
 
 
+# ------------------------------------------------- real-input (r2c) buckets
+def coded_rbucket_fusable(s: int, m: int, n: int) -> bool:
+    """VMEM gate for the fused r2c bucket kernel.
+
+    Same accounting as :func:`coded_bucket_fusable` with HALF-length
+    payloads (packed shards of L/2): the r2c working set is the real
+    request + half spectra + (m + n) packed shards.
+    """
+    n2 = s // m // 2
+    a, b = split_factor(n2)
+    return ((2 * s + (m + n) * n2) <= 2 * _FUSED_MAX_ELEMS
+            and b * b <= _FUSED_MAX_ELEMS)
+
+
+def _r2c_postdecode_planes(s: int, m: int):
+    n2 = s // m // 2
+    return (*_split_planes(2 * n2), *_recombine_planes(s, m)[:2],
+            *_half_dft_planes(m))
+
+
+def coded_rbucket(xr: jax.Array, dr: jax.Array, di: jax.Array,
+                  gr: jax.Array, gi: jax.Array, s: int, *,
+                  interpret: bool | None = None):
+    """The r2c whole-bucket hot path (DESIGN.md §7) as ONE Pallas launch.
+
+    ``xr``: (q, s) REAL request plane; ``dr, di``: (q, m, N) scatter decode
+    matrices; ``gr, gi``: (N, m) generator planes.  Returns (q, s//2+1)
+    half-spectrum planes.  Caller checks :func:`coded_rbucket_fusable`.
+    """
+    mode = _mode(interpret)
+    q, _ = xr.shape
+    n, m = gr.shape
+    n2 = s // m // 2
+    a, b = split_factor(n2)
+    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
+              *_r2c_postdecode_planes(s, m))
+    if mode == "direct":
+        return rbucket_body(xr, dr, di, gr, gi, *planes, s)
+    itp = mode == "interpret"
+    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
+    return coded_rfft_bucket(xr, dr, di, gr, gi, *planes, s,
+                             block_q=bq, interpret=itp)
+
+
+def coded_rbucket_direct(xr: jax.Array, dvr: jax.Array, dvi: jax.Array,
+                         subsets: jax.Array,
+                         gr: jax.Array, gi: jax.Array, s: int):
+    """Off-TPU r2c bucket executor: platform-FFT worker on the packed
+    half-length shards, gathered compact decode, symmetry postdecode
+    (cf. :func:`coded_bucket_direct`)."""
+    m = gr.shape[1]
+    return rbucket_body_fftworker(
+        xr, dvr, dvi, subsets, gr, gi, *_r2c_postdecode_planes(s, m), s)
+
+
+def rfft_postdecode_planar(hr: jax.Array, hi: jax.Array, s: int):
+    """Stage-path r2c postdecode: decoded packed-spectrum planes
+    ``(q, m, L/2)`` (natural order) -> half-spectrum planes
+    ``(q, s//2+1)``.  Elementwise butterfly + one (m//2+1, m) contraction;
+    runs as straight XLA in every mode (it is a fraction of the decode
+    matmul's cost at any bucket shape)."""
+    m = hr.shape[1]
+    return half_postdecode_body(hr, hi, *_r2c_postdecode_planes(s, m), s)
+
+
+# ------------------------------------------------ real-output (c2r) buckets
+def _c2r_message_planes(s: int, m: int):
+    ctwr, ctwi, fpr, fpi = _recombine_planes(s, m, sign=1.0)
+    pwr, pwi = _split_planes(s // m, sign=1.0)
+    return fpr, fpi, ctwr, ctwi, pwr, pwi
+
+
+def irfft_message_planar(yr: jax.Array, yi: jax.Array, s: int, m: int):
+    """Stage-path c2r message stage: half-spectrum request planes
+    ``(q, s//2+1)`` -> packed message planes ``(q, m, L/2)`` (the adjoint
+    recombine butterfly + Hermitian pack, DESIGN.md §7)."""
+    return ir_message_body(yr, yi, *_c2r_message_planes(s, m), s, m)
+
+
+def irfft_unpack_planar(hr: jax.Array, hi: jax.Array):
+    """Stage-path c2r postdecode: decoded packed interleave planes
+    ``(q, m, L/2)`` -> the real output plane ``(q, s)``."""
+    return ir_unpack_body(hr, hi)
+
+
+def coded_irbucket_direct(yr: jax.Array, yi: jax.Array,
+                          dvr: jax.Array, dvi: jax.Array,
+                          subsets: jax.Array,
+                          gr: jax.Array, gi: jax.Array, s: int):
+    """Off-TPU c2r bucket executor: adjoint message stage on planes,
+    platform-ifft worker on the packed half-length shards, gathered
+    compact decode, relabel unpack.  Returns ONE real plane (q, s)."""
+    m = gr.shape[1]
+    return irbucket_body_fftworker(
+        yr, yi, dvr, dvi, subsets, gr, gi, *_c2r_message_planes(s, m), s)
+
+
 # ----------------------------------------------------- complex entry points
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _mds_apply_impl(g, c, interpret):
@@ -450,7 +593,8 @@ def recombine_fused(c_hat: jax.Array, s: int, *, interpret: bool | None = None):
 
 
 # ------------------------------------------------------------- worker fns
-def make_kernel_worker_fn(interpret: bool | None = None):
+def make_kernel_worker_fn(interpret: bool | None = None,
+                          inverse: bool = False):
     """A ``CodedFFT.worker_fn`` that uses the Pallas four-step kernel.
 
     Satisfies the ``CodedPlan`` worker contract: transforms the LAST axis
@@ -459,11 +603,20 @@ def make_kernel_worker_fn(interpret: bool | None = None):
     n_local) under the distributed runtime -- are collapsed into the
     kernel's batch dimension, so a bucket of requests costs one Pallas
     launch instead of one per request.
+
+    ``inverse=True`` yields the ifft worker of the inverse plans
+    (DESIGN.md §7) via ``ifft(a) = conj(fft(conj(a))) / L`` -- one extra
+    pair of sign flips on the imaginary plane, same kernel.
     """
 
     def worker_fn(a: jax.Array) -> jax.Array:
         lead, ell = a.shape[:-1], a.shape[-1]
-        out = fft_fourstep(a.reshape(-1, ell), interpret=interpret)
+        flat = a.reshape(-1, ell)
+        if inverse:
+            out = jnp.conj(
+                fft_fourstep(jnp.conj(flat), interpret=interpret)) / ell
+        else:
+            out = fft_fourstep(flat, interpret=interpret)
         return out.reshape(lead + (ell,))
 
     return worker_fn

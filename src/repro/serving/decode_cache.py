@@ -27,8 +27,14 @@ __all__ = ["DecodeMatrixCache"]
 class DecodeMatrixCache:
     """LRU of straggler-mask byte patterns -> ``(m, N)`` decode matrices.
 
-    One cache per ``(s, m)`` service bucket (the generator is fixed per
-    bucket, so the mask alone keys the matrix).  ``maxsize`` bounds host
+    One cache per ``(N, m)`` GENERATOR -- the generator (hence every
+    per-mask matrix) is independent of the transform length and of the
+    bucket kind, so the service shares a single instance across all its
+    ``(s, kind)`` buckets (c2c/r2c/c2r, DESIGN.md §7): a mask seen in any
+    bucket is a hit in every other.  Keying is strictly by mask BYTE
+    pattern: two masks equal as first-``m`` subsets but different as
+    patterns occupy distinct entries (never aliased -- the tail responders
+    differ even when the decode subset does not).  ``maxsize`` bounds host
     memory at ``maxsize * m * N * 8`` bytes.
     """
 

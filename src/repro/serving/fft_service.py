@@ -8,11 +8,16 @@ statistic -- benchmarks compare it against waiting for all N (uncoded) and
 against the repetition/short-dot thresholds (paper Remark 4).
 
 The scheduler is batched (DESIGN.md §5): submitted requests are bucketed by
-``(s, m)``, stacked along a leading batch axis, padded to a power-of-two
-bucket size, and pushed through ONE jitted encode -> worker -> decode call
-per bucket with a per-request straggler mask -- master-side work (MDS
-encode/decode, recombine) amortizes across the whole bucket instead of
-being paid per request.  ``submit`` is the batch-of-one special case.
+``(s, m, kind)`` with ``kind in {c2c, r2c, c2r}`` (forward complex, real
+forward, inverse real -- DESIGN.md §7), stacked along a leading batch axis,
+padded to a power-of-two bucket size, and pushed through ONE jitted encode
+-> worker -> decode call per bucket with a per-request straggler mask --
+master-side work (MDS encode/decode, recombine) amortizes across the whole
+bucket instead of being paid per request.  ``submit`` is the batch-of-one
+special case; ``submit_rfft`` / ``submit_irfft`` are the real-kind
+conveniences.  Real buckets ship HALF the worker payload (pair-packed
+shards) and all kinds share one decode-matrix LRU (the (N, m) generator is
+length- and kind-independent).
 
 The default bucket executor is the Pallas kernel pipeline (DESIGN.md §6):
 requests are split to f32 real/imag planes ONCE at ingress, interleaved on
@@ -42,6 +47,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.coded_fft import CodedFFT
+from repro.core.rfft import CodedIRFFT, CodedRFFT
 from repro.core.strategies import coded_fft_threshold
 from repro.distributed.coded_runtime import DistributedCodedPlan
 from repro.distributed.straggler import StragglerModel
@@ -104,6 +110,8 @@ class FFTService:
     bucket executors.
     """
 
+    KINDS = ("c2c", "r2c", "c2r")
+
     def __init__(self, cfg: FFTServiceConfig, mesh: Optional[Mesh] = None,
                  axis: str = "workers"):
         self.cfg = cfg
@@ -111,45 +119,65 @@ class FFTService:
         self.axis = axis
         self.rng = np.random.default_rng(cfg.seed)
         self.stats = ServiceStats()
-        self._plans: dict[tuple[int, int], CodedFFT] = {}
-        self._runtimes: dict[tuple[int, int], DistributedCodedPlan] = {}
+        self._plans: dict[tuple[int, int, str], object] = {}
+        self._runtimes: dict[tuple[int, int, str], DistributedCodedPlan] = {}
         self._runners: dict[tuple, object] = {}
-        self._decode_caches: dict[tuple[int, int], DecodeMatrixCache] = {}
+        # ONE decode-matrix LRU for the whole service: the (N, m) generator
+        # -- hence every per-mask decode matrix -- is independent of both
+        # the transform length s and the bucket kind, so c2c/r2c/c2r
+        # buckets at every length share hits (DESIGN.md §7)
+        self._decode_cache: Optional[DecodeMatrixCache] = None
         # default-config plan/runtime, kept as attributes for introspection
         # (and reused by the executor cache for default-length requests)
         self.plan = self._plan_for(cfg.s)
         self.runtime = self._runtime_for(cfg.s) if mesh is not None else None
 
     # -- plan / compiled-executor caches --------------------------------
-    def _plan_for(self, s: int) -> CodedFFT:
+    def _plan_for(self, s: int, kind: str = "c2c"):
+        """The plan serving ``(s, m, kind)`` buckets (kind per DESIGN.md §7:
+        ``c2c`` forward complex, ``r2c`` real forward, ``c2r`` inverse
+        real).  ``s`` is always the TIME-domain length."""
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown bucket kind {kind!r}")
         cfg = self.cfg
-        key = (s, cfg.m)
+        key = (s, cfg.m, kind)
         if key not in self._plans:
-            kwargs = {}
-            if cfg.worker_fn is not None:
-                kwargs["worker_fn"] = cfg.worker_fn
-            self._plans[key] = CodedFFT(
-                s=s, m=cfg.m, n_workers=cfg.n_workers, dtype=cfg.dtype,
-                backend="reference" if cfg.use_reference else "kernel",
-                **kwargs)
+            if cfg.worker_fn is not None and kind != "c2c":
+                # the plug-in contract is the c2c worker (fft along the
+                # last axis); silently serving real-kind traffic without
+                # it would un-instrument fault-injection setups
+                raise ValueError(
+                    f"worker_fn plug-ins only apply to c2c buckets; "
+                    f"got a {kind!r} request on a worker_fn service")
+            backend = "reference" if cfg.use_reference else "kernel"
+            common = dict(s=s, m=cfg.m, n_workers=cfg.n_workers,
+                          dtype=cfg.dtype, backend=backend)
+            if kind == "r2c":
+                self._plans[key] = CodedRFFT(**common)
+            elif kind == "c2r":
+                self._plans[key] = CodedIRFFT(**common)
+            else:
+                kwargs = {}
+                if cfg.worker_fn is not None:
+                    kwargs["worker_fn"] = cfg.worker_fn
+                self._plans[key] = CodedFFT(**common, **kwargs)
         return self._plans[key]
 
-    def _runtime_for(self, s: int) -> DistributedCodedPlan:
-        key = (s, self.cfg.m)
+    def _runtime_for(self, s: int, kind: str = "c2c") -> DistributedCodedPlan:
+        key = (s, self.cfg.m, kind)
         if key not in self._runtimes:
             self._runtimes[key] = DistributedCodedPlan(
-                self._plan_for(s), self.mesh, self.axis)
+                self._plan_for(s, kind), self.mesh, self.axis)
         return self._runtimes[key]
 
-    def _decode_cache_for(self, s: int) -> DecodeMatrixCache:
-        key = (s, self.cfg.m)
-        if key not in self._decode_caches:
-            self._decode_caches[key] = DecodeMatrixCache(
-                np.asarray(self._plan_for(s).generator),
+    def _decode_cache_for(self) -> DecodeMatrixCache:
+        if self._decode_cache is None:
+            self._decode_cache = DecodeMatrixCache(
+                np.asarray(self._plan_for(self.cfg.s).generator),
                 maxsize=self.cfg.decode_cache_size)
-        return self._decode_caches[key]
+        return self._decode_cache
 
-    def _kernel_path(self, s: int) -> bool:
+    def _kernel_path(self, s: int, kind: str = "c2c") -> bool:
         """Does this bucket run the fused planar kernel executor?
 
         The kernel path owns the default local config; anything it does not
@@ -162,41 +190,96 @@ class FFTService:
                 and not cfg.use_reference
                 and cfg.worker_fn is None
                 and cfg.decode_method == "auto"
-                and self._plan_for(s).resolved_backend == "kernel")
+                and self._plan_for(s, kind).resolved_backend == "kernel")
 
-    def _runner_for(self, s: int, bucket: int):
-        """One jitted batched encode->worker->decode per (s, m, bucket)."""
-        kernel = self._kernel_path(s)
-        key = (s, self.cfg.m, bucket, kernel)
+    def _runner_for(self, s: int, bucket: int, kind: str = "c2c"):
+        """One jitted batched encode->worker->decode per (s, m, kind,
+        bucket)."""
+        kernel = self._kernel_path(s, kind)
+        key = (s, self.cfg.m, kind, bucket, kernel)
         if key not in self._runners:
             if kernel:
-                self._runners[key] = self._make_kernel_runner(s, bucket)
+                self._runners[key] = self._make_kernel_runner(s, bucket, kind)
             else:
                 method = self.cfg.decode_method
                 if self.mesh is not None:
-                    runtime = self._runtime_for(s)
+                    runtime = self._runtime_for(s, kind)
                     fn = lambda xb, masks: runtime.run(xb, masks, method=method)
                 else:
-                    plan = self._plan_for(s)
+                    plan = self._plan_for(s, kind)
                     fn = lambda xb, masks: plan.run(xb, mask=masks, method=method)
                 self._runners[key] = jax.jit(fn)
         return self._runners[key]
 
-    def _make_kernel_runner(self, s: int, bucket: int):
-        """The fused planar bucket executor (DESIGN.md §6).
+    def _make_kernel_runner(self, s: int, bucket: int, kind: str = "c2c"):
+        """The fused planar bucket executor (DESIGN.md §6/§7).
 
         One planar split at ingress, planes threaded end-to-end, one
         complex recombine at egress.  Straggler handling lives entirely in
         the per-request decode matrices (zero columns for non-responders),
         so the jitted function takes no mask.  Bucket shapes that fit the
         VMEM working set run the whole pipeline as ONE Pallas launch
-        (``ops.coded_bucket``); larger shapes fall back to the stage
-        kernels (fused encode+worker -> decode matmul -> recombine).
-        """
-        plan = self._plan_for(s)
-        m, ell = plan.m, plan.shard_len
-        gr, gi = ref.planar(plan.generator)
+        (``ops.coded_bucket`` / ``ops.coded_rbucket``); larger shapes fall
+        back to the stage kernels (fused encode+worker -> decode matmul ->
+        recombine).
 
+        ``r2c`` buckets never split at ingress at all -- the real request
+        IS its plane -- and ship half-length packed shards; ``c2r`` buckets
+        run the adjoint message stage and return a single real plane.
+        """
+        plan = self._plan_for(s, kind)
+        m = plan.m
+        gr, gi = ref.planar(plan.generator)
+        n2 = s // m // 2  # packed shard length of the real kinds
+
+        if kind == "r2c":
+            if ops.default_interpret():
+                def fn(xb, dplanes, subsets):
+                    yr, yi = ops.coded_rbucket_direct(
+                        xb, dplanes[0], dplanes[1], subsets, gr, gi, s)
+                    return ref.unplanar(yr, yi)
+
+                return jax.jit(fn)
+
+            whole = ops.coded_rbucket_fusable(s, m, plan.n_workers)
+
+            def fn(xb, dplanes):
+                dr, di = dplanes[0], dplanes[1]
+                if whole:
+                    yr, yi = ops.coded_rbucket(xb, dr, di, gr, gi, s)
+                    return ref.unplanar(yr, yi)
+                zr, zi = ops.pack_real_planes(xb, m)     # relabel ingress
+                br, bi = ops.encode_worker(zr, zi, gr, gi)
+                hr, hi = ops.decode_apply(dr, di, br, bi)
+                yr, yi = ops.rfft_postdecode_planar(hr, hi, s)
+                return ref.unplanar(yr, yi)
+
+            return jax.jit(fn)
+
+        if kind == "c2r":
+            if ops.default_interpret():
+                def fn(yb, dplanes, subsets):
+                    yr, yi = ref.planar(yb)              # ingress split
+                    return ops.coded_irbucket_direct(
+                        yr, yi, dplanes[0], dplanes[1], subsets, gr, gi, s)
+
+                return jax.jit(fn)
+
+            def fn(yb, dplanes):
+                dr, di = dplanes[0], dplanes[1]
+                yr, yi = ref.planar(yb)
+                zr, zi = ops.irfft_message_planar(yr, yi, s, m)
+                # ifft(G @ z) via the conj trick on planes:
+                # conj(fft(conj(G) @ conj(z))) / n2 through the same fused
+                # encode+worker kernel
+                br, bi = ops.encode_worker(zr, -zi, gr, -gi)
+                br, bi = br / n2, -bi / n2
+                hr, hi = ops.decode_apply(dr, di, br, bi)
+                return ops.irfft_unpack_planar(hr, hi)   # real egress
+
+            return jax.jit(fn)
+
+        ell = plan.shard_len
         if ops.default_interpret():
             # off-TPU: the direct executor (platform-FFT worker stage,
             # gathered compact decode -- DESIGN.md §6)
@@ -261,27 +344,65 @@ class FFTService:
         """One request: returns F{x}, never waiting for stragglers."""
         return self.submit_batch([x])[0]
 
-    def submit_batch(self, xs: Sequence[jax.Array]) -> list[np.ndarray]:
+    def submit_rfft(self, x: jax.Array) -> np.ndarray:
+        """One REAL request: returns the half spectrum ``rfft(x)``
+        (``s//2 + 1`` bins) from half-payload worker shards."""
+        return self.submit_batch([x], kind="r2c")[0]
+
+    def submit_irfft(self, y: jax.Array) -> np.ndarray:
+        """One half-spectrum request: returns the real ``irfft(y)`` of
+        length ``2*(len(y) - 1)``."""
+        return self.submit_batch([y], kind="c2r")[0]
+
+    def submit_batch(self, xs: Sequence[jax.Array],
+                     kind: str = "c2c") -> list[np.ndarray]:
         """Serve a batch of requests, bucketed by transform length.
 
         Master-side encode/decode for each bucket runs as ONE jitted call
         over the stacked requests; each request still gets its own
         simulated straggler pattern, and results come back in submission
         order as host arrays (one device->host transfer per bucket).
+
+        ``kind`` selects the transform (DESIGN.md §7): ``"c2c"`` complex
+        forward (default), ``"r2c"`` real input -> half spectrum,
+        ``"c2r"`` half spectrum -> real output.  Buckets are keyed by the
+        TIME-domain length ``s`` (a c2r request of ``h`` bins lands in the
+        ``s = 2*(h-1)`` bucket).
         """
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown bucket kind {kind!r}")
         cfg = self.cfg
         results: list[Optional[np.ndarray]] = [None] * len(xs)
         by_len: dict[int, list[int]] = {}
         for i, x in enumerate(xs):
-            by_len.setdefault(int(x.shape[-1]), []).append(i)
+            n_last = int(x.shape[-1])
+            if kind == "c2r" and n_last < 2:
+                raise ValueError(
+                    f"c2r requests need >= 2 half-spectrum bins "
+                    f"(s = 2*(bins-1) > 0), got {n_last}")
+            s = 2 * (n_last - 1) if kind == "c2r" else n_last
+            by_len.setdefault(s, []).append(i)
 
         for s, idxs in by_len.items():
             for start in range(0, len(idxs), cfg.max_batch):
                 chunk = idxs[start:start + cfg.max_batch]
-                self._run_bucket(s, chunk, xs, results)
+                self._run_bucket(s, chunk, xs, results, kind)
         return results  # type: ignore[return-value]
 
-    def _run_bucket(self, s: int, idxs: list[int], xs, results) -> None:
+    def _bucket_buffer(self, s: int, bucket: int, kind: str) -> np.ndarray:
+        """The request staging buffer for one bucket, in the kind's ingress
+        dtype: real requests stay a single f32 plane end-to-end."""
+        cdt = np.dtype(self.cfg.dtype)
+        if kind == "r2c":
+            return np.zeros((bucket, s), dtype=np.real(np.zeros(1, cdt)).dtype)
+        if kind == "c2r":
+            return np.zeros((bucket, s // 2 + 1), dtype=cdt)
+        # allocate in the service dtype (NOT the first request's dtype --
+        # a real-valued request must not narrow the whole bucket's buffer)
+        return np.zeros((bucket, s), dtype=cdt)
+
+    def _run_bucket(self, s: int, idxs: list[int], xs, results,
+                    kind: str = "c2c") -> None:
         cfg = self.cfg
         n_live = len(idxs)
         bucket = bucket_size(n_live, cfg.max_batch)
@@ -289,37 +410,38 @@ class FFTService:
         self._account(lat, mask)
         self.stats.batches += 1
 
-        # allocate in the service dtype (NOT the first request's dtype --
-        # a real-valued request must not narrow the whole bucket's buffer)
-        xb = np.zeros((bucket, s), dtype=np.dtype(self.cfg.dtype))
+        xb = self._bucket_buffer(s, bucket, kind)
         for row, i in enumerate(idxs):
-            xb[row] = np.asarray(xs[i])
+            x = np.asarray(xs[i])
+            xb[row] = x.real if kind == "r2c" and np.iscomplexobj(x) else x
         # padded rows: every worker "responds" so decode stays well-posed
         masks = np.ones((bucket, cfg.n_workers), bool)
         masks[:n_live] = mask
 
-        if self._kernel_path(s):
+        if self._kernel_path(s, kind):
             # per-request decode matrices from the LRU (host-side: the
-            # masks are host data already, and repeats hit the cache)
-            cache = self._decode_cache_for(s)
+            # masks are host data already, and repeats hit the cache) --
+            # shared across every (s, kind) bucket, the generator only
+            # depends on (N, m)
+            cache = self._decode_cache_for()
             h0, m0 = cache.hits, cache.misses
             if ops.default_interpret():
                 invs, subsets = cache.compact(masks)
                 dplanes = np.stack([invs.real, invs.imag]).astype(np.float32)
-                args = (jnp.asarray(xb, cfg.dtype), jnp.asarray(dplanes),
+                args = (jnp.asarray(xb), jnp.asarray(dplanes),
                         jnp.asarray(subsets))
             else:
                 dmats = cache.matrices(masks)
                 dplanes = np.stack([dmats.real, dmats.imag]).astype(np.float32)
-                args = (jnp.asarray(xb, cfg.dtype), jnp.asarray(dplanes))
+                args = (jnp.asarray(xb), jnp.asarray(dplanes))
             # deltas, not lifetime cache totals: every other ServiceStats
             # field accumulates, so a stats reset must window these too
             self.stats.decode_cache_hits += cache.hits - h0
             self.stats.decode_cache_misses += cache.misses - m0
-            out = self._runner_for(s, bucket)(*args)
+            out = self._runner_for(s, bucket, kind)(*args)
         else:
-            out = self._runner_for(s, bucket)(
-                jnp.asarray(xb, cfg.dtype), jnp.asarray(masks))
+            out = self._runner_for(s, bucket, kind)(
+                jnp.asarray(xb), jnp.asarray(masks))
         # ONE device->host transfer per bucket: per-request eager jax slices
         # would pay a python lax.slice dispatch per request instead, which
         # dominates the bucket at CPU latencies.  Results are host arrays

@@ -1,7 +1,9 @@
 """Optional-dependency shim for ``hypothesis``.
 
 The property tests use a small slice of the hypothesis API (``@given`` /
-``@settings`` with ``integers`` / ``floats`` / ``sampled_from``).  When the
+``@settings`` with ``integers`` / ``floats`` / ``sampled_from`` /
+``booleans``, plus the ``prop_settings`` helper that disables the
+per-example deadline for jit-heavy properties).  When the
 real package is installed (the ``test`` extra in pyproject.toml) it is used
 unchanged; otherwise this module provides a deterministic fallback sampler
 so the suite still runs green instead of erroring at collection.
@@ -14,10 +16,22 @@ NOT shrink or persist a failure database -- install hypothesis for that.
 from __future__ import annotations
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
-    from hypothesis import given, settings
+    from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st
 
     HAVE_HYPOTHESIS = True
+
+    def prop_settings(max_examples: int = 20):
+        """Property-suite settings: jit/compile time breaks hypothesis's
+        per-example deadline and too_slow health check, so both are
+        disabled; the CI property job pins ``--hypothesis-seed`` instead
+        (tests/test_properties.py, DESIGN.md §7)."""
+        return settings(
+            max_examples=max_examples,
+            deadline=None,
+            suppress_health_check=[HealthCheck.too_slow],
+        )
+
 except ImportError:
     import zlib
 
@@ -51,7 +65,20 @@ except ImportError:
             return _Strategy(
                 lambda rng: options[int(rng.integers(len(options)))])
 
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
     st = _Strategies()
+
+    class HealthCheck:  # noqa: D401 - API-shape stand-in
+        """Placeholder mirroring hypothesis.HealthCheck attribute access."""
+
+        too_slow = data_too_large = filter_too_much = None
+
+    def prop_settings(max_examples: int = 20):
+        """Fallback twin of the real-hypothesis ``prop_settings`` above."""
+        return settings(max_examples=max_examples)
 
     def settings(*, max_examples: int = 20, **_ignored):
         def deco(fn):
@@ -86,4 +113,5 @@ except ImportError:
         return deco
 
 
-__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+__all__ = ["given", "settings", "prop_settings", "st", "HealthCheck",
+           "HAVE_HYPOTHESIS"]

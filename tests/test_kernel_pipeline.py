@@ -270,6 +270,210 @@ def test_service_lru_churn_stays_correct():
     assert st["requests"] == 48
 
 
+# ----------------------------------------- real-input (r2c/c2r) kernel path
+@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (768, 4, 6), (240, 2, 5),
+                                   (96, 3, 7)])
+def test_coded_rfft_bucket_kernel_parity(s, m, n):
+    """One-launch r2c bucket (pack -> encode -> half-length worker ->
+    decode -> symmetry butterfly) == numpy.rfft via Pallas interpret,
+    including odd shard lengths and odd m; direct path same math."""
+    assert ops.coded_rbucket_fusable(s, m, n)
+    q = 3
+    rng = np.random.default_rng(s + m)
+    xb = jnp.asarray(rng.normal(size=(q, s)).astype(np.float32))
+    g = mds.rs_generator(n, m, jnp.complex64)
+    masks = np.zeros((q, n), bool)
+    for row in masks:
+        row[rng.choice(n, size=m, replace=False)] = True
+    cache = DecodeMatrixCache(np.asarray(g))
+    dmats = cache.matrices(masks)
+    gr, gi = ref.planar(g)
+    dr = jnp.asarray(dmats.real.astype(np.float32))
+    di = jnp.asarray(dmats.imag.astype(np.float32))
+    want = np.fft.rfft(np.asarray(xb, np.float64), axis=-1)
+    yr, yi = ops.coded_rbucket(xb, dr, di, gr, gi, s, interpret=True)
+    assert _relerr(ref.unplanar(yr, yi), want) < 1e-3
+    yr2, yi2 = ops.coded_rbucket(xb, dr, di, gr, gi, s)
+    assert _relerr(ref.unplanar(yr2, yi2), ref.unplanar(yr, yi)) < 1e-5
+    # gathered-compact direct executor (the off-TPU service path)
+    invs, subsets = cache.compact(masks)
+    yr3, yi3 = ops.coded_rbucket_direct(
+        xb, jnp.asarray(invs.real.astype(np.float32)),
+        jnp.asarray(invs.imag.astype(np.float32)),
+        jnp.asarray(subsets), gr, gi, s)
+    assert _relerr(ref.unplanar(yr3, yi3), want) < 1e-3
+
+
+@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (240, 2, 5), (96, 3, 7)])
+def test_coded_irbucket_direct_matches_numpy(s, m, n):
+    """c2r direct bucket executor (adjoint message stage, packed ifft
+    worker, compact decode, relabel unpack) == numpy.irfft."""
+    q = 3
+    rng = np.random.default_rng(s)
+    xs = rng.normal(size=(q, s))
+    yb = jnp.asarray(np.fft.rfft(xs, axis=-1).astype(np.complex64))
+    g = mds.rs_generator(n, m, jnp.complex64)
+    masks = np.zeros((q, n), bool)
+    for row in masks:
+        row[rng.choice(n, size=m, replace=False)] = True
+    cache = DecodeMatrixCache(np.asarray(g))
+    invs, subsets = cache.compact(masks)
+    gr, gi = ref.planar(g)
+    yr, yi = ref.planar(yb)
+    out = ops.coded_irbucket_direct(
+        yr, yi, jnp.asarray(invs.real.astype(np.float32)),
+        jnp.asarray(invs.imag.astype(np.float32)),
+        jnp.asarray(subsets), gr, gi, s)
+    assert _relerr(out, xs) < 1e-3
+
+
+@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (768, 4, 6)])
+def test_tpu_stage_path_compositions_match_numpy(s, m, n):
+    """Pin the TPU-only stage compositions of _make_kernel_runner, which
+    CI's interpret-mode default never executes: the r2c non-fusable
+    fallback (pack -> encode_worker -> decode_apply -> rfft_postdecode)
+    and the c2r executor's conj-trick ifft (encode_worker on negated
+    planes, /n2 rescale).  Run them through the Pallas kernels in
+    interpret mode against numpy."""
+    q = 2
+    n2 = s // m // 2
+    rng = np.random.default_rng(s)
+    xb = rng.normal(size=(q, s)).astype(np.float32)
+    g = mds.rs_generator(n, m, jnp.complex64)
+    gr, gi = ref.planar(g)
+    masks = np.zeros((q, n), bool)
+    for row in masks:
+        row[rng.choice(n, size=m, replace=False)] = True
+    cache = DecodeMatrixCache(np.asarray(g))
+    dmats = cache.matrices(masks)
+    dr = jnp.asarray(dmats.real.astype(np.float32))
+    di = jnp.asarray(dmats.imag.astype(np.float32))
+
+    # r2c stage path (the whole=False branch)
+    zr, zi = ops.pack_real_planes(jnp.asarray(xb), m)
+    br, bi = ops.encode_worker(zr, zi, gr, gi, interpret=True)
+    hr, hi = ops.decode_apply(dr, di, br, bi, interpret=True)
+    yr, yi = ops.rfft_postdecode_planar(hr, hi, s)
+    want = np.fft.rfft(xb.astype(np.float64), axis=-1)
+    assert _relerr(ref.unplanar(yr, yi), want) < 1e-3
+
+    # c2r executor: ifft(G @ z) = conj(fft(conj(G) @ conj(z))) / n2
+    yb = np.fft.rfft(xb, axis=-1).astype(np.complex64)
+    yr_, yi_ = ref.planar(jnp.asarray(yb))
+    zr2, zi2 = ops.irfft_message_planar(yr_, yi_, s, m)
+    br2, bi2 = ops.encode_worker(zr2, -zi2, gr, -gi, interpret=True)
+    br2, bi2 = br2 / n2, -bi2 / n2
+    hr2, hi2 = ops.decode_apply(dr, di, br2, bi2, interpret=True)
+    out = ops.irfft_unpack_planar(hr2, hi2)
+    assert _relerr(out, xb) < 1e-3
+
+
+def test_rfft_payload_is_half_of_c2c():
+    """The acceptance geometry: r2c worker shards carry HALF the c2c
+    payload elements (the communication-overhead win, DESIGN.md §7)."""
+    from repro.core import CodedFFT, CodedRFFT
+
+    s, m, n = 2048, 4, 8
+    c2c = CodedFFT(s=s, m=m, n_workers=n)
+    r2c = CodedRFFT(s=s, m=m, n_workers=n)
+    assert r2c.worker_shard_shape[0] * 2 == c2c.worker_shard_shape[0]
+    a = r2c.encode(jnp.zeros((s,), jnp.float32))
+    assert a.shape == (n, s // m // 2)
+
+
+def test_service_rfft_and_irfft_kinds():
+    """Service r2c/c2r buckets decode exactly under straggler churn and
+    share ONE decode-matrix LRU across kinds (same (N, m) generator)."""
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=3))
+    rng = np.random.default_rng(1)
+    xs = [jnp.asarray(rng.normal(size=256).astype(np.float32))
+          for _ in range(6)]
+    for x, y in zip(xs, svc.submit_batch(xs, kind="r2c")):
+        assert y.shape == (129,)
+        assert float(np.abs(y - np.fft.rfft(np.asarray(x))).max()) < 1e-2
+    ys = [jnp.asarray(np.fft.rfft(np.asarray(x)).astype(np.complex64))
+          for x in xs]
+    for x, z in zip(xs, svc.submit_batch(ys, kind="c2r")):
+        assert z.shape == (256,)
+        assert float(np.abs(z - np.asarray(x)).max()) < 1e-2
+    # same-mask repeats across kinds hit the SHARED cache
+    assert svc.stats.decode_cache_hits > 0
+    assert len(svc._decode_cache_for()) <= svc.stats.decode_cache_misses
+
+
+# --------------------------------------------- adversarial mask patterns
+def test_masks_equal_as_subsets_do_not_collide():
+    """Two masks selecting the SAME first-m responder subset but differing
+    as byte patterns must occupy distinct cache entries (byte-keying), and
+    both must decode correctly -- a subset-keyed cache would alias them,
+    a value-keyed comparison would miss the second's tail responders."""
+    g = np.asarray(mds.rs_generator(8, 4, jnp.complex64))
+    cache = DecodeMatrixCache(g, maxsize=8)
+    m1 = np.array([1, 1, 1, 1, 0, 0, 0, 0], bool)
+    m2 = np.array([1, 1, 1, 1, 1, 0, 0, 0], bool)  # same first-4 subset
+    np.testing.assert_array_equal(
+        DecodeMatrixCache.subset_of(m1, 4), DecodeMatrixCache.subset_of(m2, 4))
+    d1, d2 = cache.matrix(m1), cache.matrix(m2)
+    assert len(cache) == 2                      # no collision
+    assert cache.hits == 0 and cache.misses == 2
+    np.testing.assert_allclose(d1, d2, atol=0)  # same VALUE, distinct keys
+    # and the same byte pattern submitted from another (s, kind) bucket is
+    # a pure hit: the service shares one LRU because the generator only
+    # depends on (N, m)
+    cache.matrix(m1)
+    assert cache.hits == 1
+
+
+def test_service_shares_decode_cache_across_buckets():
+    """Identical straggler masks arriving in different (s, kind) buckets
+    must hit the one shared LRU, not rebuild per bucket."""
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=9,
+                                      decode_cache_size=512))
+    rng = np.random.default_rng(2)
+    xs256 = [jnp.asarray((rng.normal(size=256) + 1j * rng.normal(size=256))
+                         .astype(np.complex64)) for _ in range(4)]
+    xs128 = [jnp.asarray((rng.normal(size=128) + 1j * rng.normal(size=128))
+                         .astype(np.complex64)) for _ in range(4)]
+    svc.submit_batch(xs256)
+    misses_after_first = svc.stats.decode_cache_misses
+    # same service RNG stream continues, but ANY repeat mask from the 128
+    # bucket or the r2c bucket hits the same store; with 70 masks over a
+    # small C(8, >=4) pattern space repeats are guaranteed
+    for _ in range(4):
+        svc.submit_batch(xs128)
+        svc.submit_batch([jnp.real(x) for x in xs256], kind="r2c")
+    assert svc.stats.decode_cache_hits > 0
+    assert len(svc._decode_cache_for()) == svc.stats.decode_cache_misses
+    assert svc.stats.decode_cache_misses >= misses_after_first
+
+
+def test_service_lru_churn_with_real_kinds_stays_correct():
+    """LRU eviction under churn across c2c + r2c + c2r buckets keeps
+    parity: a tiny cache forces constant evictions; every request of every
+    kind must still decode exactly (extends the c2c churn test above)."""
+    svc = FFTService(FFTServiceConfig(
+        s=128, m=4, n_workers=8, seed=13, decode_cache_size=2))
+    rng = np.random.default_rng(5)
+    worst = 0.0
+    for _ in range(4):
+        xr = [jnp.asarray(rng.normal(size=128).astype(np.float32))
+              for _ in range(4)]
+        for x, y in zip(xr, svc.submit_batch(xr, kind="r2c")):
+            worst = max(worst, float(
+                np.abs(y - np.fft.rfft(np.asarray(x))).max()))
+        ys = [jnp.asarray(np.fft.rfft(np.asarray(x)).astype(np.complex64))
+              for x in xr]
+        for x, z in zip(xr, svc.submit_batch(ys, kind="c2r")):
+            worst = max(worst, float(np.abs(z - np.asarray(x)).max()))
+        xc = [jnp.asarray((rng.normal(size=128) + 1j * rng.normal(size=128))
+                          .astype(np.complex64)) for _ in range(4)]
+        for x, y in zip(xc, svc.submit_batch(xc)):
+            worst = max(worst, float(
+                np.abs(y - np.fft.fft(np.asarray(x))).max()))
+    assert worst < 1e-2, worst
+    assert svc.stats.decode_cache_misses > 2  # churn proof
+
+
 # ----------------------------------------------- service path selection
 def test_service_default_uses_kernel_path_with_reference_escape():
     svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8))

@@ -78,3 +78,66 @@ def test_property_random_subset_decode(n, m_frac, seed):
     sub = jnp.asarray(rng.choice(n, size=m, replace=False))
     got = mds.decode_from_subset(g, a, sub)
     np.testing.assert_allclose(np.asarray(got), np.asarray(c), atol=1e-6)
+
+
+# -------------------- §4 decode_auto dispatch boundary (regression pins) -----
+def _decode_jaxpr(n, m, subset):
+    g = mds.rs_generator(n, m, jnp.complex128)
+    b = jnp.zeros((n, 6), jnp.complex128)
+    # the subset must be CONCRETE before tracing begins: array creation
+    # inside the trace is staged to a Tracer, which would flip decode_auto
+    # onto its traced lax.cond path and put BOTH branches in the jaxpr
+    sub = jnp.asarray(subset)
+    import jax
+
+    return str(jax.make_jaxpr(lambda bb: mds.decode_auto(g, bb, sub))(b))
+
+
+def test_decode_auto_boundary_at_ifft_auto_max_m():
+    """Contiguous arcs at m == IFFT_AUTO_MAX_M must still take the O(s log N)
+    transform decode: the jaxpr contains fft ops and no dense solve."""
+    m = mds.IFFT_AUTO_MAX_M
+    jaxpr = _decode_jaxpr(m + 4, m, list(range(3, 3 + m)))
+    assert "fft" in jaxpr
+    assert "triangular_solve" not in jaxpr
+
+
+def test_decode_auto_boundary_above_ifft_auto_max_m():
+    """One past the boundary (m == IFFT_AUTO_MAX_M + 1) the same contiguous
+    arc must flip to the backward-stable Vandermonde solve: no fft ops."""
+    m = mds.IFFT_AUTO_MAX_M + 1
+    jaxpr = _decode_jaxpr(m + 4, m, list(range(3, 3 + m)))
+    assert "fft" not in jaxpr
+    assert "triangular_solve" in jaxpr
+
+
+def test_batched_decode_resolves_auto_to_solve_statically():
+    """Per-request masked decode under vmap must resolve auto -> solve at
+    TRACE time: a lax.cond would select-execute BOTH decode paths per
+    request (plan.py).  Assert the jaxpr carries neither cond nor fft."""
+    import jax
+
+    from repro.core import CodedFFT
+
+    plan = CodedFFT(s=48, m=4, n_workers=8, dtype=jnp.complex128)
+    b = jnp.zeros((3, 8, 12), jnp.complex128)
+    masks = jnp.ones((3, 8), bool)
+    jaxpr = str(jax.make_jaxpr(
+        lambda bb, mk: plan.decode(bb, mask=mk))(b, masks))
+    assert "cond[" not in jaxpr
+    assert "triangular_solve" in jaxpr
+    assert "fft" not in jaxpr
+
+
+def test_decode_auto_traced_subset_keeps_cond_unbatched():
+    """The UNbatched traced-subset path deliberately keeps the lax.cond
+    dispatch (a real branch outside vmap) -- pin it so the static
+    resolution above stays a batched-only special case."""
+    import jax
+
+    n, m = 10, 4
+    g = mds.rs_generator(n, m, jnp.complex128)
+    b = jnp.zeros((n, 5), jnp.complex128)
+    jaxpr = str(jax.make_jaxpr(
+        lambda bb, ss: mds.decode_auto(g, bb, ss))(b, jnp.arange(m)))
+    assert "cond[" in jaxpr

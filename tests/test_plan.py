@@ -14,7 +14,10 @@ from repro.core import (
     CodedFFT,
     CodedFFTMultiInput,
     CodedFFTND,
+    CodedIFFT,
+    CodedIRFFT,
     CodedPlan,
+    CodedRFFT,
     MDSPlan,
     UncodedRepetitionFFT,
     mds,
@@ -28,18 +31,37 @@ def _rand(shape, seed=0):
     return jnp.asarray(rng.normal(size=shape) + 1j * rng.normal(size=shape))
 
 
-def _plans():
+def _mds_plans():
     return [
         CodedFFT(s=64, m=4, n_workers=6, dtype=C128),
         CodedFFTND(shape=(8, 8), factors=(2, 2), n_workers=6, dtype=C128),
         CodedFFTMultiInput(q=4, shape=(8,), m_tilde=2, factors=(2,),
                            n_workers=6, dtype=C128),
+        CodedRFFT(s=64, m=4, n_workers=6, dtype=C128),
+        CodedIFFT(s=64, m=4, n_workers=6, dtype=C128),
+        CodedIRFFT(s=64, m=4, n_workers=6, dtype=C128),
+    ]
+
+
+def _plans():
+    return _mds_plans() + [
         UncodedRepetitionFFT(s=64, m=2, n_workers=8, dtype=C128),
     ]
 
 
+def _plan_input(plan, seed):
+    """A valid random input for any plan (real for r2c, half-spectrum
+    Hermitian-consistent for c2r, complex otherwise)."""
+    rng = np.random.default_rng(seed)
+    if isinstance(plan, CodedRFFT):
+        return jnp.asarray(rng.normal(size=plan.input_shape))
+    if isinstance(plan, CodedIRFFT):
+        return jnp.asarray(np.fft.rfft(rng.normal(size=plan.s)))
+    return _rand(plan.input_shape, seed=seed)
+
+
 # ---------------- protocol conformance ---------------------------------------
-def test_all_four_strategies_satisfy_coded_plan():
+def test_all_strategies_satisfy_coded_plan():
     for plan in _plans():
         assert isinstance(plan, CodedPlan), type(plan).__name__
         assert plan.recovery_threshold >= 1
@@ -47,9 +69,9 @@ def test_all_four_strategies_satisfy_coded_plan():
 
 
 def test_mds_plans_expose_message_postdecode():
-    for plan in _plans()[:3]:
+    for plan in _mds_plans():
         assert isinstance(plan, MDSPlan), type(plan).__name__
-        x = _rand(plan.input_shape, seed=1)
+        x = _plan_input(plan, seed=1)
         c = plan.message(x)
         assert c.shape == (plan.m,) + tuple(plan.worker_shard_shape)
         # encode == DFT of the message symbols, decode o postdecode inverts
@@ -57,23 +79,27 @@ def test_mds_plans_expose_message_postdecode():
             np.asarray(plan.encode(x)),
             np.asarray(mds.encode_dft(c, plan.n_workers)), atol=1e-9)
     # repetition is deliberately NOT an MDS plan
-    assert not isinstance(_plans()[3], MDSPlan)
+    assert not isinstance(_plans()[-1], MDSPlan)
 
 
 def test_dense_and_dft_encode_agree():
-    for plan in _plans()[:3]:
-        x = _rand(plan.input_shape, seed=2)
+    for plan in _mds_plans():
+        x = _plan_input(plan, seed=2)
         np.testing.assert_allclose(
             np.asarray(plan.encode(x)), np.asarray(plan.encode_dense(x)),
             atol=1e-9)
 
 
 # ---------------- batched shapes == per-request oracle -----------------------
-@pytest.mark.parametrize("plan_idx", [0, 1, 2, 3])
+# (end-to-end parity against numpy under random masks/batches lives in the
+# property-based differential suite, tests/test_properties.py -- here we
+# only pin the batched SHAPE contract and per-request equivalence)
+@pytest.mark.parametrize("plan_idx", range(7))
 def test_batched_run_equals_per_request(plan_idx):
     plan = _plans()[plan_idx]
     nb = 3
-    xb = _rand((nb,) + tuple(plan.input_shape), seed=plan_idx)
+    x1 = _plan_input(plan, seed=plan_idx)
+    xb = jnp.stack([x1, x1 * 0.5, x1 + 1])
     a = plan.encode(xb)
     assert a.shape == (nb, plan.n_workers) + tuple(plan.worker_shard_shape)
     b = plan.worker_compute(a)
@@ -84,27 +110,6 @@ def test_batched_run_equals_per_request(plan_idx):
         one = plan.run(xb[i])
         np.testing.assert_allclose(np.asarray(out[i]), np.asarray(one),
                                    atol=1e-8)
-
-
-def test_batched_decode_per_request_masks():
-    plan = CodedFFT(s=48, m=4, n_workers=8, dtype=C128)
-    xb = _rand((3, 48), seed=7)
-    masks = jnp.asarray([
-        [True] * 8,
-        [False, True, False, True, True, False, True, False],
-        [True, True, False, False, True, True, False, False],
-    ])
-    b = plan.worker_compute(plan.encode(xb))
-    # stragglers return NaN garbage; per-request masks must shield decode
-    nan_rows = jnp.where(masks[:, :, None], b, jnp.nan)
-    out = plan.decode(nan_rows, mask=masks)
-    want = jnp.fft.fft(xb, axis=-1)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-8)
-    # and per-request results equal the unbatched oracle
-    for i in range(3):
-        one = plan.decode(nan_rows[i], mask=masks[i])
-        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(one),
-                                   atol=1e-10)
 
 
 # ---------------- decode_ifft == Vandermonde solve ---------------------------
@@ -265,6 +270,17 @@ got = dmi.run(tq, mask)
 want = jnp.stack([jnp.fft.fft(tq[h]) for h in range(4)])
 errq = float(jnp.max(jnp.abs(got - want)))
 assert errq < 1e-8, f"multi-input err {errq}"
+
+# real-input plan (DESIGN.md §7): half-length packed shard shapes thread
+# through the same runtime unchanged, NaN-poisoned stragglers ignored
+from repro.core import CodedRFFT
+pr = CodedRFFT(s=96, m=4, n_workers=8, dtype=jnp.complex128,
+               backend="reference")
+dr = DistributedCodedPlan(pr, mesh, masked_fill=float("nan"))
+xr = jnp.asarray(rng.normal(size=(3, 96)))
+outr = dr.run(xr, masks)
+errr = float(jnp.max(jnp.abs(outr - jnp.fft.rfft(xr, axis=-1))))
+assert errr < 1e-8, f"rfft mesh err {errr}"
 print("SUBPROC_PLAN_OK")
 """
 
