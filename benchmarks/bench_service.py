@@ -11,6 +11,7 @@ perf trajectory.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -19,6 +20,10 @@ import jax.numpy as jnp
 
 from repro.distributed.straggler import StragglerModel
 from repro.serving import FFTService, FFTServiceConfig
+
+# BENCH_SMOKE=1 (the CI bench-smoke job): few requests/reps, NO artifact
+# write -- structural + correctness signal only, fast enough to gate PRs
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
 
 
 def _requests(n, s, key):
@@ -32,26 +37,27 @@ def _requests(n, s, key):
 
 def run() -> list[str]:
     lines = ["bench_service: coded FFT serving with stragglers"]
-    for mu in (2.0, 1.0, 0.5):
+    for mu in ((1.0,) if SMOKE else (2.0, 1.0, 0.5)):
         svc = FFTService(FFTServiceConfig(
             s=2048, m=4, n_workers=8,
             straggler=StragglerModel(t0=1.0, mu=mu), seed=0))
         key = jax.random.PRNGKey(0)
-        xs, key = _requests(30, 2048, key)
+        xs, key = _requests(8 if SMOKE else 30, 2048, key)
         worst = 0.0
         for x in xs:
             y = svc.submit(x)
             worst = max(worst, float(jnp.max(jnp.abs(y - jnp.fft.fft(x)))))
         st = svc.stats.summary()
         lines.append(
-            f"  mu={mu:<4} 30 reqs: coded {st['mean_coded_latency']:.3f}s vs "
+            f"  mu={mu:<4} {len(xs)} reqs: coded "
+            f"{st['mean_coded_latency']:.3f}s vs "
             f"uncoded {st['mean_uncoded_latency']:.3f}s "
             f"({st['speedup']:.2f}x), {st['stragglers_tolerated']} stragglers "
             f"tolerated, worst err {worst:.1e}")
         assert worst < 1e-2
 
-    # ---- batched scheduler throughput (DESIGN.md §5) ------------------------
-    n_req, s = 64, 2048
+    # ---- batched scheduler throughput (DESIGN.md §5/§8) ---------------------
+    n_req, s = (16 if SMOKE else 64), 2048
     cfg = FFTServiceConfig(s=s, m=4, n_workers=8,
                            straggler=StragglerModel(t0=1.0, mu=1.0),
                            seed=0, max_batch=64)
@@ -79,6 +85,7 @@ def run() -> list[str]:
     worst = max(float(jnp.max(jnp.abs(y - jnp.fft.fft(x))))
                 for x, y in zip(xs, outs_bat))
     assert worst < 1e-2
+    bat_stats = bat.stats.summary()
     result = {
         "s": s,
         "m": cfg.m,
@@ -89,7 +96,13 @@ def run() -> list[str]:
         "sequential_rps": n_req / dt_seq,
         "batched_rps": n_req / dt_bat,
         "batch_speedup": dt_seq / dt_bat,
-        "batches": bat.stats.summary()["batches"],
+        "batches": bat_stats["batches"],
+        # the async-pipeline observables (DESIGN.md §8): dispatch vs sync
+        # wall split and ONE device->host transfer per submit_batch call
+        "dispatch_s": bat_stats["dispatch_s"],
+        "sync_s": bat_stats["sync_s"],
+        "host_transfers": bat_stats["host_transfers"],
+        "decode_cache_misses": bat_stats["decode_cache_misses"],
     }
 
     # ---- real-input (r2c) bucket config (DESIGN.md §7) ----------------------
@@ -109,7 +122,7 @@ def run() -> list[str]:
     xs_cplx = [x.astype(jnp.complex64) for x in xs_real]
     rsvc.submit_batch(xs_cplx)                          # compile warm-up
     t_r2c, t_c2c = [], []
-    for r in range(10):
+    for r in range(4 if SMOKE else 10):
         order = ((("r2c",), t_r2c), (("c2c",), t_c2c))
         for (kind,), acc in (order if r % 2 == 0 else order[::-1]):
             t0 = time.perf_counter()
@@ -136,6 +149,11 @@ def run() -> list[str]:
         f"({n_req / r_med:.0f} rps) vs c2c-on-real {c_med * 1e3:.1f} ms "
         f"({n_req / c_med:.0f} rps) -> "
         f"{c_med / r_med:.2f}x, worst err {worst_r:.1e}")
+    if SMOKE:
+        lines.append(
+            f"  batched scheduler (smoke): {n_req} reqs in {dt_bat * 1e3:.1f} "
+            f"ms [BENCH_SMOKE=1: artifact not written]")
+        return lines
     # anchor to the repo root so the tracked artifact updates regardless of cwd
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_service.json"
     # append to the perf trajectory rather than overwrite: the previous runs

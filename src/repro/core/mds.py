@@ -43,6 +43,10 @@ __all__ = [
     "decode_auto",
     "is_contiguous_subset",
     "lagrange_decode_coeffs",
+    "lagrange_inverse",
+    "lagrange_decode_matrix",
+    "lagrange_decode_matrices",
+    "LAGRANGE_MAX_M",
 ]
 
 
@@ -188,6 +192,84 @@ def lagrange_decode_coeffs(
     a0 = jnp.zeros((m + 1,), dtype).at[0].set(1.0)
     a = jax.lax.fori_loop(0, m, mul_linear, a0)
     return a, dinv
+
+
+# -- structured subset inversion (device-resident decode matrices) ------------
+#
+# ``inv(G[subset])`` has a CLOSED FORM: column j of the inverse holds the
+# coefficients of the Lagrange basis polynomial ``L_j(z) = A(z) / ((z -
+# x_j) A'(x_j))`` at the subset's nodes (``V[j, i] = x_j^i``, so ``sum_i
+# inv[i, j] z^i`` must be 1 at ``x_j`` and 0 at the other nodes).  With the
+# locator ``A(z) = prod_k (z - x_k)`` that is O(m^2) of elementwise work and
+# small matmuls -- no ``linalg.inv``, no host round-trip, jit/vmap-safe --
+# which is what lets the service build per-request decode matrices INSIDE
+# the bucket executor (DESIGN.md §8).  Deflation is evaluated in the
+# division-free suffix form ``q_i^{(j)} = sum_{d>=0} a_{i+1+d} x_j^d`` so
+# every step is a (static-shape) contraction; the node powers are exact
+# (``x_j^d = omega^{subset_j * d mod n}``), never a running product.
+
+
+# Largest m routed to the device-resident Lagrange decode automatically.
+# The construction is componentwise-stable (error tracks the subset's own
+# interpolation conditioning, like the host inverse); past m ~ 32 the
+# f32 planes the kernels decode in are the binding constraint for
+# adversarial (contiguous-arc) subsets, so the service falls back to the
+# host complex128 LRU there (serving/decode_cache.py).
+LAGRANGE_MAX_M = 32
+
+
+def lagrange_inverse(subset: jax.Array, n: int, dtype=jnp.complex64) -> jax.Array:
+    """Closed-form ``inv(rs_generator(n, m)[subset])`` -- O(m^2), jit-safe.
+
+    ``subset``: ``(m,)`` integer worker indices (distinct).  Returns the
+    ``(m, m)`` compact decode matrix.  Matches ``jnp.linalg.inv`` of the
+    subset generator to within the subset's interpolation conditioning.
+    """
+    m = subset.shape[0]
+    subset = subset.astype(jnp.int32)
+    # exact node powers P[j, d] = x_j^d via the root-of-unity closed form
+    ang = (subset[:, None] * jnp.arange(m, dtype=jnp.int32)[None, :]) % n
+    p = jnp.exp(-2j * jnp.pi * ang / n).astype(dtype)
+    nodes = jnp.exp(-2j * jnp.pi * subset / n).astype(dtype)
+    # locator A(z) = prod (z - x_j), multiplied in balanced (shuffled static)
+    # order -- same stability argument as lagrange_decode_coeffs
+    perm = np.random.default_rng(0).permutation(m)
+    a = jnp.zeros((m + 1,), dtype).at[0].set(1.0)
+    for i in perm:
+        shifted = jnp.roll(a, 1).at[0].set(0.0)
+        a = shifted - nodes[i] * a
+    # deflation, suffix form: T[i, d] = a[i + d + 1] (0 past the end), then
+    # q[i, j] = sum_d T[i, d] x_j^d are the coefficients of A(z)/(z - x_j)
+    ii, dd = np.indices((m, m))
+    hi = ii + dd + 1
+    t = jnp.take(a, jnp.asarray(np.minimum(hi, m))) * jnp.asarray(hi <= m)
+    q = t @ p.T
+    # A'(x_j) = Q_j(x_j) = sum_i q[i, j] x_j^i
+    aprime = jnp.einsum("ij,ji->j", q, p)
+    return q / aprime[None, :]
+
+
+def lagrange_decode_matrix(mask: jax.Array, m: int, dtype=jnp.complex64) -> jax.Array:
+    """Per-mask ``(m, n)`` SCATTER decode matrix, built on device.
+
+    ``mask``: boolean ``(n,)`` worker availability.  Columns of the first
+    ``m`` available workers hold ``inv(G[subset])``; straggler columns are
+    zero, so ``c_hat = D @ b`` never reads their (garbage) rows -- the same
+    contract as ``DecodeMatrixCache.matrix`` with no host inversion and no
+    LRU side channel.
+    """
+    mask = jnp.asarray(mask)
+    n = mask.shape[0]
+    subset = first_available(mask, m).astype(jnp.int32)
+    inv = lagrange_inverse(subset, n, dtype)
+    # scatter as a one-hot contraction (vmap/kernel-friendly: no .at[] write)
+    onehot = (subset[:, None] == jnp.arange(n)[None, :]).astype(inv.real.dtype)
+    return inv @ onehot.astype(inv.dtype)
+
+
+def lagrange_decode_matrices(masks: jax.Array, m: int, dtype=jnp.complex64) -> jax.Array:
+    """Batched :func:`lagrange_decode_matrix`: ``(B, n)`` -> ``(B, m, n)``."""
+    return jax.vmap(lambda mk: lagrange_decode_matrix(mk, m, dtype))(masks)
 
 
 def decode_ifft(b: jax.Array, subset: jax.Array, n: Optional[int] = None) -> jax.Array:

@@ -20,9 +20,10 @@ The paper's master/worker topology mapped to SPMD (DESIGN.md §3):
 * **decode** -- all-gather the worker results along the axis (the paper's
   fan-in to the master: exactly s coded symbols on the wire, the cut-set
   optimum of Remark 5), then every device runs the same masked MDS decode
-  (fast-path dispatch per DESIGN.md §4) + recombine.  Replicated decode
-  wastes no wall-clock vs a physical master because the all-gather is the
-  critical path either way.
+  (fast-path dispatch per DESIGN.md §4; batched requests build per-mask
+  Lagrange decode matrices IN-TRACE for ``m <= LAGRANGE_MAX_M``,
+  DESIGN.md §8) + recombine.  Replicated decode wastes no wall-clock vs a
+  physical master because the all-gather is the critical path either way.
 
 ``n_local = N // axis_size`` coded shards live on each device, so N need
 not equal the device count (e.g. N=8 code on a 4-device axis).
@@ -147,8 +148,27 @@ class DistributedCodedPlan:
             if nb == 1:
                 # single request: decode_auto's lax.cond stays a real branch
                 return decode1(b_all[0], mask_rep[0], method)[None]
-            # batched: under vmap the cond would select-execute BOTH decode
-            # paths per request -- resolve auto to the solve instead
+            if method == "auto" and m <= mds.LAGRANGE_MAX_M:
+                # batched mask-to-weights (DESIGN.md §8): per-request
+                # decode matrices from the closed-form Lagrange inversion,
+                # built in-trace -- no vmapped linalg.solve, no host work
+                # per novel mask.  The m responder rows are GATHERED before
+                # the contraction, so the masked_fill rows (NaN in tests)
+                # are provably never read.
+                subsets = jax.vmap(
+                    lambda mk: mds.first_available(mk, m))(mask_rep)
+                inv = jax.vmap(
+                    lambda sub: mds.lagrange_inverse(sub, n, b_all.dtype)
+                )(subsets)
+                rows = jnp.take_along_axis(
+                    b_all, subsets[:, :, None], axis=1)
+                c_hat = inv @ rows                        # (nb, m, payload)
+                return jax.vmap(
+                    lambda ch: plan.postdecode(ch.reshape((m,) + shard))
+                )(c_hat)
+            # batched, pinned method: under vmap decode_auto's cond would
+            # select-execute BOTH decode paths per request -- resolve auto
+            # to the solve instead
             mth = "solve" if method == "auto" else method
             return jax.vmap(lambda bi, mk: decode1(bi, mk, mth))(
                 b_all, mask_rep)

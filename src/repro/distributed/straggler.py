@@ -12,6 +12,18 @@ k-th order statistic; its expectation has the closed form
 
     E[T_(k)] = w * (t0 + (H_N - H_{N-k}) / mu),   H_n = sum_{i<=n} 1/i.
 
+``t0`` optionally splits into compute and WIRE time: ``wire_frac`` is the
+fraction of ``t0`` spent shipping the result shard back to the master
+(Jeong et al. 1805.09891 show this master-side communication dominating
+coded FFT at scale), and per-draw ``payload_scale`` scales only that
+share.  The real-kind shards of DESIGN.md §7 ship half the c2c payload,
+so the service charges them ``payload_scale=0.5``:
+
+    T_i = w * (t0 * (1 - wire_frac + wire_frac * payload_scale) + X_i).
+
+With the default ``payload_scale=1`` every formula reduces to the
+literature model above, whatever ``wire_frac`` is.
+
 These drive benchmarks/bench_latency.py: coded FFT (k=m, w=1/m) vs
 uncoded (k=N partitions, w=1/N) vs repetition / short-dot thresholds.
 """
@@ -32,20 +44,32 @@ def harmonic(n: int) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class StragglerModel:
-    t0: float = 1.0      # deterministic seconds per unit workload
-    mu: float = 1.0      # exponential rate of the tail
+    t0: float = 1.0         # deterministic seconds per unit workload
+    mu: float = 1.0         # exponential rate of the tail
+    wire_frac: float = 0.25  # share of t0 that is result-shipping wire
+    #                          time, scaled by each draw's payload_scale
+    #                          (inert at payload_scale=1, the default)
 
-    def sample(self, n, workload: float, rng: np.random.Generator
-               ) -> np.ndarray:
+    def _t0_eff(self, payload_scale: float) -> float:
+        return self.t0 * (1.0 - self.wire_frac
+                          + self.wire_frac * payload_scale)
+
+    def sample(self, n, workload: float, rng: np.random.Generator,
+               *, payload_scale: float = 1.0) -> np.ndarray:
         """Finish times of workers each processing ``workload`` units.
 
         ``n``: worker count or a shape tuple (e.g. ``(requests, workers)``
-        for one vectorized draw per scheduler bucket).
+        for one vectorized draw per scheduler bucket).  ``payload_scale``
+        scales the WIRE share of ``t0`` only (module docstring) -- e.g.
+        0.5 for the half-payload real-kind shards.
         """
-        return workload * (self.t0 + rng.exponential(1.0 / self.mu, size=n))
+        return workload * (self._t0_eff(payload_scale)
+                           + rng.exponential(1.0 / self.mu, size=n))
 
-    def expected_kth(self, n: int, k: int, workload: float) -> float:
-        return expected_kth_completion(self.t0, self.mu, n, k, workload)
+    def expected_kth(self, n: int, k: int, workload: float,
+                     payload_scale: float = 1.0) -> float:
+        return expected_kth_completion(
+            self._t0_eff(payload_scale), self.mu, n, k, workload)
 
 
 def expected_kth_completion(t0: float, mu: float, n: int, k: int,

@@ -31,26 +31,111 @@ fallback for bucket shapes whose working set exceeds VMEM.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.cmatmul import bcmatmul_body, cmatmul_body
 from repro.kernels.fourstep_fft import encode_fourstep_body
 
 __all__ = [
+    "lagrange_planes_body",
     "bucket_body",
+    "bucket_body_masked",
     "bucket_body_fftworker",
     "coded_fft_bucket",
+    "coded_fft_bucket_masked",
     "pack_real_planes",
     "half_postdecode_body",
     "rbucket_body",
+    "rbucket_body_masked",
     "rbucket_body_fftworker",
     "coded_rfft_bucket",
+    "coded_rfft_bucket_masked",
     "ir_message_body",
     "ir_unpack_body",
     "irbucket_body_fftworker",
 ]
+
+
+# ================================== device-resident decode matrices (§8)
+#
+# The closed-form Lagrange inversion of core/mds.py restated on f32 planes
+# with ONLY Mosaic-expressible ops -- broadcasted_iota, elementwise trig,
+# static-shape matmuls, one static-unrolled m-step product -- so the bucket
+# kernels can build every request's decode matrix IN VMEM from its
+# responder subset.  No gathers: node powers come from the root-of-unity
+# closed form, coefficient shifts from a static one-hot contraction, and
+# the scatter from a subset-vs-iota one-hot matmul.
+
+
+@functools.lru_cache(maxsize=None)
+def _locator_perm(m: int) -> np.ndarray:
+    # balanced (shuffled static) multiplication order keeps the locator's
+    # partial products O(1) -- same argument as mds.lagrange_decode_coeffs
+    return np.random.default_rng(0).permutation(m)
+
+
+def lagrange_planes_body(subsets, n):
+    """Per-request decode matrices from responder subsets, on planes.
+
+    ``subsets``: ``(bq, m)`` int32 -- each request's first-m available
+    workers.  Returns ``(ivr, ivi, dr, di)``: the compact ``(bq, m, m)``
+    inverse planes (the gathered-decode form the direct executor wants) and
+    the scatter ``(bq, m, n)`` planes with zero straggler columns (the MXU
+    form the fused kernels contract against).  O(m^2) work per request;
+    every op lowers inside a Mosaic kernel body.
+    """
+    bq, m = subsets.shape
+    f32 = jnp.float32
+    subsets = subsets.astype(jnp.int32)
+    tau = 2.0 * np.pi / n
+    # exact node powers P[b, j, d] = x_j^d = omega^(subset_j * d mod n)
+    d_iota = jax.lax.broadcasted_iota(jnp.int32, (bq, m, m), 2)
+    angp = (-tau) * ((subsets[:, :, None] * d_iota) % n).astype(f32)
+    pr, pi_ = jnp.cos(angp), jnp.sin(angp)
+    angn = (-tau) * (subsets % n).astype(f32)
+    nr, ni = jnp.cos(angn), jnp.sin(angn)                   # nodes (bq, m)
+    # locator A(z) = prod (z - x_j): m static-unrolled shift-multiply steps
+    ar = jnp.concatenate([jnp.ones((bq, 1), f32), jnp.zeros((bq, m), f32)], 1)
+    ai = jnp.zeros((bq, m + 1), f32)
+    zero = jnp.zeros((bq, 1), f32)
+    for i in _locator_perm(m):
+        sr = jnp.concatenate([zero, ar[:, :m]], axis=1)     # z * A(z)
+        si = jnp.concatenate([zero, ai[:, :m]], axis=1)
+        xr_, xi_ = nr[:, i:i + 1], ni[:, i:i + 1]
+        ar, ai = sr - (xr_ * ar - xi_ * ai), si - (xr_ * ai + xi_ * ar)
+    # deflation in suffix form: T[i, d] = a[i+d+1] (0 past m); the selector
+    # S[t, (i, d)] = [t == i+d+1] is built from iota IN the body -- a
+    # pallas_call kernel may not capture host constants
+    ii = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    dd = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    tsel = jax.lax.broadcasted_iota(jnp.int32, (m + 1, m, m), 0)
+    sel = (tsel == (ii + dd + 1)[None]).astype(f32).reshape(m + 1, m * m)
+    # q = T @ P^T: the coefficients of A(z)/(z - x_j) for every j at once
+    tr = (ar @ sel).reshape(bq, m, m)
+    ti = (ai @ sel).reshape(bq, m, m)
+    prT = jnp.swapaxes(pr, 1, 2)
+    piT = jnp.swapaxes(pi_, 1, 2)
+    qr = tr @ prT - ti @ piT
+    qi = tr @ piT + ti @ prT                                # (bq, i, j)
+    # A'(x_j) = Q_j(x_j) = sum_i q[i, j] x_j^i  (diagonal contraction)
+    qrT = jnp.swapaxes(qr, 1, 2)
+    qiT = jnp.swapaxes(qi, 1, 2)                            # (bq, j, i)
+    apr = jnp.sum(qrT * pr - qiT * pi_, axis=2)
+    api = jnp.sum(qrT * pi_ + qiT * pr, axis=2)             # (bq, j)
+    den = apr * apr + api * api
+    cr = (apr / den)[:, None, :]
+    ci = (-api / den)[:, None, :]                           # 1 / A'(x_j)
+    ivr = qr * cr - qi * ci
+    ivi = qr * ci + qi * cr                                 # inv (bq, m, m)
+    # scatter inv columns to worker slots: D[:, subset] = inv, one-hot matmul
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (bq, m, n), 2)
+    onehot = (subsets[:, :, None] == k_iota).astype(f32)    # (bq, m, n)
+    return ivr, ivi, ivr @ onehot, ivi @ onehot
 
 
 def bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
@@ -96,6 +181,21 @@ def bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
     outr = outr.reshape(m, bq, a, b).transpose(1, 0, 3, 2).reshape(bq, s)
     outi = outi.reshape(m, bq, a, b).transpose(1, 0, 3, 2).reshape(bq, s)
     return outr, outi
+
+
+def bucket_body_masked(xr, xi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+                       twr, twi, fmr, fmi):
+    """:func:`bucket_body` with the decode matrices built IN the body.
+
+    Takes each request's ``(m,)`` responder subset instead of
+    precomputed decode planes: the Lagrange weights are formed in VMEM
+    (DESIGN.md §8) and contracted immediately -- the ``(bq, m, N)``
+    matrices never exist outside the kernel's working set.
+    """
+    n = gr.shape[0]
+    _, _, dr, di = lagrange_planes_body(subsets, n)
+    return bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                       twr, twi, fmr, fmi)
 
 
 def bucket_body_fftworker(xr, xi, dvr, dvi, subsets, gr, gi,
@@ -242,6 +342,16 @@ def rbucket_body(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
     return half_postdecode_body(hr, hi, swr, swi, twr, twi, fhr, fhi, s)
 
 
+def rbucket_body_masked(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+                        swr, swi, twr, twi, fhr, fhi, s):
+    """:func:`rbucket_body` with in-VMEM Lagrange decode matrices (cf.
+    :func:`bucket_body_masked`)."""
+    n = gr.shape[0]
+    _, _, dr, di = lagrange_planes_body(subsets, n)
+    return rbucket_body(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                        swr, swi, twr, twi, fhr, fhi, s)
+
+
 def rbucket_body_fftworker(xr, dvr, dvi, subsets, gr, gi,
                            swr, swi, twr, twi, fhr, fhi, s):
     """Direct-mode (off-TPU) r2c bucket: platform-FFT worker on the packed
@@ -326,6 +436,63 @@ def coded_rfft_bucket(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
         interpret=interpret,
         name="coded_rfft_bucket",
     )(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+      swr, swi, twr, twi, fhr, fhi)
+
+
+def _rbucket_kernel_masked(s):
+    def kernel(xr_ref, sub_ref, gr_ref, gi_ref,
+               far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
+               swr_ref, swi_ref, twr_ref, twi_ref, fhr_ref, fhi_ref,
+               or_ref, oi_ref):
+        or_ref[...], oi_ref[...] = rbucket_body_masked(
+            xr_ref[...], sub_ref[...], gr_ref[...], gi_ref[...],
+            far_ref[...], fai_ref[...], wr_ref[...], wi_ref[...],
+            fbr_ref[...], fbi_ref[...], swr_ref[...], swi_ref[...],
+            twr_ref[...], twi_ref[...], fhr_ref[...], fhi_ref[...], s)
+
+    return kernel
+
+
+def coded_rfft_bucket_masked(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+                             swr, swi, twr, twi, fhr, fhi, s, *,
+                             block_q: int = 1, interpret: bool = False):
+    """:func:`coded_rfft_bucket` taking ``(q, m)`` responder subsets in
+    place of decode planes -- the Lagrange weights are built in VMEM per
+    grid step (DESIGN.md §8)."""
+    q, s_ = xr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    n2 = a * b
+    ell = 2 * n2
+    sh = s // 2 + 1
+    rows = m // 2 + 1
+    block_q = max(1, min(block_q, q))
+    spec_x = pl.BlockSpec((block_q, s), lambda i: (i, 0))
+    spec_o = pl.BlockSpec((block_q, sh), lambda i: (i, 0))
+    spec_sub = pl.BlockSpec((block_q, m), lambda i: (i, 0))
+    spec_g = pl.BlockSpec((n, m), lambda i: (0, 0))
+    spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
+    spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
+    spec_fb = pl.BlockSpec((b, b), lambda i: (0, 0))
+    spec_sw = pl.BlockSpec((1, n2 + 1), lambda i: (0, 0))
+    spec_tw = pl.BlockSpec((m, ell), lambda i: (0, 0))
+    spec_fh = pl.BlockSpec((rows, m), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((q, sh), xr.dtype),
+        jax.ShapeDtypeStruct((q, sh), xr.dtype),
+    ]
+    return pl.pallas_call(
+        _rbucket_kernel_masked(s),
+        grid=(pl.cdiv(q, block_q),),
+        in_specs=[spec_x, spec_sub, spec_g, spec_g,
+                  spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb,
+                  spec_sw, spec_sw, spec_tw, spec_tw, spec_fh, spec_fh],
+        out_specs=[spec_o, spec_o],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="coded_rfft_bucket_masked",
+    )(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
       swr, swi, twr, twi, fhr, fhi)
 
 
@@ -459,3 +626,55 @@ def coded_fft_bucket(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
         interpret=interpret,
         name="coded_fft_bucket",
     )(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi, twr, twi, fmr, fmi)
+
+
+def _bucket_kernel_masked(xr_ref, xi_ref, sub_ref, gr_ref, gi_ref,
+                          far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
+                          twr_ref, twi_ref, fmr_ref, fmi_ref, or_ref, oi_ref):
+    or_ref[...], oi_ref[...] = bucket_body_masked(
+        xr_ref[...], xi_ref[...], sub_ref[...],
+        gr_ref[...], gi_ref[...], far_ref[...], fai_ref[...],
+        wr_ref[...], wi_ref[...], fbr_ref[...], fbi_ref[...],
+        twr_ref[...], twi_ref[...], fmr_ref[...], fmi_ref[...])
+
+
+def coded_fft_bucket_masked(xr, xi, subsets, gr, gi, far, fai, wr, wi,
+                            fbr, fbi, twr, twi, fmr, fmi, *, block_q: int = 1,
+                            interpret: bool = False):
+    """:func:`coded_fft_bucket` taking ``(q, m)`` responder subsets in place
+    of the ``(q, m, N)`` decode planes.
+
+    The per-request Lagrange decode matrices are built INSIDE the kernel
+    (VMEM-resident, DESIGN.md §8), so the host ships two int32 words per
+    request per shard instead of ``2 * m * N`` f32 matrix entries -- and no
+    host inversion or LRU exists at all.
+    """
+    q, s = xr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    ell = a * b
+    block_q = max(1, min(block_q, q))
+    spec_x = pl.BlockSpec((block_q, s), lambda i: (i, 0))
+    spec_sub = pl.BlockSpec((block_q, m), lambda i: (i, 0))
+    spec_g = pl.BlockSpec((n, m), lambda i: (0, 0))
+    spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
+    spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
+    spec_fb = pl.BlockSpec((b, b), lambda i: (0, 0))
+    spec_tw = pl.BlockSpec((m, ell), lambda i: (0, 0))
+    spec_fm = pl.BlockSpec((m, m), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((q, s), xr.dtype),
+        jax.ShapeDtypeStruct((q, s), xr.dtype),
+    ]
+    return pl.pallas_call(
+        _bucket_kernel_masked,
+        grid=(pl.cdiv(q, block_q),),
+        in_specs=[spec_x, spec_x, spec_sub, spec_g, spec_g,
+                  spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb,
+                  spec_tw, spec_tw, spec_fm, spec_fm],
+        out_specs=[spec_x, spec_x],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="coded_fft_bucket_masked",
+    )(xr, xi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi, twr, twi, fmr, fmi)

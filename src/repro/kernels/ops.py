@@ -43,15 +43,20 @@ from repro.kernels.cmatmul import (
 from repro.kernels.coded_pipeline import (
     bucket_body,
     bucket_body_fftworker,
+    bucket_body_masked,
     coded_fft_bucket,
+    coded_fft_bucket_masked,
     coded_rfft_bucket,
+    coded_rfft_bucket_masked,
     half_postdecode_body,
     ir_message_body,
     ir_unpack_body,
     irbucket_body_fftworker,
+    lagrange_planes_body,
     pack_real_planes,
     rbucket_body,
     rbucket_body_fftworker,
+    rbucket_body_masked,
 )
 from repro.kernels.fourstep_fft import (
     encode_fourstep_body,
@@ -79,12 +84,17 @@ __all__ = [
     "encode_worker",
     "decode_apply",
     "recombine_planar",
+    "mask_subsets",
+    "lagrange_compact_planes",
+    "lagrange_scatter_planes",
     "coded_bucket",
     "coded_bucket_direct",
     "coded_bucket_fusable",
+    "coded_bucket_masked",
     "coded_rbucket",
     "coded_rbucket_direct",
     "coded_rbucket_fusable",
+    "coded_rbucket_masked",
     "coded_irbucket_direct",
     "pack_real_planes",
     "rfft_postdecode_planar",
@@ -370,6 +380,36 @@ def decode_apply(dr: jax.Array, di: jax.Array,
     return bcmatmul(dr, di, br, bi, block_q=bq, block_l=bl, interpret=itp)
 
 
+# --------------------------------------- device-resident decode matrices
+def mask_subsets(masks: jax.Array, m: int) -> jax.Array:
+    """First-``m`` responder indices per request, in-trace.
+
+    ``masks``: bool ``(B, N)``.  Returns ``(B, m)`` int32 -- the traced
+    twin of ``DecodeMatrixCache.subset_of`` / ``mds.first_available``
+    (stable argsort keeps arrival order), kept inline so the kernel layer
+    never imports upward into ``repro.core``.
+    """
+    order = jnp.argsort(jnp.logical_not(jnp.asarray(masks)),
+                        axis=-1, stable=True)
+    return order[..., :m].astype(jnp.int32)
+
+
+def lagrange_compact_planes(subsets: jax.Array, n: int):
+    """Per-request compact ``(B, m, m)`` inverse planes from subsets --
+    the gathered-decode form of the direct (off-TPU) bucket executors,
+    built in-trace with no host inversion (DESIGN.md §8)."""
+    ivr, ivi, _, _ = lagrange_planes_body(subsets, n)
+    return ivr, ivi
+
+
+def lagrange_scatter_planes(subsets: jax.Array, n: int):
+    """Per-request scatter ``(B, m, N)`` decode planes (zero straggler
+    columns) from subsets -- the MXU form :func:`decode_apply` and the
+    stage-path kernels contract against."""
+    _, _, dr, di = lagrange_planes_body(subsets, n)
+    return dr, di
+
+
 # -------------------------------------------------------------- recombine
 def recombine_planar(cr: jax.Array, ci: jax.Array, s: int, *,
                      interpret: bool | None = None):
@@ -429,6 +469,31 @@ def coded_bucket(xr: jax.Array, xi: jax.Array,
     bq = _block_q(q, 2 * s + (m + n) * ell, itp)
     return coded_fft_bucket(
         xr, xi, dr, di, gr, gi, *planes, block_q=bq, interpret=itp)
+
+
+def coded_bucket_masked(xr: jax.Array, xi: jax.Array, subsets: jax.Array,
+                        gr: jax.Array, gi: jax.Array, s: int, *,
+                        interpret: bool | None = None):
+    """:func:`coded_bucket` with IN-KERNEL decode matrices (DESIGN.md §8).
+
+    ``subsets``: (q, m) int32 responder indices per request (from
+    :func:`mask_subsets`).  The Lagrange weights are built in VMEM per
+    grid step and contracted immediately; nothing decode-related crosses
+    the host boundary.  Caller checks :func:`coded_bucket_fusable`.
+    """
+    mode = _mode(interpret)
+    q, _ = xr.shape
+    n, m = gr.shape
+    ell = s // m
+    a, b = split_factor(ell)
+    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
+              *_recombine_planes_scrambled(s, m, a, b))
+    if mode == "direct":
+        return bucket_body_masked(xr, xi, subsets, gr, gi, *planes)
+    itp = mode == "interpret"
+    bq = _block_q(q, 2 * s + (m + n) * ell, itp)
+    return coded_fft_bucket_masked(
+        xr, xi, subsets, gr, gi, *planes, block_q=bq, interpret=itp)
 
 
 def coded_bucket_direct(xr: jax.Array, xi: jax.Array,
@@ -491,6 +556,26 @@ def coded_rbucket(xr: jax.Array, dr: jax.Array, di: jax.Array,
     bq = _block_q(q, 2 * s + (m + n) * n2, itp)
     return coded_rfft_bucket(xr, dr, di, gr, gi, *planes, s,
                              block_q=bq, interpret=itp)
+
+
+def coded_rbucket_masked(xr: jax.Array, subsets: jax.Array,
+                         gr: jax.Array, gi: jax.Array, s: int, *,
+                         interpret: bool | None = None):
+    """:func:`coded_rbucket` with in-kernel Lagrange decode matrices
+    (cf. :func:`coded_bucket_masked`)."""
+    mode = _mode(interpret)
+    q, _ = xr.shape
+    n, m = gr.shape
+    n2 = s // m // 2
+    a, b = split_factor(n2)
+    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
+              *_r2c_postdecode_planes(s, m))
+    if mode == "direct":
+        return rbucket_body_masked(xr, subsets, gr, gi, *planes, s)
+    itp = mode == "interpret"
+    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
+    return coded_rfft_bucket_masked(xr, subsets, gr, gi, *planes, s,
+                                    block_q=bq, interpret=itp)
 
 
 def coded_rbucket_direct(xr: jax.Array, dvr: jax.Array, dvi: jax.Array,

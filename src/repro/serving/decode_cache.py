@@ -1,5 +1,12 @@
 """LRU cache of per-straggler-mask MDS decode matrices (DESIGN.md §6).
 
+Since DESIGN.md §8 this is the FALLBACK decode-matrix source: the default
+service path builds per-request matrices inside the jitted bucket executor
+via the closed-form Lagrange inversion (``mds.lagrange_inverse``), and the
+LRU serves only ``m > mds.LAGRANGE_MAX_M`` (where adversarial-subset
+conditioning exceeds what f32 planes carry and the complex128 host inverse
+is the right tool) and explicitly pinned ``device_decode=False`` configs.
+
 The batched service decodes every request in a bucket with ONE Pallas
 batched matmul: each request contributes its own ``(m, N)`` *scatter decode
 matrix* ``D`` with ``D[:, subset] = inv(G[subset, :])`` and zero columns

@@ -23,13 +23,26 @@ The default bucket executor is the Pallas kernel pipeline (DESIGN.md §6):
 requests are split to f32 real/imag planes ONCE at ingress, interleaved on
 planes, pushed through the fused encode+worker kernel (coded shards never
 round-trip HBM between encode and the worker DFT), decoded by one batched
-MXU matmul against per-request scatter decode matrices from the
-:class:`~repro.serving.decode_cache.DecodeMatrixCache` LRU, recombined by
-the fused twiddle+DFT kernel, and recombined to complex ONCE at egress.
+MXU matmul against per-request decode matrices, recombined by the fused
+twiddle+DFT kernel, and recombined to complex ONCE at egress.
 ``use_reference=True`` is the escape hatch back to the jnp-oracle
 ``plan.run`` executor (as is any config the kernel path does not cover:
 a mesh, an explicit ``worker_fn`` plug-in, a pinned ``decode_method``, or
 a non-complex64 dtype).
+
+The submit-to-result path is DEVICE-RESIDENT and ASYNCHRONOUS
+(DESIGN.md §8).  Decode matrices are built inside the jitted bucket
+executor from each request's straggler mask via the closed-form Lagrange
+inversion (``mds.lagrange_inverse``) -- no host ``linalg.inv``, no LRU
+side channel, a novel mask costs exactly what a repeated one does.  The
+host-side :class:`~repro.serving.decode_cache.DecodeMatrixCache` remains
+only as the fallback for ``m > mds.LAGRANGE_MAX_M`` (or
+``device_decode=False``).  ``submit_batch`` DISPATCHES every (s, m, kind)
+bucket before any host sync -- ingress buffers are donated to XLA
+(``donate_argnums``), legal precisely because decode became jittable and
+nothing host-side aliases the bucket I/O -- then performs ONE device->host
+transfer for the whole call.  ``ServiceStats`` splits dispatch vs sync
+wall time and counts host transfers so the async win is observable.
 
 With a mesh, worker compute runs under ``DistributedCodedPlan`` (shard_map,
 batch axis threaded through the collectives); without one, it runs on the
@@ -39,13 +52,15 @@ local device with identical semantics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import time
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import mds
 from repro.core.coded_fft import CodedFFT
 from repro.core.rfft import CodedIRFFT, CodedRFFT
 from repro.core.strategies import coded_fft_threshold
@@ -72,9 +87,15 @@ class FFTServiceConfig:
     max_batch: int = 64           # scheduler bucket cap per (s, m)
     decode_method: str = "auto"   # MDS decode dispatch (DESIGN.md §4);
     #                               non-"auto" pins the reference executor
+    device_decode: bool = True    # build decode matrices IN the jitted
+    #                               bucket executor (Lagrange closed form,
+    #                               DESIGN.md §8); automatic fallback to the
+    #                               host LRU for m > mds.LAGRANGE_MAX_M
     decode_cache_size: int = 512  # LRU size of per-mask decode matrices
-    #                               (past the C(N, k) mask-pattern count for
-    #                               small fleets, so steady state is all-hit)
+    #                               (the m > LAGRANGE_MAX_M / pinned-config
+    #                               fallback; past the C(N, k) mask-pattern
+    #                               count for small fleets, so steady state
+    #                               is all-hit)
 
 
 @dataclasses.dataclass
@@ -84,8 +105,12 @@ class ServiceStats:
     coded_latency: float = 0.0     # sum of m-th order statistics
     uncoded_latency: float = 0.0   # sum of "wait for everyone" latencies
     stragglers_tolerated: int = 0
-    decode_cache_hits: int = 0     # decode-matrix LRU hits (kernel path)
-    decode_cache_misses: int = 0   # ... and misses (host inversions paid)
+    decode_cache_hits: int = 0     # decode-matrix LRU hits (fallback path)
+    decode_cache_misses: int = 0   # ... and misses (host inversions paid);
+    #                                both stay 0 on the device-decode path
+    dispatch_s: float = 0.0        # wall time staging + launching buckets
+    sync_s: float = 0.0            # wall time blocked on device results
+    host_transfers: int = 0        # device->host fetches (1 per submit_batch)
 
     def summary(self) -> dict:
         n = max(self.requests, 1)
@@ -99,6 +124,9 @@ class ServiceStats:
             "stragglers_tolerated": self.stragglers_tolerated,
             "decode_cache_hits": self.decode_cache_hits,
             "decode_cache_misses": self.decode_cache_misses,
+            "dispatch_s": self.dispatch_s,
+            "sync_s": self.sync_s,
+            "host_transfers": self.host_transfers,
         }
 
 
@@ -192,13 +220,27 @@ class FFTService:
                 and cfg.decode_method == "auto"
                 and self._plan_for(s, kind).resolved_backend == "kernel")
 
+    def _device_decode(self) -> bool:
+        """Are decode matrices built inside the jitted executor?
+
+        True on the default kernel path for ``m <= mds.LAGRANGE_MAX_M``
+        (the closed-form Lagrange inversion, DESIGN.md §8); past that the
+        f32 planes cannot carry adversarial-subset conditioning and the
+        host complex128 LRU takes over.
+        """
+        return self.cfg.device_decode and self.cfg.m <= mds.LAGRANGE_MAX_M
+
     def _runner_for(self, s: int, bucket: int, kind: str = "c2c"):
         """One jitted batched encode->worker->decode per (s, m, kind,
-        bucket)."""
+        bucket).  The executables persist for the service lifetime --
+        :meth:`warmup` keys them once so steady state never compiles."""
         kernel = self._kernel_path(s, kind)
-        key = (s, self.cfg.m, kind, bucket, kernel)
+        dev = kernel and self._device_decode()
+        key = (s, self.cfg.m, kind, bucket, kernel, dev)
         if key not in self._runners:
-            if kernel:
+            if dev:
+                self._runners[key] = self._make_masked_runner(s, bucket, kind)
+            elif kernel:
                 self._runners[key] = self._make_kernel_runner(s, bucket, kind)
             else:
                 method = self.cfg.decode_method
@@ -210,6 +252,88 @@ class FFTService:
                     fn = lambda xb, masks: plan.run(xb, mask=masks, method=method)
                 self._runners[key] = jax.jit(fn)
         return self._runners[key]
+
+    def _make_masked_runner(self, s: int, bucket: int, kind: str = "c2c"):
+        """The device-decode bucket executor (DESIGN.md §8).
+
+        Takes ``(requests, masks)`` and nothing else: responder subsets,
+        Lagrange decode matrices, worker transform and recombine all happen
+        inside ONE jitted call -- on TPU the fusable shapes run it as one
+        Pallas launch with the decode matrices built in VMEM
+        (``ops.coded_bucket_masked``).  The c2c ingress buffer is donated:
+        with no host-side decode cache aliasing bucket I/O, XLA may reuse
+        the request buffer for the same-shape spectrum output.
+        """
+        plan = self._plan_for(s, kind)
+        m, n = plan.m, plan.n_workers
+        gr, gi = ref.planar(plan.generator)
+        n2 = s // m // 2  # packed shard length of the real kinds
+        direct = ops.default_interpret()
+
+        if kind == "r2c":
+            whole = not direct and ops.coded_rbucket_fusable(s, m, n)
+
+            def fn(xb, masks):
+                subsets = ops.mask_subsets(masks, m)
+                if direct:
+                    ivr, ivi = ops.lagrange_compact_planes(subsets, n)
+                    yr, yi = ops.coded_rbucket_direct(
+                        xb, ivr, ivi, subsets, gr, gi, s)
+                elif whole:
+                    yr, yi = ops.coded_rbucket_masked(xb, subsets, gr, gi, s)
+                else:
+                    dr, di = ops.lagrange_scatter_planes(subsets, n)
+                    zr, zi = ops.pack_real_planes(xb, m)
+                    br, bi = ops.encode_worker(zr, zi, gr, gi)
+                    hr, hi = ops.decode_apply(dr, di, br, bi)
+                    yr, yi = ops.rfft_postdecode_planar(hr, hi, s)
+                return ref.unplanar(yr, yi)
+
+            return jax.jit(fn)
+
+        if kind == "c2r":
+            def fn(yb, masks):
+                subsets = ops.mask_subsets(masks, m)
+                yr, yi = ref.planar(yb)
+                if direct:
+                    ivr, ivi = ops.lagrange_compact_planes(subsets, n)
+                    return ops.coded_irbucket_direct(
+                        yr, yi, ivr, ivi, subsets, gr, gi, s)
+                dr, di = ops.lagrange_scatter_planes(subsets, n)
+                zr, zi = ops.irfft_message_planar(yr, yi, s, m)
+                br, bi = ops.encode_worker(zr, -zi, gr, -gi)
+                br, bi = br / n2, -bi / n2
+                hr, hi = ops.decode_apply(dr, di, br, bi)
+                return ops.irfft_unpack_planar(hr, hi)
+
+            return jax.jit(fn)
+
+        whole = not direct and ops.coded_bucket_fusable(s, m, n)
+        ell = plan.shard_len
+
+        def fn(xb, masks):
+            subsets = ops.mask_subsets(masks, m)
+            xr, xi = ref.planar(xb)
+            if direct:
+                ivr, ivi = ops.lagrange_compact_planes(subsets, n)
+                yr, yi = ops.coded_bucket_direct(
+                    xr, xi, ivr, ivi, subsets, gr, gi, s)
+            elif whole:
+                yr, yi = ops.coded_bucket_masked(xr, xi, subsets, gr, gi, s)
+            else:
+                dr, di = ops.lagrange_scatter_planes(subsets, n)
+                cr = jnp.swapaxes(xr.reshape(bucket, ell, m), -1, -2)
+                ci = jnp.swapaxes(xi.reshape(bucket, ell, m), -1, -2)
+                br, bi = ops.encode_worker(cr, ci, gr, gi)
+                hr, hi = ops.decode_apply(dr, di, br, bi)
+                yr, yi = ops.recombine_planar(hr, hi, s)
+            return ref.unplanar(yr, yi)
+
+        # donate only c2c: its (bucket, s) c64 output matches the ingress
+        # buffer exactly, so donation is a true in-place reuse; the real
+        # kinds change shape/dtype across the call and would only earn
+        # "unusable donation" noise
+        return jax.jit(fn, donate_argnums=0)
 
     def _make_kernel_runner(self, s: int, bucket: int, kind: str = "c2c"):
         """The fused planar bucket executor (DESIGN.md §6/§7).
@@ -315,17 +439,22 @@ class FFTService:
         return jax.jit(fn)
 
     # ------------------------------------------------------------------
-    def _simulate_arrivals(self, n_requests: int
+    def _simulate_arrivals(self, n_requests: int, kind: str = "c2c"
                            ) -> tuple[np.ndarray, np.ndarray]:
         """Per-request worker latencies + availability masks at decode time.
 
         One vectorized draw per bucket -- a per-request sampling loop costs
         more host time than the whole decode at service bucket sizes.
+        Real-kind shards (r2c/c2r) ship HALF the c2c wire payload
+        (DESIGN.md §7), so their wire-time share is charged at
+        ``payload_scale=0.5``.
         """
         cfg = self.cfg
         k = coded_fft_threshold(cfg.n_workers, cfg.m)
+        scale = 0.5 if kind in ("r2c", "c2r") else 1.0
         lat = cfg.straggler.sample(
-            (n_requests, cfg.n_workers), 1.0 / cfg.m, self.rng)
+            (n_requests, cfg.n_workers), 1.0 / cfg.m, self.rng,
+            payload_scale=scale)
         t_done = np.sort(lat, axis=-1)[:, k - 1]
         mask = lat <= t_done[:, None]
         return lat, mask
@@ -355,39 +484,95 @@ class FFTService:
         return self.submit_batch([y], kind="c2r")[0]
 
     def submit_batch(self, xs: Sequence[jax.Array],
-                     kind: str = "c2c") -> list[np.ndarray]:
-        """Serve a batch of requests, bucketed by transform length.
+                     kind: Union[str, Sequence[str]] = "c2c"
+                     ) -> list[np.ndarray]:
+        """Serve a batch of requests, bucketed by ``(s, m, kind)``.
 
         Master-side encode/decode for each bucket runs as ONE jitted call
         over the stacked requests; each request still gets its own
         simulated straggler pattern, and results come back in submission
-        order as host arrays (one device->host transfer per bucket).
+        order as host arrays.
 
         ``kind`` selects the transform (DESIGN.md §7): ``"c2c"`` complex
-        forward (default), ``"r2c"`` real input -> half spectrum,
-        ``"c2r"`` half spectrum -> real output.  Buckets are keyed by the
-        TIME-domain length ``s`` (a c2r request of ``h`` bins lands in the
-        ``s = 2*(h-1)`` bucket).
+        forward (default), ``"r2c"`` real input -> half spectrum, ``"c2r"``
+        half spectrum -> real output -- either ONE kind for the whole call
+        or a PER-REQUEST sequence (mixed traffic buckets by (s, kind), so
+        a client no longer splits its stream by kind).  Buckets are keyed
+        by the TIME-domain length ``s`` (a c2r request of ``h`` bins lands
+        in the ``s = 2*(h-1)`` bucket).
+
+        The call is PIPELINED (DESIGN.md §8): every bucket is dispatched
+        before any host sync -- the jitted calls are asynchronous, so
+        bucket k+1's host-side staging overlaps bucket k's device compute
+        -- then ONE device->host transfer fetches all results.
         """
-        if kind not in self.KINDS:
-            raise ValueError(f"unknown bucket kind {kind!r}")
+        kinds = ([kind] * len(xs) if isinstance(kind, str) else list(kind))
+        if len(kinds) != len(xs):
+            raise ValueError(
+                f"per-request kinds: got {len(kinds)} kinds "
+                f"for {len(xs)} requests")
+        for k in set(kinds):
+            if k not in self.KINDS:
+                raise ValueError(f"unknown bucket kind {k!r}")
         cfg = self.cfg
         results: list[Optional[np.ndarray]] = [None] * len(xs)
-        by_len: dict[int, list[int]] = {}
-        for i, x in enumerate(xs):
+        by_bucket: dict[tuple[int, str], list[int]] = {}
+        for i, (x, k) in enumerate(zip(xs, kinds)):
             n_last = int(x.shape[-1])
-            if kind == "c2r" and n_last < 2:
+            if k == "c2r" and n_last < 2:
                 raise ValueError(
                     f"c2r requests need >= 2 half-spectrum bins "
                     f"(s = 2*(bins-1) > 0), got {n_last}")
-            s = 2 * (n_last - 1) if kind == "c2r" else n_last
-            by_len.setdefault(s, []).append(i)
+            s = 2 * (n_last - 1) if k == "c2r" else n_last
+            by_bucket.setdefault((s, k), []).append(i)
 
-        for s, idxs in by_len.items():
+        # phase 1 -- dispatch: stage + launch every bucket, no host sync
+        t0 = time.perf_counter()
+        pending: list[tuple[list[int], jax.Array]] = []
+        for (s, k), idxs in by_bucket.items():
             for start in range(0, len(idxs), cfg.max_batch):
                 chunk = idxs[start:start + cfg.max_batch]
-                self._run_bucket(s, chunk, xs, results, kind)
+                pending.append((chunk, self._dispatch_bucket(s, chunk, xs, k)))
+        self.stats.dispatch_s += time.perf_counter() - t0
+
+        # phase 2 -- sync: ONE device->host transfer for the whole call
+        t0 = time.perf_counter()
+        fetched = jax.device_get([out for _, out in pending])
+        self.stats.host_transfers += 1
+        self.stats.sync_s += time.perf_counter() - t0
+        for (chunk, _), rows in zip(pending, fetched):
+            for row, i in enumerate(chunk):
+                results[i] = rows[row]
         return results  # type: ignore[return-value]
+
+    def warmup(self, lengths: Optional[Sequence[int]] = None,
+               kinds: Sequence[str] = ("c2c",),
+               buckets: Optional[Sequence[int]] = None) -> int:
+        """Precompile the bucket executables so steady state never compiles.
+
+        Keys one persistent executable per (s, kind, bucket-size) --
+        default: the config length, c2c, every power-of-two bucket up to
+        ``max_batch``.  Returns the number of executables compiled.  On the
+        fallback (host-LRU) path this also primes the all-alive mask entry.
+        """
+        cfg = self.cfg
+        lengths = [cfg.s] if lengths is None else list(lengths)
+        if buckets is None:
+            buckets, b = [], 1
+            while b < cfg.max_batch:
+                buckets.append(b)
+                b *= 2
+            buckets.append(cfg.max_batch)
+        outs = []
+        for s in lengths:
+            for k in kinds:
+                for b in sorted(set(buckets)):
+                    xb = self._bucket_buffer(s, b, k)
+                    masks = np.ones((b, cfg.n_workers), bool)
+                    outs.append(self._runner_for(s, b, k)(
+                        *self._bucket_args(s, k, xb, masks)))
+        jax.block_until_ready(outs)
+        return len(outs)
 
     def _bucket_buffer(self, s: int, bucket: int, kind: str) -> np.ndarray:
         """The request staging buffer for one bucket, in the kind's ingress
@@ -401,28 +586,17 @@ class FFTService:
         # a real-valued request must not narrow the whole bucket's buffer)
         return np.zeros((bucket, s), dtype=cdt)
 
-    def _run_bucket(self, s: int, idxs: list[int], xs, results,
-                    kind: str = "c2c") -> None:
-        cfg = self.cfg
-        n_live = len(idxs)
-        bucket = bucket_size(n_live, cfg.max_batch)
-        lat, mask = self._simulate_arrivals(n_live)
-        self._account(lat, mask)
-        self.stats.batches += 1
+    def _bucket_args(self, s: int, kind: str, xb: np.ndarray,
+                     masks: np.ndarray) -> tuple:
+        """Device arguments for one bucket invocation.
 
-        xb = self._bucket_buffer(s, bucket, kind)
-        for row, i in enumerate(idxs):
-            x = np.asarray(xs[i])
-            xb[row] = x.real if kind == "r2c" and np.iscomplexobj(x) else x
-        # padded rows: every worker "responds" so decode stays well-posed
-        masks = np.ones((bucket, cfg.n_workers), bool)
-        masks[:n_live] = mask
-
-        if self._kernel_path(s, kind):
-            # per-request decode matrices from the LRU (host-side: the
-            # masks are host data already, and repeats hit the cache) --
-            # shared across every (s, kind) bucket, the generator only
-            # depends on (N, m)
+        Device-decode path: the requests and the raw boolean masks -- two
+        int words of decode metadata per request cross the host boundary,
+        everything else happens in-jit (DESIGN.md §8).  Fallback kernel
+        path (``m > LAGRANGE_MAX_M`` or ``device_decode=False``): per-mask
+        matrices from the host LRU, shared across every (s, kind) bucket.
+        """
+        if self._kernel_path(s, kind) and not self._device_decode():
             cache = self._decode_cache_for()
             h0, m0 = cache.hits, cache.misses
             if ops.default_interpret():
@@ -438,14 +612,29 @@ class FFTService:
             # field accumulates, so a stats reset must window these too
             self.stats.decode_cache_hits += cache.hits - h0
             self.stats.decode_cache_misses += cache.misses - m0
-            out = self._runner_for(s, bucket, kind)(*args)
-        else:
-            out = self._runner_for(s, bucket, kind)(
-                jnp.asarray(xb), jnp.asarray(masks))
-        # ONE device->host transfer per bucket: per-request eager jax slices
-        # would pay a python lax.slice dispatch per request instead, which
-        # dominates the bucket at CPU latencies.  Results are host arrays
-        # (views into the bucket transfer); they interop with jnp directly.
-        out_rows = np.asarray(out)
+            return args
+        return (jnp.asarray(xb), jnp.asarray(masks))
+
+    def _dispatch_bucket(self, s: int, idxs: list[int], xs,
+                         kind: str = "c2c") -> jax.Array:
+        """Stage + launch one bucket; returns the UNSYNCED device result.
+
+        The jitted call returns immediately (async dispatch), so callers
+        can launch every bucket before blocking once on all of them.
+        """
+        cfg = self.cfg
+        n_live = len(idxs)
+        bucket = bucket_size(n_live, cfg.max_batch)
+        lat, mask = self._simulate_arrivals(n_live, kind)
+        self._account(lat, mask)
+        self.stats.batches += 1
+
+        xb = self._bucket_buffer(s, bucket, kind)
         for row, i in enumerate(idxs):
-            results[i] = out_rows[row]
+            x = np.asarray(xs[i])
+            xb[row] = x.real if kind == "r2c" and np.iscomplexobj(x) else x
+        # padded rows: every worker "responds" so decode stays well-posed
+        masks = np.ones((bucket, cfg.n_workers), bool)
+        masks[:n_live] = mask
+        return self._runner_for(s, bucket, kind)(
+            *self._bucket_args(s, kind, xb, masks))

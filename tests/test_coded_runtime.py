@@ -113,6 +113,36 @@ def test_distributed_runtime_subprocess():
     assert "SUBPROC_OK" in r.stdout
 
 
+# ---------------- batched mask-to-weights decode (DESIGN.md §8) -------------
+def test_batched_mesh_decode_uses_lagrange_weights():
+    """Batched masked decode under the mesh builds per-request Lagrange
+    decode matrices IN-TRACE: the lowered program carries no dense solve
+    (the pre-§8 path vmapped ``linalg.solve`` per request), and the
+    NaN-poisoned straggler rows provably never reach the output (the
+    weights gather responder rows before contracting).  A 1-wide axis
+    keeps all 8 coded shards local, so this traces on one device."""
+    from repro.distributed import DistributedCodedFFT, test_mesh
+
+    mesh = test_mesh((1,), ("workers",))
+    plan = CodedFFT(s=256, m=4, n_workers=8)
+    d = DistributedCodedFFT(plan, mesh, masked_fill=float("nan"))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray((rng.normal(size=(3, 256))
+                     + 1j * rng.normal(size=(3, 256))).astype(np.complex64))
+    masks = jnp.asarray(np.array([
+        [1, 0, 1, 1, 0, 1, 0, 0],
+        [1, 1, 1, 1, 1, 1, 1, 1],
+        [0, 1, 0, 1, 1, 0, 1, 1],
+    ], bool))
+    out = np.asarray(d.run(x, masks))
+    want = np.fft.fft(np.asarray(x, np.complex128), axis=-1)
+    assert not np.isnan(out).any()
+    assert np.abs(out - want).max() < 1e-2
+    jaxpr = str(jax.make_jaxpr(lambda xx, mk: d.run(xx, mk))(x, masks))
+    assert "triangular_solve" not in jaxpr     # no per-request dense solve
+    assert "sort" in jaxpr                     # in-trace responder subsets
+
+
 # ---------------- single-device coded-FFT semantics still hold --------------
 def test_plan_run_with_garbage_stragglers_local():
     plan = CodedFFT(s=256, m=4, n_workers=6)

@@ -253,9 +253,12 @@ def test_decode_cache_rejects_undecodable_mask():
 
 def test_service_lru_churn_stays_correct():
     """With a tiny decode cache, straggler-mask churn forces constant
-    evictions; every request must still decode exactly."""
+    evictions; every request must still decode exactly.  Pins the host-LRU
+    FALLBACK path (``device_decode=False``) -- the default path builds
+    decode matrices in-jit and is covered by test_lagrange_decode.py."""
     svc = FFTService(FFTServiceConfig(
-        s=256, m=4, n_workers=8, seed=11, decode_cache_size=2))
+        s=256, m=4, n_workers=8, seed=11, decode_cache_size=2,
+        device_decode=False))
     rng = np.random.default_rng(0)
     worst = 0.0
     for _ in range(6):
@@ -383,8 +386,10 @@ def test_rfft_payload_is_half_of_c2c():
 
 def test_service_rfft_and_irfft_kinds():
     """Service r2c/c2r buckets decode exactly under straggler churn and
-    share ONE decode-matrix LRU across kinds (same (N, m) generator)."""
-    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=3))
+    share ONE decode-matrix LRU across kinds (same (N, m) generator).
+    Pinned to the host-LRU fallback path, which is what shares the LRU."""
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=3,
+                                      device_decode=False))
     rng = np.random.default_rng(1)
     xs = [jnp.asarray(rng.normal(size=256).astype(np.float32))
           for _ in range(6)]
@@ -426,9 +431,11 @@ def test_masks_equal_as_subsets_do_not_collide():
 
 def test_service_shares_decode_cache_across_buckets():
     """Identical straggler masks arriving in different (s, kind) buckets
-    must hit the one shared LRU, not rebuild per bucket."""
+    must hit the one shared LRU, not rebuild per bucket (host-fallback
+    path; the default device-decode path has no cache to share)."""
     svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=9,
-                                      decode_cache_size=512))
+                                      decode_cache_size=512,
+                                      device_decode=False))
     rng = np.random.default_rng(2)
     xs256 = [jnp.asarray((rng.normal(size=256) + 1j * rng.normal(size=256))
                          .astype(np.complex64)) for _ in range(4)]
@@ -452,7 +459,8 @@ def test_service_lru_churn_with_real_kinds_stays_correct():
     parity: a tiny cache forces constant evictions; every request of every
     kind must still decode exactly (extends the c2c churn test above)."""
     svc = FFTService(FFTServiceConfig(
-        s=128, m=4, n_workers=8, seed=13, decode_cache_size=2))
+        s=128, m=4, n_workers=8, seed=13, decode_cache_size=2,
+        device_decode=False))
     rng = np.random.default_rng(5)
     worst = 0.0
     for _ in range(4):
