@@ -20,6 +20,9 @@ straight XLA off-TPU) with strict parity asserts against the jnp oracle:
 * **rfft** -- the real-input (r2c) bucket vs the c2c bucket fed the same
   real signal as complex, at s in {16k, 256k}: half the worker-shard
   payload bytes and lower wall-clock (DESIGN.md §7);
+* **rfftn** -- the n-D real plan (CodedRFFTN) vs the n-D c2c plan fed the
+  same real field as complex (DESIGN.md §9): same per-axis code, half the
+  worker payload;
 
 plus the acceptance measurement: **batched service throughput** at the
 ``BENCH_service.json`` config (s=2048, m=4, N=8, 64 requests/bucket),
@@ -272,6 +275,63 @@ def bench_rfft(lines: list) -> list[dict]:
     return rows
 
 
+def bench_rfftn_nd(lines: list) -> list[dict]:
+    """The n-D real acceptance measurement (DESIGN.md §9): CodedRFFTN vs
+    the n-D c2c plan (CodedFFTND) fed the same real field as complex.
+    Same (shape, m, N) code, same per-request masks, both through the
+    jitted generic executor.  The structural claim -- HALF the worker
+    payload elements -- is asserted; wall-clock is reported (same
+    no-timing-assert protocol as the 1-D rfft section)."""
+    from repro.core import CodedFFTND, CodedRFFTN
+    from repro.core.coded_fft import plan_factors
+
+    rows = []
+    for shape in (((64, 64),) if SMOKE else ((128, 128), (256, 256))):
+        m, n = 4, 8
+        factors = plan_factors(shape, m)
+        q = 4
+        rplan = CodedRFFTN(shape=shape, factors=factors, n_workers=n)
+        cplan = CodedFFTND(shape=shape, factors=factors, n_workers=n)
+        rng = np.random.default_rng(shape[0])
+        tb = jnp.asarray(rng.normal(size=(q,) + shape).astype(np.float32))
+        masks = jnp.asarray(np.stack(
+            [np.roll(np.arange(n) % 2 == 0, i) for i in range(q)]))
+        r2c = jax.jit(lambda a: rplan.run(a, mask=masks))
+        c2c = jax.jit(lambda a: cplan.run(a.astype(jnp.complex64),
+                                          mask=masks))
+        axes = tuple(range(-len(shape), 0))
+        want_half = np.fft.rfftn(np.asarray(tb, np.float64), axes=axes)
+        err_r = _relerr(r2c(tb), want_half)
+        assert err_r < 1e-3, err_r
+        err_c = _relerr(c2c(tb), np.fft.fftn(np.asarray(tb, np.complex128),
+                                             axes=axes))
+        assert err_c < 1e-3, err_c
+        t = _time_interleaved({
+            "rfftn": (r2c, (tb,)),
+            "c2cn_on_real": (c2c, (tb,)),
+        }, reps=6)
+        r_elems = int(np.prod(rplan.worker_shard_shape))
+        c_elems = int(np.prod(cplan.worker_shard_shape))
+        assert 2 * r_elems == c_elems       # the communication claim
+        rows.append({
+            "shape": list(shape), "m": m, "n": n, "batch": q,
+            "rel_err_rfftn": err_r,
+            "rfftn_ms": t["rfftn"] * 1e3,
+            "c2cn_on_real_ms": t["c2cn_on_real"] * 1e3,
+            "speedup": t["c2cn_on_real"] / t["rfftn"],
+            "worker_payload_bytes_rfftn": r_elems * 8,
+            "worker_payload_bytes_c2cn": c_elems * 8,
+        })
+        lines.append(
+            f"  rfftn shape={shape} m={m} N={n}: rfftn "
+            f"{t['rfftn']*1e3:.2f}ms vs c2cn-on-real "
+            f"{t['c2cn_on_real']*1e3:.2f}ms "
+            f"({t['c2cn_on_real']/t['rfftn']:.2f}x), payload "
+            f"{r_elems * 8 // 1024}KiB vs {c_elems * 8 // 1024}KiB/worker "
+            f"shard (rel err {err_r:.1e})")
+    return rows
+
+
 def bench_service(lines: list) -> dict:
     """The acceptance measurement: default kernel path vs PR-1 oracle path
     on batched service throughput at the BENCH_service.json config."""
@@ -489,6 +549,7 @@ def run() -> list[str]:
         "decode": bench_decode(lines),
         "cold_decode": bench_cold_decode(lines),
         "rfft": bench_rfft(lines),
+        "rfftn": bench_rfftn_nd(lines),
         "service_throughput": bench_service(lines),
     }
     bench_wkv(lines)

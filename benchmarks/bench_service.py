@@ -149,6 +149,48 @@ def run() -> list[str]:
         f"({n_req / r_med:.0f} rps) vs c2c-on-real {c_med * 1e3:.1f} ms "
         f"({n_req / c_med:.0f} rps) -> "
         f"{c_med / r_med:.2f}x, worst err {worst_r:.1e}")
+
+    # ---- n-D real (rfftn) buckets (DESIGN.md §9) ----------------------------
+    # 2-D real fields served end-to-end through the rfftn kind: the service
+    # buckets by the shape tuple and runs the generic jitted plan executor
+    # (half-payload packed shards, per-request straggler masks)
+    nd_shape = (32, 32) if SMOKE else (64, 64)
+    nd_req = 8 if SMOKE else 32
+    tsn = [jnp.asarray(rng.normal(size=nd_shape).astype(np.float32))
+           for _ in range(nd_req)]
+    ndsvc = FFTService(cfg)
+    outs_n = ndsvc.submit_batch(tsn, kind="rfftn")      # compile warm-up
+    axes = tuple(range(-len(nd_shape), 0))
+    worst_n = max(
+        float(np.abs(y - np.fft.rfftn(np.asarray(t, np.float64),
+                                      axes=axes)).max())
+        for t, y in zip(tsn, outs_n))
+    assert worst_n < 1e-2
+    ysn = [jnp.asarray(np.fft.rfftn(np.asarray(t)).astype(np.complex64))
+           for t in tsn]
+    ndsvc.submit_batch(ysn, kind="irfftn")              # compile warm-up
+    t_nd = []
+    for _ in range(4 if SMOKE else 8):
+        t0 = time.perf_counter()
+        ndsvc.submit_batch(tsn, kind="rfftn")
+        t_nd.append(time.perf_counter() - t0)
+    nd_med = statistics.median(t_nd)
+    shard_elems = int(np.prod(
+        ndsvc._plan_for(nd_shape, "rfftn").worker_shard_shape))
+    result["rfftn"] = {
+        "shape": list(nd_shape), "m": cfg.m, "n_workers": cfg.n_workers,
+        "n_requests": nd_req,
+        "rfftn_rps": nd_req / nd_med,
+        "worker_payload_bytes_rfftn": shard_elems * 8,
+        "worker_payload_bytes_c2cn": shard_elems * 2 * 8,
+        "worst_abs_err": worst_n,
+    }
+    lines.append(
+        f"  rfftn bucket: {nd_req} real {nd_shape} reqs "
+        f"{nd_med * 1e3:.1f} ms ({nd_req / nd_med:.0f} rps), "
+        f"payload {shard_elems * 8 // 1024}KiB vs "
+        f"{shard_elems * 2 * 8 // 1024}KiB/worker shard (c2cn), "
+        f"worst err {worst_n:.1e}")
     if SMOKE:
         lines.append(
             f"  batched scheduler (smoke): {n_req} reqs in {dt_bat * 1e3:.1f} "

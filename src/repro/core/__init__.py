@@ -40,7 +40,17 @@ from repro.core.rfft import (
     hermitian_extend,
     pack_half,
     pack_pairs,
+    require_even_shards,
     split_packed,
+)
+from repro.core.rfftn import (
+    CodedIRFFTN,
+    CodedRFFTN,
+    adjoint_fold_nd,
+    hermitian_extend_nd,
+    neg_freq,
+    pack_half_nd,
+    split_packed_nd,
 )
 from repro.core.strategies import (
     UncodedRepetitionFFT,
@@ -56,10 +66,18 @@ __all__ = [
     "CodedRFFT",
     "CodedIFFT",
     "CodedIRFFT",
+    "CodedRFFTN",
+    "CodedIRFFTN",
     "pack_pairs",
     "pack_half",
     "split_packed",
     "hermitian_extend",
+    "require_even_shards",
+    "neg_freq",
+    "split_packed_nd",
+    "hermitian_extend_nd",
+    "pack_half_nd",
+    "adjoint_fold_nd",
     "recombine_half",
     "CodedPlan",
     "MDSPlan",

@@ -125,12 +125,30 @@ class CodedFFT(MDSPlanBase):
         return self.resolved_worker_fn(a)
 
 
-def plan_factors(shape: tuple[int, ...], m: int) -> tuple[int, ...]:
+def plan_factors(shape: tuple[int, ...], m: int,
+                 even_last_shard: bool = False) -> tuple[int, ...]:
     """Pick per-axis interleave factors with prod(m_k) = m, m_k | s_k.
 
     Greedy: peel prime factors of m off the largest remaining axis that
     admits them.  Raises if m cannot be factored across the axes.
+
+    ``even_last_shard=True`` (the real n-D kinds, DESIGN.md §9) reserves
+    a factor of 2 of slack on the LAST axis so the returned factors
+    always satisfy the pair-packing constraint
+    ``2 * factors[-1] | shape[-1]`` whenever any valid placement exists
+    -- without it, the greedy choice can land a prime on the last axis
+    and leave an odd shard that a different placement would have
+    avoided.  Requires an even last axis (the documented ``2m | s``
+    ValueError otherwise).
     """
+    if even_last_shard:
+        from repro.core.rfft import require_even_shards
+
+        if shape[-1] % 2 != 0:
+            require_even_shards(shape[-1], 1, axis=len(shape) - 1)
+        inner = plan_factors(
+            tuple(shape[:-1]) + (shape[-1] // 2,), m)
+        return inner
     remaining = m
     factors = [1] * len(shape)
     caps = list(shape)

@@ -51,29 +51,57 @@ def batch_shape(arr: jax.Array, core_ndim: int, what: str) -> tuple[int, ...]:
 
 @runtime_checkable
 class CodedPlan(Protocol):
-    """Minimal contract every computation strategy satisfies."""
+    """Minimal contract every computation strategy satisfies.
+
+    Instances: ``CodedFFT`` / ``CodedFFTND`` / ``CodedFFTMultiInput``
+    (complex), ``CodedRFFT`` / ``CodedIFFT`` / ``CodedIRFFT`` (1-D real /
+    inverse, DESIGN.md §7), ``CodedRFFTN`` / ``CodedIRFFTN`` (n-D real,
+    §9), and ``UncodedRepetitionFFT`` (the non-MDS Remark-4 baseline).
+    """
 
     n_workers: int
 
     @property
-    def recovery_threshold(self) -> int: ...
+    def recovery_threshold(self) -> int:
+        """How many responders the master must wait for (``m`` for every
+        MDS plan -- the paper's optimum)."""
+        ...
 
     @property
-    def input_shape(self) -> tuple[int, ...]: ...
+    def input_shape(self) -> tuple[int, ...]:
+        """Core (unbatched) request shape."""
+        ...
 
     @property
-    def output_shape(self) -> tuple[int, ...]: ...
+    def output_shape(self) -> tuple[int, ...]:
+        """Core (unbatched) result shape -- real kinds differ from
+        ``input_shape`` (half-spectrum vs time domain)."""
+        ...
 
     @property
-    def worker_shard_shape(self) -> tuple[int, ...]: ...
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        """Per-worker payload shape: what ONE worker stores, transforms,
+        and ships (the real kinds' is HALF the complex plans')."""
+        ...
 
-    def encode(self, x: jax.Array) -> jax.Array: ...
+    def encode(self, x: jax.Array) -> jax.Array:
+        """Input -> coded worker shards ``(*B, N, *worker_shard_shape)``."""
+        ...
 
-    def worker_compute(self, a: jax.Array) -> jax.Array: ...
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        """The per-worker transform over the trailing shard axes; any
+        leading (batch / worker) axes map through unchanged."""
+        ...
 
-    def decode(self, b, subset=None, mask=None): ...
+    def decode(self, b, subset=None, mask=None):
+        """Worker results -> output from any ``recovery_threshold``-subset
+        of responders (``subset`` indices or boolean ``mask``)."""
+        ...
 
-    def run(self, x, subset=None, mask=None): ...
+    def run(self, x, subset=None, mask=None):
+        """``decode(worker_compute(encode(x)))`` -- the single-process
+        end-to-end reference path."""
+        ...
 
 
 @runtime_checkable
@@ -83,14 +111,27 @@ class MDSPlan(CodedPlan, Protocol):
     row x message) for mesh execution."""
 
     @property
-    def m(self) -> int: ...
+    def m(self) -> int:
+        """The storage-fraction parameter: each worker holds ``1/m`` of
+        the input; also the recovery threshold."""
+        ...
 
     @property
-    def generator(self) -> jax.Array: ...
+    def generator(self) -> jax.Array:
+        """The ``(N, m)`` RS generator ``G[k, i] = omega_N^{ki}`` --
+        independent of the transform length and kind, which is why one
+        decode-matrix cache serves every service bucket."""
+        ...
 
-    def message(self, x: jax.Array) -> jax.Array: ...
+    def message(self, x: jax.Array) -> jax.Array:
+        """Input -> the ``m`` uncoded message shards (interleave; plus
+        the pack/fold stages of the real kinds)."""
+        ...
 
-    def postdecode(self, c_hat: jax.Array) -> jax.Array: ...
+    def postdecode(self, c_hat: jax.Array) -> jax.Array:
+        """Decoded message-shard transforms -> final output (recombine;
+        plus the split/unpack stages of the real kinds)."""
+        ...
 
 
 class MDSPlanBase:
@@ -137,6 +178,18 @@ class MDSPlanBase:
         if self.resolved_backend == "kernel":
             return ops.make_kernel_fftn_fn(nd)(a)
         return jnp.fft.fftn(a, axes=tuple(range(-nd, 0)))
+
+    def _ifftn_worker(self, a: jax.Array, nd: int) -> jax.Array:
+        """Backend-dispatched n-D inverse FFT over the trailing ``nd``
+        axes -- the worker body of the n-D real-output plan (DESIGN.md
+        §9).  On the kernel backend it rides the forward four-step sweep
+        via ``ifftn(a) = conj(fftn(conj(a))) / prod(L)``: sign flips on
+        the imaginary plane, same kernels."""
+        if self.resolved_backend == "kernel":
+            scale = math.prod(a.shape[-nd:])
+            return jnp.conj(
+                ops.make_kernel_fftn_fn(nd)(jnp.conj(a))) / scale
+        return jnp.fft.ifftn(a, axes=tuple(range(-nd, 0)))
 
     def _fft1_worker(self, a: jax.Array, inverse: bool = False) -> jax.Array:
         """Backend-dispatched 1-D (i)FFT along the last axis -- the shared

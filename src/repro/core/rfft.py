@@ -51,10 +51,30 @@ __all__ = [
     "CodedIFFT",
     "CodedIRFFT",
     "pack_pairs",
+    "unpack_pairs",
     "split_packed",
     "pack_half",
     "hermitian_extend",
+    "require_even_shards",
 ]
+
+
+def require_even_shards(s: int, m: int, axis: int | None = None) -> None:
+    """Validate the real-kind packing constraint ``2m | s`` (even shards).
+
+    Every real kind (r2c, c2r, rfftn, irfftn) pair-packs its interleave
+    shards along the halved axis, so the shard length ``L = s/m`` there
+    must be even: ``s`` must be a positive multiple of ``2m``.  Raises a
+    ``ValueError`` whose message always contains the constraint string
+    ``"2m | s"`` (the documented, tested contract -- README "supported
+    kinds", DESIGN.md §9) instead of letting a reshape fail with an
+    opaque shape error deeper in the pipeline.
+    """
+    if s < 2 * m or s % (2 * m) != 0:
+        where = "" if axis is None else f" along axis {axis}"
+        raise ValueError(
+            f"real packing needs 2m | s (an even shard length s/m){where}: "
+            f"got s={s}, m={m}; pad s to a multiple of {2 * m} or lower m")
 
 
 # ---------------------------------------------------------------- symmetry ops
@@ -137,10 +157,7 @@ class _RS1DPlanBase(MDSPlanBase):
 
     def __post_init__(self):
         if self._EVEN_SHARDS:
-            if self.s < 2 * self.m or self.s % (2 * self.m) != 0:
-                raise ValueError(
-                    f"real packing needs 2m | s (s > 0), "
-                    f"got s={self.s} m={self.m}")
+            require_even_shards(self.s, self.m)
         elif self.s % self.m != 0:
             raise ValueError(f"m={self.m} must divide s={self.s}")
         if self.n_workers < self.m:

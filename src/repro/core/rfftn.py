@@ -1,0 +1,320 @@
+"""n-D real-input and real-output coded transforms (DESIGN.md §9).
+
+The paper's §V extension covers general n-dimensional transforms; PR 3
+added the half-payload REAL kinds in 1-D only.  This module closes the
+gap: :class:`CodedRFFTN` and :class:`CodedIRFFTN` are
+:class:`repro.core.plan.MDSPlan` instances over the SAME ``(N, m)``
+complex-RS code as every other plan, composing the 1-D pair-packing trick
+with the existing n-D interleave / recombine machinery -- no new code, no
+new decode stack, half-size worker shards.
+
+The composition (forward, r2c):
+
+1. ``interleave_nd`` the real tensor by ``factors`` (paper eq. 28) into
+   ``m = prod(factors)`` real shards of shape ``(L_0, ..., L_{n-1})``;
+2. pair-pack each shard along its LAST axis:
+   ``z[..., j] = c[..., 2j] + 1j*c[..., 2j+1]`` -- workers transform and
+   ship shards with a HALVED last axis (``2*factors[-1] | shape[-1]``);
+3. workers run the ordinary n-D FFT over the trailing shard axes (the
+   per-axis four-step kernel sweep on the kernel backend), so encode /
+   decode / the distributed runtime apply unchanged;
+4. postdecode runs the GENERALIZED split butterfly: for packed n-D real
+   data the 1-D identity ``E_p = (Z_p + conj(Z_{n2-p}))/2`` picks up a
+   frequency negation on every OTHER shard axis, because conjugation
+   flips the sign of all frequencies jointly
+   (``fftn(c)[-q, -p] = conj(fftn(c)[q, p])`` for real ``c``).  The
+   same negation appears in the joint Hermitian extension.  Both are
+   anti-linear -- master-side only, after decode, never inside the code;
+5. ``recombine_nd`` (paper eq. 31) then one slice keeps the
+   ``shape[-1]//2 + 1`` non-redundant last-axis bins: exactly
+   ``numpy.fft.rfftn``.
+
+:class:`CodedIRFFTN` is the adjoint, generalizing ``CodedIRFFT``: the
+master Hermitian-symmetrizes the half-spectrum request (endpoint bins
+are averaged with their negated-frequency conjugates, which reproduces
+``numpy.fft.irfftn`` EXACTLY even on non-Hermitian-consistent input),
+runs the per-axis ADJOINT of the recombine butterfly
+(:func:`adjoint_fold_nd`: +sign length-``m_d`` DFT + conjugate twiddle
+per axis), packs each per-shard Hermitian spectrum
+(:func:`pack_half_nd`), and lets workers ``ifftn`` the packed coded
+shards; postdecode unpacks real/imag pairs and de-interleaves.
+
+Both kinds require an EVEN last shard axis (``2*factors[-1]`` must
+divide ``shape[-1]``); :func:`repro.core.rfft.require_even_shards`
+raises the documented ``ValueError`` otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mds
+from repro.core.interleave import deinterleave_nd, interleave_nd
+from repro.core.plan import MDSPlanBase
+from repro.core.recombine import dft_matrix, recombine_nd
+from repro.core.rfft import (
+    _real_dtype,
+    pack_pairs,
+    require_even_shards,
+    unpack_pairs,
+)
+
+__all__ = [
+    "CodedRFFTN",
+    "CodedIRFFTN",
+    "neg_freq",
+    "split_packed_nd",
+    "hermitian_extend_nd",
+    "pack_half_nd",
+    "adjoint_fold_nd",
+]
+
+
+# ---------------------------------------------------------------- symmetry ops
+def neg_freq(a: jax.Array, axes: tuple[int, ...]) -> jax.Array:
+    """Frequency negation ``q -> (-q) mod L`` along each axis in ``axes``.
+
+    The index map conjugation induces on every non-halved axis: for real
+    ``c``, ``fftn(c)`` is Hermitian JOINTLY across all axes, so the 1-D
+    split/extend identities hold n-D once their conjugated terms are also
+    frequency-negated along the remaining axes.
+    """
+    for ax in axes:
+        a = jnp.roll(jnp.flip(a, axis=ax), 1, axis=ax)
+    return a
+
+
+def split_packed_nd(z_hat: jax.Array, ell: int,
+                    rest_axes: tuple[int, ...]) -> jax.Array:
+    """Generalized split butterfly: packed n-D spectra -> half spectra.
+
+    ``z_hat``: ``(..., R..., L/2)`` with ``z = pack_pairs(c)`` along the
+    last axis of real ``c``; ``rest_axes`` index the non-halved transform
+    axes of ``z_hat``.  Returns ``(..., R..., L/2 + 1)``: the transform of
+    ``c`` restricted to the non-redundant last-axis bins.  Anti-linear
+    (conjugates its input): master-side only, never inside the code.
+    """
+    n2 = z_hat.shape[-1]
+    zext = jnp.concatenate([z_hat, z_hat[..., :1]], axis=-1)
+    zrev = jnp.conj(neg_freq(zext[..., ::-1], rest_axes))
+    even = 0.5 * (zext + zrev)
+    odd = -0.5j * (zext - zrev)
+    w = jnp.exp(-2j * jnp.pi * jnp.arange(n2 + 1) / ell).astype(z_hat.dtype)
+    return even + odd * w
+
+
+def hermitian_extend_nd(c_half: jax.Array,
+                        rest_axes: tuple[int, ...]) -> jax.Array:
+    """Joint Hermitian extension ``C[-q, L-p] = conj(C[q, p])`` along the
+    last axis: ``(..., L/2 + 1) -> (..., L)``."""
+    n2 = c_half.shape[-1] - 1
+    tail = jnp.conj(neg_freq(c_half[..., n2 - 1:0:-1], rest_axes))
+    return jnp.concatenate([c_half, tail], axis=-1)
+
+
+def pack_half_nd(c_full: jax.Array, ell: int,
+                 rest_axes: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`split_packed_nd`: jointly-Hermitian n-D spectrum
+    ``(..., L)`` of a real signal -> packed spectrum ``(..., L/2)`` whose
+    ``ifftn`` is the pair-packed real signal."""
+    n2 = ell // 2
+    ch = c_full[..., : n2 + 1]
+    crev = jnp.conj(neg_freq(ch[..., ::-1], rest_axes))
+    even = 0.5 * (ch + crev)
+    w = jnp.exp(2j * jnp.pi * jnp.arange(n2 + 1) / ell).astype(ch.dtype)
+    odd = 0.5 * (ch - crev) * w
+    return (even + 1j * odd)[..., :n2]
+
+
+def adjoint_fold_nd(full: jax.Array, shape: tuple[int, ...],
+                    factors: tuple[int, ...], dtype) -> jax.Array:
+    """Adjoint of :func:`repro.core.recombine.recombine_nd`.
+
+    ``full``: the full n-D spectrum ``(s_0, ..., s_{n-1})``.  Returns the
+    ``(m, L_0, ..., L_{n-1})`` folded shard spectra
+
+        ``folded_k[t] = sum_r full[t_d + r_d L_d]
+                        prod_d omega_{m_d}^{+k_d r_d} omega_{s_d}^{+k_d t_d}``
+
+    -- per axis, a +sign length-``m_d`` DFT across the fold plus the
+    conjugate recombine twiddle, so that ``ifftn(folded_k)`` is exactly
+    the ``k``-th interleave shard of ``ifftn(full) * m``.
+    """
+    n = len(shape)
+    ells = tuple(sd // md for sd, md in zip(shape, factors))
+    rs: list[int] = []
+    for sd, md in zip(shape, factors):
+        rs.extend([md, sd // md])
+    c = full.reshape(rs)                      # (m_0, L_0, m_1, L_1, ...)
+    c = jnp.transpose(
+        c, [2 * k for k in range(n)] + [2 * k + 1 for k in range(n)])
+    for d in range(n):
+        md, sd, ld = factors[d], shape[d], ells[d]
+        f = dft_matrix(md, dtype, sign=+1.0)
+        c = jnp.tensordot(f, c, axes=([1], [d]))
+        c = jnp.moveaxis(c, 0, d)
+        tw = jnp.exp(
+            2j * jnp.pi * jnp.outer(jnp.arange(md), jnp.arange(ld)) / sd
+        ).astype(dtype)
+        bshape = [1] * (2 * n)
+        bshape[d] = md
+        bshape[n + d] = ld
+        c = c * tw.reshape(bshape)
+    return c.reshape((math.prod(factors),) + ells)
+
+
+# ------------------------------------------------------------------ the plans
+@dataclasses.dataclass(frozen=True)
+class _RSNDRealPlanBase(MDSPlanBase):
+    """Shared fields/validation of the n-D real transform plans.
+
+    ``factors[k]`` divides ``shape[k]``, ``prod(factors) = m``, and the
+    LAST shard axis must be even (``2*factors[-1] | shape[-1]``) for the
+    pair packing -- :func:`repro.core.rfft.require_even_shards` raises
+    the documented ``ValueError`` otherwise.
+    """
+
+    shape: tuple[int, ...]
+    factors: tuple[int, ...]
+    n_workers: int
+    dtype: jnp.dtype = jnp.complex64
+    backend: str = "kernel"
+
+    def __post_init__(self):
+        if not self.shape or len(self.shape) != len(self.factors):
+            raise ValueError(
+                f"factors {self.factors} must match shape {self.shape}")
+        for sk, mk in zip(self.shape[:-1], self.factors[:-1]):
+            if mk < 1 or sk % mk != 0:
+                raise ValueError(f"factor {mk} must divide dim {sk}")
+        require_even_shards(self.shape[-1], self.factors[-1],
+                            axis=len(self.shape) - 1)
+        if self.n_workers < self.m:
+            raise ValueError(
+                f"need N >= m, got N={self.n_workers} m={self.m}")
+
+    @property
+    def m(self) -> int:
+        return math.prod(self.factors)
+
+    @property
+    def nd(self) -> int:
+        return len(self.shape)
+
+    @property
+    def shard_shape(self) -> tuple[int, ...]:
+        """Per-worker TIME-domain shard shape (the shipped packed payload
+        halves the last axis)."""
+        return tuple(sk // mk for sk, mk in zip(self.shape, self.factors))
+
+    @property
+    def worker_shard_shape(self) -> tuple[int, ...]:
+        ells = self.shard_shape
+        return ells[:-1] + (ells[-1] // 2,)
+
+    @property
+    def real_dtype(self) -> jnp.dtype:
+        return _real_dtype(self.dtype)
+
+    @property
+    def recovery_threshold(self) -> int:
+        return self.m
+
+    @property
+    def generator(self) -> jax.Array:
+        return mds.rs_generator(self.n_workers, self.m, self.dtype)
+
+    @property
+    def _rest_axes(self) -> tuple[int, ...]:
+        """The non-halved shard axes of an ``(m, L_0, ..)`` stack: every
+        spatial axis except the packed last one (axis 0 is the shard
+        index, untouched by the symmetry ops)."""
+        return tuple(range(1, self.nd))
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedRFFTN(_RSNDRealPlanBase):
+    """n-D real-input coded FFT: ``shape`` real -> half-spectrum complex
+    (`shape[:-1] + (shape[-1]//2 + 1,)`), matching ``numpy.fft.rfftn``.
+
+    Workers transform pair-packed shards with a halved last axis -- half
+    the per-worker flops and HALF the wire payload of
+    :class:`~repro.core.coded_fft.CodedFFTND` at the same ``(shape, m)``
+    -- through the unchanged per-axis four-step kernel sweep, MDS decode
+    stack, and distributed runtime.
+    """
+
+    kind: str = dataclasses.field(default="rfftn", init=False)
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return tuple(self.shape)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return tuple(self.shape[:-1]) + (self.shape[-1] // 2 + 1,)
+
+    def _message1(self, t: jax.Array) -> jax.Array:
+        if jnp.iscomplexobj(t):
+            t = jnp.real(t)
+        c = interleave_nd(t.astype(self.real_dtype), self.factors)
+        return pack_pairs(c, self.dtype)        # (m, *ells[:-1], L/2)
+
+    def _postdecode1(self, z_hat: jax.Array) -> jax.Array:
+        ells = self.shard_shape
+        c_half = split_packed_nd(z_hat, ells[-1], self._rest_axes)
+        c_full = hermitian_extend_nd(c_half, self._rest_axes)
+        full = recombine_nd(c_full, self.shape, self.factors)
+        return full[..., : self.shape[-1] // 2 + 1]
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        return self._fftn_worker(a, self.nd)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedIRFFTN(_RSNDRealPlanBase):
+    """n-D inverse real coded FFT: half spectrum
+    (`shape[:-1] + (shape[-1]//2 + 1,)`) -> ``shape`` real, matching
+    ``numpy.fft.irfftn`` -- the adjoint of :class:`CodedRFFTN`.
+
+    The message stage symmetrizes the request so the endpoint last-axis
+    bins are treated exactly as ``numpy.fft.irfftn`` treats them (their
+    anti-Hermitian parts are discarded AFTER the other axes' inverse
+    transforms -- reproduced here in the spectral domain by averaging
+    each endpoint bin with its negated-frequency conjugate), folds with
+    the per-axis adjoint recombine butterfly, and pair-packs; workers
+    ``ifftn`` half-size shards, and postdecode is a pure relabeling.
+    """
+
+    kind: str = dataclasses.field(default="irfftn", init=False)
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return tuple(self.shape[:-1]) + (self.shape[-1] // 2 + 1,)
+
+    @property
+    def output_shape(self) -> tuple[int, ...]:
+        return tuple(self.shape)
+
+    def _message1(self, y: jax.Array) -> jax.Array:
+        nd = self.nd
+        rest_full = tuple(range(nd - 1))        # no shard axis yet
+        y = y.astype(self.dtype)
+        head = 0.5 * (y[..., :1] + jnp.conj(neg_freq(y[..., :1], rest_full)))
+        last = 0.5 * (y[..., -1:] + jnp.conj(neg_freq(y[..., -1:], rest_full)))
+        mid = y[..., 1:-1]
+        tail = jnp.conj(neg_freq(mid, rest_full))[..., ::-1]
+        full = jnp.concatenate([head, mid, last, tail], axis=-1)
+        folded = adjoint_fold_nd(full, self.shape, self.factors, self.dtype)
+        return pack_half_nd(folded, self.shard_shape[-1], self._rest_axes)
+
+    def _postdecode1(self, z_hat: jax.Array) -> jax.Array:
+        o = unpack_pairs(z_hat, self.real_dtype) / self.m   # (m, *ells) real
+        return deinterleave_nd(o, self.factors, self.shape)
+
+    def worker_compute(self, a: jax.Array) -> jax.Array:
+        return self._ifftn_worker(a, self.nd)

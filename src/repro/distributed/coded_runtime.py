@@ -31,10 +31,12 @@ not equal the device count (e.g. N=8 code on a 4-device axis).
 The runtime is plan-generic by construction: every stage touches only
 ``plan.message`` / ``plan.worker_compute`` / ``plan.postdecode`` and the
 ``worker_shard_shape`` metadata, so the real-input and inverse plans of
-DESIGN.md §7 (``CodedRFFT``/``CodedIFFT``/``CodedIRFFT``) run UNCHANGED:
-their half-length packed shard shapes and per-request masks thread
-through both shard_map stages exactly like the complex plans' (the r2c
-wire payload per worker is half the c2c plan's for the same ``(s, m)``).
+DESIGN.md §7 (``CodedRFFT``/``CodedIFFT``/``CodedIRFFT``) and their n-D
+generalizations of §9 (``CodedRFFTN``/``CodedIRFFTN``) run UNCHANGED:
+their half-size packed shard shapes and per-request masks thread
+through both shard_map stages exactly like the complex plans' (the real
+kinds' wire payload per worker is half the c2c plan's at the same
+``(s, m)``).
 """
 
 from __future__ import annotations

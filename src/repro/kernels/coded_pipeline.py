@@ -57,7 +57,11 @@ __all__ = [
     "coded_rfft_bucket_masked",
     "ir_message_body",
     "ir_unpack_body",
+    "irbucket_body",
+    "irbucket_body_masked",
     "irbucket_body_fftworker",
+    "coded_irfft_bucket",
+    "coded_irfft_bucket_masked",
 ]
 
 
@@ -267,6 +271,13 @@ def pack_real_planes(xr, m):
     ``z_i[j] = x[i + 2jm] + 1j*x[i + (2j+1)m]``.
     """
     bq, s = xr.shape
+    if s < 2 * m or s % (2 * m) != 0:
+        # same documented contract as core.rfft.require_even_shards (the
+        # kernel layer never imports upward into repro.core) -- fail the
+        # trace with the constraint instead of an opaque reshape error
+        raise ValueError(
+            f"real packing needs 2m | s (an even shard length s/m): "
+            f"got s={s}, m={m}")
     n2 = s // m // 2
     x3 = xr.reshape(bq, n2, 2, m)
     zr = jnp.transpose(x3[:, :, 0, :], (0, 2, 1))
@@ -552,6 +563,52 @@ def ir_unpack_body(hr, hi):
     return jnp.transpose(op, (0, 2, 1)).reshape(bq, m * ell)
 
 
+def irbucket_body(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                  fpr, fpi, ctwr, ctwi, pwr, pwi, s):
+    """The full c2r pipeline on one (bq, s//2+1) block of half-spectrum
+    requests -- the last of the four kinds to get a whole-bucket body
+    (DESIGN.md §9; before this, c2r ran the stage path on TPU and the
+    direct body off-TPU).
+
+    Same stage skeleton as :func:`rbucket_body` run in reverse: adjoint
+    message butterfly (:func:`ir_message_body`), fused encode + HALF-length
+    ifft worker, batched scatter decode, relabel unpack.  The ifft worker
+    rides the forward four-step planes via the conj trick on planes --
+    ``ifft(G @ z) = conj(fft(conj(G) @ conj(z))) / (L/2)`` is two sign
+    flips of imaginary planes around :func:`encode_fourstep_body` plus one
+    rescale, so no inverse DFT planes exist anywhere.  The four-step's
+    scrambled payload order is carried through decode (decode only mixes
+    the shard axis) and undone just before the pair unpack, which needs
+    natural order.  Returns ONE real (bq, s) plane.
+    """
+    bq = yr.shape[0]
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    n2 = a * b
+    zr, zi = ir_message_body(yr, yi, fpr, fpi, ctwr, ctwi, pwr, pwi, s, m)
+    er, ei = encode_fourstep_body(
+        zr.reshape(bq, m, a, b), (-zi).reshape(bq, m, a, b), gr, -gi,
+        far, fai, wr, wi, fbr, fbi)              # (bq, n, a, b) scrambled
+    er = er.reshape(bq, n, n2) / n2
+    ei = ei.reshape(bq, n, n2) / (-n2)           # conj + 1/(L/2): the ifft
+    hr, hi = bcmatmul_body(dr, di, er, ei)
+    # unscramble: scr[c*B + d] holds B[c + d*A] -> natural flat index d*A + c
+    hr = hr.reshape(bq, m, a, b).transpose(0, 1, 3, 2).reshape(bq, m, n2)
+    hi = hi.reshape(bq, m, a, b).transpose(0, 1, 3, 2).reshape(bq, m, n2)
+    return ir_unpack_body(hr, hi)
+
+
+def irbucket_body_masked(yr, yi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+                         fpr, fpi, ctwr, ctwi, pwr, pwi, s):
+    """:func:`irbucket_body` with in-VMEM Lagrange decode matrices (cf.
+    :func:`bucket_body_masked`)."""
+    n = gr.shape[0]
+    _, _, dr, di = lagrange_planes_body(subsets, n)
+    return irbucket_body(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                         fpr, fpi, ctwr, ctwi, pwr, pwi, s)
+
+
 def irbucket_body_fftworker(yr, yi, dvr, dvi, subsets, gr, gi,
                             fpr, fpi, ctwr, ctwi, pwr, pwi, s):
     """Direct-mode (off-TPU) c2r bucket: message stage on planes, platform
@@ -573,6 +630,119 @@ def irbucket_body_fftworker(yr, yi, dvr, dvi, subsets, gr, gi,
     ri = jnp.take_along_axis(ei, idx, axis=1)
     hr, hi = bcmatmul_body(dvr, dvi, rr, ri)
     return ir_unpack_body(hr, hi)
+
+
+def _irbucket_kernel(s):
+    def kernel(yr_ref, yi_ref, dr_ref, di_ref, gr_ref, gi_ref,
+               far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
+               fpr_ref, fpi_ref, ctwr_ref, ctwi_ref, pwr_ref, pwi_ref,
+               o_ref):
+        o_ref[...] = irbucket_body(
+            yr_ref[...], yi_ref[...], dr_ref[...], di_ref[...],
+            gr_ref[...], gi_ref[...], far_ref[...], fai_ref[...],
+            wr_ref[...], wi_ref[...], fbr_ref[...], fbi_ref[...],
+            fpr_ref[...], fpi_ref[...], ctwr_ref[...], ctwi_ref[...],
+            pwr_ref[...], pwi_ref[...], s)
+
+    return kernel
+
+
+def _irbucket_specs(s, m, n, a, b, block_q, subsets: bool):
+    ell = a * b * 2
+    sh = s // 2 + 1
+    spec_y = pl.BlockSpec((block_q, sh), lambda i: (i, 0))
+    spec_o = pl.BlockSpec((block_q, s), lambda i: (i, 0))
+    decode = ([pl.BlockSpec((block_q, m), lambda i: (i, 0))] if subsets
+              else [pl.BlockSpec((block_q, m, n), lambda i: (i, 0, 0))] * 2)
+    shared = [
+        pl.BlockSpec((n, m), lambda i: (0, 0)),       # gr
+        pl.BlockSpec((n, m), lambda i: (0, 0)),       # gi
+        pl.BlockSpec((a, a), lambda i: (0, 0)),       # far
+        pl.BlockSpec((a, a), lambda i: (0, 0)),       # fai
+        pl.BlockSpec((a, b), lambda i: (0, 0)),       # wr
+        pl.BlockSpec((a, b), lambda i: (0, 0)),       # wi
+        pl.BlockSpec((b, b), lambda i: (0, 0)),       # fbr
+        pl.BlockSpec((b, b), lambda i: (0, 0)),       # fbi
+        pl.BlockSpec((m, m), lambda i: (0, 0)),       # fpr
+        pl.BlockSpec((m, m), lambda i: (0, 0)),       # fpi
+        pl.BlockSpec((m, ell), lambda i: (0, 0)),     # ctwr
+        pl.BlockSpec((m, ell), lambda i: (0, 0)),     # ctwi
+        pl.BlockSpec((1, ell // 2 + 1), lambda i: (0, 0)),   # pwr
+        pl.BlockSpec((1, ell // 2 + 1), lambda i: (0, 0)),   # pwi
+    ]
+    return [spec_y, spec_y, *decode, *shared], spec_o
+
+
+def coded_irfft_bucket(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+                       fpr, fpi, ctwr, ctwi, pwr, pwi, s, *, block_q: int = 1,
+                       interpret: bool = False):
+    """Fused c2r bucket pipeline: half-spectrum request planes -> ONE real
+    output plane, one Pallas launch per grid step (DESIGN.md §9).
+
+    ``yr, yi``: (q, s//2+1) request planes; ``dr, di``: (q, m, N) scatter
+    decode matrices; ``far/wr/fbr``: four-step planes for the HALF length
+    L/2 = A*B; ``fpr``: (m, m) +sign DFT planes and ``ctwr``: (m, L)
+    conjugate twiddle of the adjoint message butterfly; ``pwr``:
+    (1, L/2+1) pack twiddle.  Returns the (q, s) real plane of
+    ``irfft(y, n=s, axis=-1)`` decoded from the masked worker subset each
+    ``D_q`` encodes.
+    """
+    q, _ = yr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    block_q = max(1, min(block_q, q))
+    in_specs, spec_o = _irbucket_specs(s, m, n, a, b, block_q, subsets=False)
+    return pl.pallas_call(
+        _irbucket_kernel(s),
+        grid=(pl.cdiv(q, block_q),),
+        in_specs=in_specs,
+        out_specs=spec_o,
+        out_shape=jax.ShapeDtypeStruct((q, s), yr.dtype),
+        interpret=interpret,
+        name="coded_irfft_bucket",
+    )(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
+      fpr, fpi, ctwr, ctwi, pwr, pwi)
+
+
+def _irbucket_kernel_masked(s):
+    def kernel(yr_ref, yi_ref, sub_ref, gr_ref, gi_ref,
+               far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
+               fpr_ref, fpi_ref, ctwr_ref, ctwi_ref, pwr_ref, pwi_ref,
+               o_ref):
+        o_ref[...] = irbucket_body_masked(
+            yr_ref[...], yi_ref[...], sub_ref[...],
+            gr_ref[...], gi_ref[...], far_ref[...], fai_ref[...],
+            wr_ref[...], wi_ref[...], fbr_ref[...], fbi_ref[...],
+            fpr_ref[...], fpi_ref[...], ctwr_ref[...], ctwi_ref[...],
+            pwr_ref[...], pwi_ref[...], s)
+
+    return kernel
+
+
+def coded_irfft_bucket_masked(yr, yi, subsets, gr, gi, far, fai, wr, wi,
+                              fbr, fbi, fpr, fpi, ctwr, ctwi, pwr, pwi, s, *,
+                              block_q: int = 1, interpret: bool = False):
+    """:func:`coded_irfft_bucket` taking ``(q, m)`` responder subsets in
+    place of decode planes -- the Lagrange weights are built in VMEM per
+    grid step (DESIGN.md §8), completing the device-resident path for all
+    four kinds."""
+    q, _ = yr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    block_q = max(1, min(block_q, q))
+    in_specs, spec_o = _irbucket_specs(s, m, n, a, b, block_q, subsets=True)
+    return pl.pallas_call(
+        _irbucket_kernel_masked(s),
+        grid=(pl.cdiv(q, block_q),),
+        in_specs=in_specs,
+        out_specs=spec_o,
+        out_shape=jax.ShapeDtypeStruct((q, s), yr.dtype),
+        interpret=interpret,
+        name="coded_irfft_bucket_masked",
+    )(yr, yi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+      fpr, fpi, ctwr, ctwi, pwr, pwi)
 
 
 def _bucket_kernel(xr_ref, xi_ref, dr_ref, di_ref, gr_ref, gi_ref,

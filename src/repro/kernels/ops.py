@@ -46,12 +46,16 @@ from repro.kernels.coded_pipeline import (
     bucket_body_masked,
     coded_fft_bucket,
     coded_fft_bucket_masked,
+    coded_irfft_bucket,
+    coded_irfft_bucket_masked,
     coded_rfft_bucket,
     coded_rfft_bucket_masked,
     half_postdecode_body,
     ir_message_body,
     ir_unpack_body,
+    irbucket_body,
     irbucket_body_fftworker,
+    irbucket_body_masked,
     lagrange_planes_body,
     pack_real_planes,
     rbucket_body,
@@ -95,7 +99,10 @@ __all__ = [
     "coded_rbucket_direct",
     "coded_rbucket_fusable",
     "coded_rbucket_masked",
+    "coded_irbucket",
     "coded_irbucket_direct",
+    "coded_irbucket_fusable",
+    "coded_irbucket_masked",
     "pack_real_planes",
     "rfft_postdecode_planar",
     "irfft_message_planar",
@@ -604,6 +611,66 @@ def _c2r_message_planes(s: int, m: int):
     ctwr, ctwi, fpr, fpi = _recombine_planes(s, m, sign=1.0)
     pwr, pwi = _split_planes(s // m, sign=1.0)
     return fpr, fpi, ctwr, ctwi, pwr, pwi
+
+
+def coded_irbucket_fusable(s: int, m: int, n: int) -> bool:
+    """VMEM gate for the fused c2r bucket kernel.
+
+    The c2r working set mirrors the r2c one (half-spectrum request +
+    Hermitian intermediate + (m + n) packed half-length shards + real
+    output), so the accounting is shared with
+    :func:`coded_rbucket_fusable`.
+    """
+    return coded_rbucket_fusable(s, m, n)
+
+
+def coded_irbucket(yr: jax.Array, yi: jax.Array,
+                   dr: jax.Array, di: jax.Array,
+                   gr: jax.Array, gi: jax.Array, s: int, *,
+                   interpret: bool | None = None):
+    """The c2r whole-bucket hot path (DESIGN.md §9) as ONE Pallas launch.
+
+    ``yr, yi``: (q, s//2+1) half-spectrum request planes; ``dr, di``:
+    (q, m, N) scatter decode matrices; ``gr, gi``: (N, m) generator
+    planes.  Returns the (q, s) REAL output plane -- adjoint message
+    butterfly, fused encode + half-length ifft worker (conj trick on
+    planes), decode matmul and pair unpack with no HBM round-trips
+    between stages.  Caller checks :func:`coded_irbucket_fusable`.
+    """
+    mode = _mode(interpret)
+    q, _ = yr.shape
+    n, m = gr.shape
+    n2 = s // m // 2
+    a, b = split_factor(n2)
+    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
+              *_c2r_message_planes(s, m))
+    if mode == "direct":
+        return irbucket_body(yr, yi, dr, di, gr, gi, *planes, s)
+    itp = mode == "interpret"
+    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
+    return coded_irfft_bucket(yr, yi, dr, di, gr, gi, *planes, s,
+                              block_q=bq, interpret=itp)
+
+
+def coded_irbucket_masked(yr: jax.Array, yi: jax.Array, subsets: jax.Array,
+                          gr: jax.Array, gi: jax.Array, s: int, *,
+                          interpret: bool | None = None):
+    """:func:`coded_irbucket` with in-kernel Lagrange decode matrices
+    (cf. :func:`coded_bucket_masked`) -- all four kinds now share the §8
+    device-resident decode path."""
+    mode = _mode(interpret)
+    q, _ = yr.shape
+    n, m = gr.shape
+    n2 = s // m // 2
+    a, b = split_factor(n2)
+    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
+              *_c2r_message_planes(s, m))
+    if mode == "direct":
+        return irbucket_body_masked(yr, yi, subsets, gr, gi, *planes, s)
+    itp = mode == "interpret"
+    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
+    return coded_irfft_bucket_masked(yr, yi, subsets, gr, gi, *planes, s,
+                                     block_q=bq, interpret=itp)
 
 
 def irfft_message_planar(yr: jax.Array, yi: jax.Array, s: int, m: int):

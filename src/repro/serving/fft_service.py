@@ -8,16 +8,19 @@ statistic -- benchmarks compare it against waiting for all N (uncoded) and
 against the repetition/short-dot thresholds (paper Remark 4).
 
 The scheduler is batched (DESIGN.md §5): submitted requests are bucketed by
-``(s, m, kind)`` with ``kind in {c2c, r2c, c2r}`` (forward complex, real
-forward, inverse real -- DESIGN.md §7), stacked along a leading batch axis,
-padded to a power-of-two bucket size, and pushed through ONE jitted encode
--> worker -> decode call per bucket with a per-request straggler mask --
-master-side work (MDS encode/decode, recombine) amortizes across the whole
-bucket instead of being paid per request.  ``submit`` is the batch-of-one
-special case; ``submit_rfft`` / ``submit_irfft`` are the real-kind
-conveniences.  Real buckets ship HALF the worker payload (pair-packed
-shards) and all kinds share one decode-matrix LRU (the (N, m) generator is
-length- and kind-independent).
+``(s, m, kind)`` with ``kind in {c2c, r2c, c2r, rfftn, irfftn}`` (forward
+complex, real forward, inverse real -- DESIGN.md §7 -- and the n-D real
+pair -- §9), stacked along a leading batch axis, padded to a power-of-two
+bucket size, and pushed through ONE jitted encode -> worker -> decode call
+per bucket with a per-request straggler mask -- master-side work (MDS
+encode/decode, recombine) amortizes across the whole bucket instead of
+being paid per request.  ``submit`` is the batch-of-one special case;
+``submit_rfft`` / ``submit_irfft`` / ``submit_rfftn`` / ``submit_irfftn``
+are the real-kind conveniences.  Real buckets (1-D and n-D) ship HALF the
+worker payload (pair-packed shards) and all kinds share one decode-matrix
+LRU (the (N, m) generator is length- and kind-independent).  n-D kinds
+bucket by the full time-domain shape tuple and run the generic jitted
+``plan.run`` executor.
 
 The default bucket executor is the Pallas kernel pipeline (DESIGN.md §6):
 requests are split to f32 real/imag planes ONCE at ingress, interleaved on
@@ -61,8 +64,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import mds
-from repro.core.coded_fft import CodedFFT
+from repro.core.coded_fft import CodedFFT, plan_factors
 from repro.core.rfft import CodedIRFFT, CodedRFFT
+from repro.core.rfftn import CodedIRFFTN, CodedRFFTN
 from repro.core.strategies import coded_fft_threshold
 from repro.distributed.coded_runtime import DistributedCodedPlan
 from repro.distributed.straggler import StragglerModel
@@ -138,7 +142,14 @@ class FFTService:
     bucket executors.
     """
 
-    KINDS = ("c2c", "r2c", "c2r")
+    KINDS = ("c2c", "r2c", "c2r", "rfftn", "irfftn")
+    # half-payload kinds: workers ship pair-packed shards with a halved
+    # (last) axis, so their wire time is charged at payload_scale=0.5
+    REAL_KINDS = ("r2c", "c2r", "rfftn", "irfftn")
+    # n-D kinds bucket by the full TIME-domain shape tuple instead of a
+    # scalar length and run the generic jitted ``plan.run`` executor (the
+    # fused planar bucket kernels are 1-D layouts)
+    ND_KINDS = ("rfftn", "irfftn")
 
     def __init__(self, cfg: FFTServiceConfig, mesh: Optional[Mesh] = None,
                  axis: str = "workers"):
@@ -147,8 +158,10 @@ class FFTService:
         self.axis = axis
         self.rng = np.random.default_rng(cfg.seed)
         self.stats = ServiceStats()
-        self._plans: dict[tuple[int, int, str], object] = {}
-        self._runtimes: dict[tuple[int, int, str], DistributedCodedPlan] = {}
+        # keyed by (s, m, kind); s is a scalar length for 1-D kinds and
+        # the time-domain shape tuple for the n-D kinds
+        self._plans: dict[tuple, object] = {}
+        self._runtimes: dict[tuple, DistributedCodedPlan] = {}
         self._runners: dict[tuple, object] = {}
         # ONE decode-matrix LRU for the whole service: the (N, m) generator
         # -- hence every per-mask decode matrix -- is independent of both
@@ -161,10 +174,15 @@ class FFTService:
         self.runtime = self._runtime_for(cfg.s) if mesh is not None else None
 
     # -- plan / compiled-executor caches --------------------------------
-    def _plan_for(self, s: int, kind: str = "c2c"):
-        """The plan serving ``(s, m, kind)`` buckets (kind per DESIGN.md §7:
-        ``c2c`` forward complex, ``r2c`` real forward, ``c2r`` inverse
-        real).  ``s`` is always the TIME-domain length."""
+    def _plan_for(self, s, kind: str = "c2c"):
+        """The plan serving ``(s, m, kind)`` buckets (DESIGN.md §7/§9).
+
+        ``kind``: ``c2c`` forward complex, ``r2c`` real forward, ``c2r``
+        inverse real, ``rfftn``/``irfftn`` the n-D real pair.  ``s`` is
+        always the TIME-domain extent: a scalar length for the 1-D kinds,
+        the full shape tuple for the n-D kinds (whose interleave factors
+        come from :func:`repro.core.coded_fft.plan_factors`).
+        """
         if kind not in self.KINDS:
             raise ValueError(f"unknown bucket kind {kind!r}")
         cfg = self.cfg
@@ -178,6 +196,18 @@ class FFTService:
                     f"worker_fn plug-ins only apply to c2c buckets; "
                     f"got a {kind!r} request on a worker_fn service")
             backend = "reference" if cfg.use_reference else "kernel"
+            if kind in self.ND_KINDS:
+                shape = tuple(int(d) for d in s)
+                # even_last_shard biases the factor placement so any
+                # shape with a valid real-kind factorization is served
+                # (a kind-agnostic greedy split can land a factor on the
+                # last axis and leave an odd shard spuriously)
+                factors = plan_factors(shape, cfg.m, even_last_shard=True)
+                cls = CodedRFFTN if kind == "rfftn" else CodedIRFFTN
+                self._plans[key] = cls(
+                    shape=shape, factors=factors, n_workers=cfg.n_workers,
+                    dtype=cfg.dtype, backend=backend)
+                return self._plans[key]
             common = dict(s=s, m=cfg.m, n_workers=cfg.n_workers,
                           dtype=cfg.dtype, backend=backend)
             if kind == "r2c":
@@ -205,16 +235,20 @@ class FFTService:
                 maxsize=self.cfg.decode_cache_size)
         return self._decode_cache
 
-    def _kernel_path(self, s: int, kind: str = "c2c") -> bool:
+    def _kernel_path(self, s, kind: str = "c2c") -> bool:
         """Does this bucket run the fused planar kernel executor?
 
         The kernel path owns the default local config; anything it does not
         cover -- a mesh (the distributed runtime executes instead), an
         explicit ``worker_fn`` plug-in, a pinned ``decode_method``, a
-        reference request, or a non-c64 dtype -- falls back to ``plan.run``.
+        reference request, a non-c64 dtype, or an n-D kind (the planar
+        bucket executors are 1-D layouts; rfftn/irfftn run the generic
+        jitted ``plan.run``, whose encode/worker stages still dispatch to
+        the Pallas kernels) -- falls back to ``plan.run``.
         """
         cfg = self.cfg
-        return (self.mesh is None
+        return (kind not in self.ND_KINDS
+                and self.mesh is None
                 and not cfg.use_reference
                 and cfg.worker_fn is None
                 and cfg.decode_method == "auto"
@@ -230,10 +264,11 @@ class FFTService:
         """
         return self.cfg.device_decode and self.cfg.m <= mds.LAGRANGE_MAX_M
 
-    def _runner_for(self, s: int, bucket: int, kind: str = "c2c"):
+    def _runner_for(self, s, bucket: int, kind: str = "c2c"):
         """One jitted batched encode->worker->decode per (s, m, kind,
         bucket).  The executables persist for the service lifetime --
-        :meth:`warmup` keys them once so steady state never compiles."""
+        :meth:`warmup` keys them once so steady state never compiles.
+        n-D kinds always take the generic ``plan.run`` branch."""
         kernel = self._kernel_path(s, kind)
         dev = kernel and self._device_decode()
         key = (s, self.cfg.m, kind, bucket, kernel, dev)
@@ -292,6 +327,8 @@ class FFTService:
             return jax.jit(fn)
 
         if kind == "c2r":
+            whole = not direct and ops.coded_irbucket_fusable(s, m, n)
+
             def fn(yb, masks):
                 subsets = ops.mask_subsets(masks, m)
                 yr, yi = ref.planar(yb)
@@ -299,6 +336,12 @@ class FFTService:
                     ivr, ivi = ops.lagrange_compact_planes(subsets, n)
                     return ops.coded_irbucket_direct(
                         yr, yi, ivr, ivi, subsets, gr, gi, s)
+                if whole:
+                    # ONE Pallas launch with in-VMEM decode matrices --
+                    # the last kind to get a whole-bucket kernel
+                    # (DESIGN.md §9)
+                    return ops.coded_irbucket_masked(yr, yi, subsets,
+                                                     gr, gi, s)
                 dr, di = ops.lagrange_scatter_planes(subsets, n)
                 zr, zi = ops.irfft_message_planar(yr, yi, s, m)
                 br, bi = ops.encode_worker(zr, -zi, gr, -gi)
@@ -389,9 +432,13 @@ class FFTService:
 
                 return jax.jit(fn)
 
+            whole = ops.coded_irbucket_fusable(s, m, plan.n_workers)
+
             def fn(yb, dplanes):
                 dr, di = dplanes[0], dplanes[1]
                 yr, yi = ref.planar(yb)
+                if whole:
+                    return ops.coded_irbucket(yr, yi, dr, di, gr, gi, s)
                 zr, zi = ops.irfft_message_planar(yr, yi, s, m)
                 # ifft(G @ z) via the conj trick on planes:
                 # conj(fft(conj(G) @ conj(z))) / n2 through the same fused
@@ -451,7 +498,7 @@ class FFTService:
         """
         cfg = self.cfg
         k = coded_fft_threshold(cfg.n_workers, cfg.m)
-        scale = 0.5 if kind in ("r2c", "c2r") else 1.0
+        scale = 0.5 if kind in self.REAL_KINDS else 1.0
         lat = cfg.straggler.sample(
             (n_requests, cfg.n_workers), 1.0 / cfg.m, self.rng,
             payload_scale=scale)
@@ -483,6 +530,20 @@ class FFTService:
         length ``2*(len(y) - 1)``."""
         return self.submit_batch([y], kind="c2r")[0]
 
+    def submit_rfftn(self, t: jax.Array) -> np.ndarray:
+        """One n-D REAL request: returns ``numpy.fft.rfftn(t)`` -- the
+        half spectrum over the last axis (``t.shape[:-1] + (last//2+1,)``)
+        -- from half-payload worker shards (DESIGN.md §9).  The last axis
+        must satisfy the real-kind ``2m | s`` constraint after
+        ``plan_factors`` splits ``m`` across the axes."""
+        return self.submit_batch([t], kind="rfftn")[0]
+
+    def submit_irfftn(self, y: jax.Array) -> np.ndarray:
+        """One n-D half-spectrum request: returns the real
+        ``numpy.fft.irfftn(y)`` of shape
+        ``y.shape[:-1] + (2*(y.shape[-1]-1),)``."""
+        return self.submit_batch([y], kind="irfftn")[0]
+
     def submit_batch(self, xs: Sequence[jax.Array],
                      kind: Union[str, Sequence[str]] = "c2c"
                      ) -> list[np.ndarray]:
@@ -493,13 +554,17 @@ class FFTService:
         simulated straggler pattern, and results come back in submission
         order as host arrays.
 
-        ``kind`` selects the transform (DESIGN.md §7): ``"c2c"`` complex
-        forward (default), ``"r2c"`` real input -> half spectrum, ``"c2r"``
-        half spectrum -> real output -- either ONE kind for the whole call
-        or a PER-REQUEST sequence (mixed traffic buckets by (s, kind), so
-        a client no longer splits its stream by kind).  Buckets are keyed
-        by the TIME-domain length ``s`` (a c2r request of ``h`` bins lands
-        in the ``s = 2*(h-1)`` bucket).
+        ``kind`` selects the transform (DESIGN.md §7/§9): ``"c2c"``
+        complex forward (default), ``"r2c"`` real input -> half spectrum,
+        ``"c2r"`` half spectrum -> real output, ``"rfftn"`` n-D real
+        input -> last-axis half spectrum, ``"irfftn"`` its inverse --
+        either ONE kind for the whole call or a PER-REQUEST sequence
+        (mixed traffic buckets by (s, kind), so a client no longer splits
+        its stream by kind).  Buckets are keyed by the TIME-domain extent
+        ``s`` -- a scalar length for 1-D kinds (a c2r request of ``h``
+        bins lands in the ``s = 2*(h-1)`` bucket) and the full shape
+        tuple for n-D kinds (an irfftn request's last axis is
+        ``2*(bins-1)``).
 
         The call is PIPELINED (DESIGN.md §8): every bucket is dispatched
         before any host sync -- the jitted calls are asynchronous, so
@@ -516,14 +581,19 @@ class FFTService:
                 raise ValueError(f"unknown bucket kind {k!r}")
         cfg = self.cfg
         results: list[Optional[np.ndarray]] = [None] * len(xs)
-        by_bucket: dict[tuple[int, str], list[int]] = {}
+        by_bucket: dict[tuple, list[int]] = {}
         for i, (x, k) in enumerate(zip(xs, kinds)):
             n_last = int(x.shape[-1])
-            if k == "c2r" and n_last < 2:
+            if k in ("c2r", "irfftn") and n_last < 2:
                 raise ValueError(
-                    f"c2r requests need >= 2 half-spectrum bins "
+                    f"{k} requests need >= 2 half-spectrum bins "
                     f"(s = 2*(bins-1) > 0), got {n_last}")
-            s = 2 * (n_last - 1) if k == "c2r" else n_last
+            if k in self.ND_KINDS:
+                # n-D kinds bucket by the full TIME-domain shape tuple
+                time_last = 2 * (n_last - 1) if k == "irfftn" else n_last
+                s = tuple(int(d) for d in x.shape[:-1]) + (time_last,)
+            else:
+                s = 2 * (n_last - 1) if k == "c2r" else n_last
             by_bucket.setdefault((s, k), []).append(i)
 
         # phase 1 -- dispatch: stage + launch every bucket, no host sync
@@ -552,8 +622,12 @@ class FFTService:
 
         Keys one persistent executable per (s, kind, bucket-size) --
         default: the config length, c2c, every power-of-two bucket up to
-        ``max_batch``.  Returns the number of executables compiled.  On the
-        fallback (host-LRU) path this also primes the all-alive mask entry.
+        ``max_batch``.  ``lengths`` entries may be scalar lengths (1-D
+        kinds) or shape tuples (``rfftn``/``irfftn``); each entry is
+        paired only with the kinds it fits (scalars with 1-D kinds,
+        tuples with n-D kinds), so one call can warm mixed traffic.
+        Returns the number of executables compiled.  On the fallback
+        (host-LRU) path this also primes the all-alive mask entry.
         """
         cfg = self.cfg
         lengths = [cfg.s] if lengths is None else list(lengths)
@@ -565,7 +639,11 @@ class FFTService:
             buckets.append(cfg.max_batch)
         outs = []
         for s in lengths:
+            if isinstance(s, (tuple, list)):
+                s = tuple(int(d) for d in s)      # hashable bucket key
             for k in kinds:
+                if isinstance(s, tuple) != (k in self.ND_KINDS):
+                    continue        # scalar<->1-D, tuple<->n-D only
                 for b in sorted(set(buckets)):
                     xb = self._bucket_buffer(s, b, k)
                     masks = np.ones((b, cfg.n_workers), bool)
@@ -574,12 +652,20 @@ class FFTService:
         jax.block_until_ready(outs)
         return len(outs)
 
-    def _bucket_buffer(self, s: int, bucket: int, kind: str) -> np.ndarray:
+    def _bucket_buffer(self, s, bucket: int, kind: str) -> np.ndarray:
         """The request staging buffer for one bucket, in the kind's ingress
-        dtype: real requests stay a single f32 plane end-to-end."""
+        dtype: real requests stay a single real plane end-to-end.  ``s``
+        is the scalar time-domain length (1-D kinds) or shape tuple (n-D
+        kinds)."""
         cdt = np.dtype(self.cfg.dtype)
+        rdt = np.real(np.zeros(1, cdt)).dtype
+        if kind == "rfftn":
+            return np.zeros((bucket,) + tuple(s), dtype=rdt)
+        if kind == "irfftn":
+            shape = tuple(s[:-1]) + (s[-1] // 2 + 1,)
+            return np.zeros((bucket,) + shape, dtype=cdt)
         if kind == "r2c":
-            return np.zeros((bucket, s), dtype=np.real(np.zeros(1, cdt)).dtype)
+            return np.zeros((bucket, s), dtype=rdt)
         if kind == "c2r":
             return np.zeros((bucket, s // 2 + 1), dtype=cdt)
         # allocate in the service dtype (NOT the first request's dtype --
@@ -615,7 +701,7 @@ class FFTService:
             return args
         return (jnp.asarray(xb), jnp.asarray(masks))
 
-    def _dispatch_bucket(self, s: int, idxs: list[int], xs,
+    def _dispatch_bucket(self, s, idxs: list[int], xs,
                          kind: str = "c2c") -> jax.Array:
         """Stage + launch one bucket; returns the UNSYNCED device result.
 
@@ -630,9 +716,10 @@ class FFTService:
         self.stats.batches += 1
 
         xb = self._bucket_buffer(s, bucket, kind)
+        real_in = kind in ("r2c", "rfftn")
         for row, i in enumerate(idxs):
             x = np.asarray(xs[i])
-            xb[row] = x.real if kind == "r2c" and np.iscomplexobj(x) else x
+            xb[row] = x.real if real_in and np.iscomplexobj(x) else x
         # padded rows: every worker "responds" so decode stays well-posed
         masks = np.ones((bucket, cfg.n_workers), bool)
         masks[:n_live] = mask

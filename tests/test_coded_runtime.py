@@ -89,6 +89,17 @@ assert err < 1e-2, f"masked decode err {err}"
 txt = d.lower().compile().as_text()
 assert txt.count("all-gather") >= 1
 
+# n-D real plan over the same 8-device mesh (DESIGN.md §9): half-size
+# packed shard shapes thread through both shard_map stages unchanged
+import numpy as np
+from repro.core import CodedRFFTN
+rplan = CodedRFFTN(shape=(16, 16), factors=(2, 2), n_workers=8)
+dr = DistributedCodedFFT(rplan, mesh)
+t = np.random.default_rng(0).normal(size=(16, 16)).astype("float32")
+rout = dr.run(jnp.asarray(t), mask)
+rerr = float(np.abs(np.asarray(rout) - np.fft.rfftn(t.astype("float64"))).max())
+assert rerr < 1e-2, f"rfftn mesh err {rerr}"
+
 # elastic: move a sharded tree 8 -> 4 -> 8 devices bit-exactly
 m8 = test_mesh((8,), ("d",))
 m4 = test_mesh((4,), ("d",))

@@ -330,7 +330,95 @@ def test_coded_irbucket_direct_matches_numpy(s, m, n):
     assert _relerr(out, xs) < 1e-3
 
 
-@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (768, 4, 6)])
+@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (768, 4, 6), (240, 2, 5),
+                                   (96, 3, 7)])
+def test_coded_irfft_bucket_kernel_parity(s, m, n):
+    """One-launch fused c2r bucket (adjoint message butterfly -> fused
+    encode + half-length ifft worker -> decode -> pair unpack) ==
+    numpy.irfft via Pallas interpret, over ADVERSARIAL byte-pattern masks
+    -- pairs that select the same first-m responder subset but differ as
+    byte patterns, plus exact-threshold scatters -- including odd shard
+    lengths and odd m; direct path same math (DESIGN.md §9)."""
+    assert ops.coded_irbucket_fusable(s, m, n)
+    rng = np.random.default_rng(s + m)
+    # adversarial mask family: same-subset-different-bytes pairs + the
+    # all-alive row + exact-threshold random scatters
+    masks = [np.zeros(n, bool) for _ in range(2)]
+    masks[0][:m] = True                       # contiguous first-m ...
+    masks[1][:m] = True
+    masks[1][n - 1] = True                    # ... same subset, extra byte
+    masks.append(np.ones(n, bool))
+    for _ in range(2):
+        row = np.zeros(n, bool)
+        row[rng.choice(n, size=m, replace=False)] = True
+        masks.append(row)
+    masks = np.stack(masks)
+    q = masks.shape[0]
+    xs = rng.normal(size=(q, s))
+    yb = jnp.asarray(np.fft.rfft(xs, axis=-1).astype(np.complex64))
+    g = mds.rs_generator(n, m, jnp.complex64)
+    cache = DecodeMatrixCache(np.asarray(g))
+    dmats = cache.matrices(masks)
+    gr, gi = ref.planar(g)
+    dr = jnp.asarray(dmats.real.astype(np.float32))
+    di = jnp.asarray(dmats.imag.astype(np.float32))
+    yr, yi = ref.planar(yb)
+    out = ops.coded_irbucket(yr, yi, dr, di, gr, gi, s, interpret=True)
+    assert _relerr(out, xs) < 1e-3
+    # direct path (off-TPU default) computes the identical body
+    out2 = ops.coded_irbucket(yr, yi, dr, di, gr, gi, s)
+    assert _relerr(out2, np.asarray(out)) < 1e-5
+    # masked variant: decode matrices built in-kernel from the subsets
+    subsets = jnp.asarray(np.stack(
+        [DecodeMatrixCache.subset_of(row, m) for row in masks]))
+    out3 = ops.coded_irbucket_masked(yr, yi, subsets, gr, gi, s,
+                                     interpret=True)
+    assert _relerr(out3, xs) < 1e-3
+    out4 = ops.coded_irbucket_masked(yr, yi, subsets, gr, gi, s)
+    assert _relerr(out4, xs) < 1e-3
+    # and the reference plan agrees (the acceptance cross-check)
+    from repro.core import CodedIRFFT
+
+    plan = CodedIRFFT(s=s, m=m, n_workers=n, dtype=jnp.complex64,
+                      backend="reference")
+    want_plan = plan.run(yb[0], mask=jnp.asarray(masks[0]))
+    assert _relerr(np.asarray(out)[0], np.asarray(want_plan)) < 1e-3
+
+
+def test_submit_irfft_routes_through_fused_c2r_kernel(monkeypatch):
+    """Dispatch pin (the acceptance criterion): on the kernel backend with
+    a non-interpret (TPU-like) dispatch, the c2r bucket runner lowers to
+    the ONE-LAUNCH fused kernel -- the jaxpr carries the
+    coded_irfft_bucket pallas_call, not the stage-path composition.  CI
+    runs on CPU, so the TPU dispatch is pinned by patching
+    ops.default_interpret; tracing never executes the kernel."""
+    monkeypatch.setattr(ops, "default_interpret", lambda: False)
+    s, m, n = 256, 4, 8
+    svc = FFTService(FFTServiceConfig(s=s, m=m, n_workers=n))
+    assert svc._kernel_path(s, "c2r") and svc._device_decode()
+    runner = svc._runner_for(s, 4, "c2r")
+    yb = jax.ShapeDtypeStruct((4, s // 2 + 1), jnp.complex64)
+    masks = jax.ShapeDtypeStruct((4, n), jnp.bool_)
+    jaxpr = str(jax.make_jaxpr(runner)(yb, masks))
+    assert "coded_irfft_bucket_masked" in jaxpr
+    # the host-LRU fallback runner pins the unmasked fused kernel too
+    svc2 = FFTService(FFTServiceConfig(s=s, m=m, n_workers=n,
+                                       device_decode=False))
+    runner2 = svc2._runner_for(s, 4, "c2r")
+    dplanes = jax.ShapeDtypeStruct((2, 4, m, n), jnp.float32)
+    jaxpr2 = str(jax.make_jaxpr(runner2)(yb, dplanes))
+    assert "coded_irfft_bucket" in jaxpr2
+
+
+def test_pack_real_planes_odd_shard_raises_documented_error():
+    """Odd shard lengths on the real kernel path fail with the documented
+    '2m | s' ValueError at trace time, not an opaque reshape error."""
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        ops.pack_real_planes(jnp.zeros((2, 252), jnp.float32), 4)
+
+
+@pytest.mark.parametrize("s,m,n", [(2048, 4, 8), (768, 4, 6), (240, 2, 5),
+                                   (96, 3, 7)])
 def test_tpu_stage_path_compositions_match_numpy(s, m, n):
     """Pin the TPU-only stage compositions of _make_kernel_runner, which
     CI's interpret-mode default never executes: the r2c non-fusable

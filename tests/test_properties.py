@@ -31,7 +31,9 @@ from repro.core import (
     CodedFFTND,
     CodedIFFT,
     CodedIRFFT,
+    CodedIRFFTN,
     CodedRFFT,
+    CodedRFFTN,
     UncodedRepetitionFFT,
 )
 
@@ -53,6 +55,15 @@ CONFIGS_ND = [
     ((8, 8), (2, 2), 6),
     ((16, 4), (4, 1), 5),
     ((12, 6), (2, 3), 8),
+]
+# n-D real configs additionally need an even LAST shard axis
+# (2*factors[-1] | shape[-1], DESIGN.md §9)
+CONFIGS_RND = [
+    ((8, 8), (2, 2), 6),
+    ((16, 4), (4, 1), 5),
+    ((12, 8), (3, 2), 8),
+    ((6, 4, 8), (3, 1, 2), 7),
+    ((24,), (4,), 6),
 ]
 CONFIGS_MI = [
     (4, (8,), 2, (2,), 6),
@@ -209,6 +220,47 @@ def test_coded_fft_nd_matches_numpy(cfg, tier, batch, seed):
     _check(_poisoned_run(plan, t, mask),
            np.fft.fftn(np.asarray(t, np.complex128),
                        axes=tuple(range(-len(shape), 0))), rtol, cfg)
+
+
+@prop_settings(max_examples=MAX_EXAMPLES)
+@given(cfg=st.sampled_from(CONFIGS_RND), tier=st.sampled_from(TIERS),
+       batch=st.sampled_from(BATCHES), seed=st.integers(0, 10**6))
+def test_coded_rfftn_matches_numpy(cfg, tier, batch, seed):
+    """n-D real forward (DESIGN.md §9): pair-packed half-payload shards,
+    per-axis worker sweep, generalized split postdecode == numpy.rfftn
+    under NaN-poisoned straggler masks."""
+    shape, factors, n = cfg
+    backend, dtype, rtol = tier
+    plan = CodedRFFTN(shape=shape, factors=factors, n_workers=n,
+                      dtype=dtype, backend=backend)
+    full = ((batch,) + shape if batch else shape)
+    t = _rand(full, seed, dtype=plan.real_dtype)
+    mask = _masks(n, plan.m, batch, seed)
+    axes = tuple(range(-len(shape), 0))
+    _check(_poisoned_run(plan, t, mask),
+           np.fft.rfftn(np.asarray(t, np.float64), axes=axes), rtol, cfg)
+
+
+@prop_settings(max_examples=MAX_EXAMPLES)
+@given(cfg=st.sampled_from(CONFIGS_RND), tier=st.sampled_from(TIERS),
+       batch=st.sampled_from(BATCHES), seed=st.integers(0, 10**6))
+def test_coded_irfftn_matches_numpy(cfg, tier, batch, seed):
+    """n-D real inverse: the adjoint pipeline (symmetrize -> per-axis
+    fold -> pack -> ifftn workers) == numpy.irfftn on Hermitian-consistent
+    draws (the inconsistent-endpoint contract is pinned in
+    tests/test_rfftn.py)."""
+    shape, factors, n = cfg
+    backend, dtype, rtol = tier
+    plan = CodedIRFFTN(shape=shape, factors=factors, n_workers=n,
+                       dtype=dtype, backend=backend)
+    full = ((batch,) + shape if batch else shape)
+    axes = tuple(range(-len(shape), 0))
+    xt = np.random.default_rng(seed).normal(size=full)
+    y = jnp.asarray(np.fft.rfftn(xt, axes=axes).astype(dtype))
+    mask = _masks(n, plan.m, batch, seed)
+    _check(_poisoned_run(plan, y, mask),
+           np.fft.irfftn(np.asarray(y, np.complex128), s=shape, axes=axes),
+           rtol, cfg)
 
 
 @prop_settings(max_examples=MAX_EXAMPLES)

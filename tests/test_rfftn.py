@@ -1,0 +1,289 @@
+"""n-D real coded transforms (DESIGN.md §9): CodedRFFTN / CodedIRFFTN
+against numpy.fft.rfftn/irfftn, the documented even-shard ValueError, the
+FFTService rfftn/irfftn kinds, and the shard_map mesh path.
+
+The drawn-config property sweep lives in tests/test_properties.py; this
+module pins shapes, protocol details, adjoint structure, and the service
+plumbing.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CodedIRFFTN,
+    CodedRFFTN,
+    adjoint_fold_nd,
+    pack_half_nd,
+    require_even_shards,
+    split_packed_nd,
+)
+from repro.core.rfft import CodedIRFFT, CodedRFFT
+from repro.serving import FFTService, FFTServiceConfig
+
+C64 = jnp.complex64
+C128 = jnp.complex128
+
+
+def _relerr(got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    return np.abs(got - want).max() / max(np.abs(want).max(), 1e-12)
+
+
+# ------------------------------------------------------------- plan parity
+@pytest.mark.parametrize("shape,factors,n", [
+    ((8, 8), (2, 2), 6),
+    ((16, 4), (4, 1), 5),
+    ((12, 6), (2, 3), 8),
+    ((8, 4, 4), (2, 1, 2), 5),
+    ((16,), (4,), 6),          # 1-D degenerate: must agree with CodedRFFT
+])
+def test_rfftn_irfftn_roundtrip_matches_numpy(shape, factors, n):
+    rng = np.random.default_rng(sum(shape))
+    t = rng.normal(size=shape)
+    plan = CodedRFFTN(shape=shape, factors=factors, n_workers=n, dtype=C128,
+                      backend="reference")
+    got = plan.run(jnp.asarray(t))
+    want = np.fft.rfftn(t)
+    assert got.shape == want.shape
+    assert _relerr(got, want) < 1e-8
+
+    iplan = CodedIRFFTN(shape=shape, factors=factors, n_workers=n,
+                        dtype=C128, backend="reference")
+    back = iplan.run(jnp.asarray(np.asarray(got)))
+    assert back.shape == t.shape
+    assert np.abs(np.asarray(back) - t).max() < 1e-8
+
+
+def test_rfftn_every_subset_with_nan_stragglers():
+    """Any m-subset decodes; straggler rows are NaN-poisoned to prove the
+    decode never reads them (the acceptance semantics)."""
+    shape, factors, n = (8, 8), (2, 2), 6
+    rng = np.random.default_rng(3)
+    t = rng.normal(size=shape)
+    plan = CodedRFFTN(shape=shape, factors=factors, n_workers=n, dtype=C128,
+                      backend="reference")
+    b = plan.worker_compute(plan.encode(jnp.asarray(t)))
+    want = np.fft.rfftn(t)
+    for sub in itertools.combinations(range(n), plan.m):
+        mask = np.zeros(n, bool)
+        mask[list(sub)] = True
+        poisoned = jnp.where(
+            jnp.asarray(mask)[:, None, None], b, jnp.nan)
+        got = np.asarray(plan.decode(poisoned, mask=jnp.asarray(mask)))
+        assert not np.isnan(got).any()
+        assert _relerr(got, want) < 1e-7, sub
+
+
+def test_rfftn_kernel_backend_batched():
+    """Default (kernel) backend, batched: per-axis four-step worker sweep
+    over half-size shards still matches numpy."""
+    plan = CodedRFFTN(shape=(16, 16), factors=(2, 2), n_workers=6)
+    assert plan.resolved_backend == "kernel"
+    rng = np.random.default_rng(7)
+    tb = rng.normal(size=(3, 16, 16)).astype(np.float32)
+    got = plan.run(jnp.asarray(tb))
+    want = np.fft.rfftn(tb.astype(np.float64), axes=(-2, -1))
+    assert _relerr(got, want) < 5e-3
+
+
+def test_irfftn_inconsistent_endpoints_match_numpy_exactly():
+    """Non-Hermitian-consistent endpoint bins: the spectral symmetrization
+    of the message stage reproduces numpy.fft.irfftn exactly (endpoint
+    anti-Hermitian parts discarded AFTER the rest-axis transforms)."""
+    shape, factors = (8, 8), (2, 2)
+    rng = np.random.default_rng(11)
+    h = shape[-1] // 2 + 1
+    y = rng.normal(size=shape[:-1] + (h,)) + 1j * rng.normal(
+        size=shape[:-1] + (h,))
+    plan = CodedIRFFTN(shape=shape, factors=factors, n_workers=6,
+                       dtype=C128, backend="reference")
+    got = plan.run(jnp.asarray(y))
+    want = np.fft.irfftn(y, s=shape, axes=tuple(range(len(shape))))
+    assert np.abs(np.asarray(got) - want).max() < 1e-8
+
+
+def test_rfftn_reduces_to_rfft_in_1d():
+    """shape=(s,) CodedRFFTN/CodedIRFFTN computes the same transform as
+    the 1-D CodedRFFT/CodedIRFFT plans (same code, same shard payload)."""
+    s, m, n = 64, 4, 8
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=s)
+    p1 = CodedRFFT(s=s, m=m, n_workers=n, dtype=C128, backend="reference")
+    pn = CodedRFFTN(shape=(s,), factors=(m,), n_workers=n, dtype=C128,
+                    backend="reference")
+    assert pn.worker_shard_shape == p1.worker_shard_shape
+    np.testing.assert_allclose(np.asarray(pn.run(jnp.asarray(x))),
+                               np.asarray(p1.run(jnp.asarray(x))), atol=1e-9)
+    y = np.fft.rfft(x)
+    i1 = CodedIRFFT(s=s, m=m, n_workers=n, dtype=C128, backend="reference")
+    in_ = CodedIRFFTN(shape=(s,), factors=(m,), n_workers=n, dtype=C128,
+                      backend="reference")
+    np.testing.assert_allclose(np.asarray(in_.run(jnp.asarray(y))),
+                               np.asarray(i1.run(jnp.asarray(y))), atol=1e-9)
+
+
+def test_rfftn_payload_is_half_of_c2c_nd():
+    """The communication claim in n-D: rfftn worker shards carry HALF the
+    elements of the c2c n-D plan at the same (shape, m)."""
+    from repro.core import CodedFFTND
+
+    shape, factors, n = (16, 16), (2, 2), 8
+    c2c = CodedFFTND(shape=shape, factors=factors, n_workers=n)
+    r2c = CodedRFFTN(shape=shape, factors=factors, n_workers=n)
+    assert (2 * np.prod(r2c.worker_shard_shape)
+            == np.prod(c2c.worker_shard_shape))
+    a = r2c.encode(jnp.zeros(shape, jnp.float32))
+    assert a.shape == (n,) + r2c.worker_shard_shape
+
+
+def test_adjoint_pack_split_inverses():
+    """pack_half_nd inverts split_packed_nd on jointly-Hermitian spectra,
+    and adjoint_fold_nd's folded shards ifftn to the interleave (the §9
+    structural identities, independent of any plan)."""
+    rng = np.random.default_rng(2)
+    c = rng.normal(size=(3, 4, 8))                    # real shards
+    zh = np.fft.fftn(c[..., ::2] + 1j * c[..., 1::2], axes=(1, 2))
+    half = split_packed_nd(jnp.asarray(zh), 8, rest_axes=(1,))
+    full = np.fft.fftn(c, axes=(1, 2))
+    np.testing.assert_allclose(np.asarray(half), full[..., :5], atol=1e-10)
+    packed = pack_half_nd(jnp.asarray(full), 8, rest_axes=(1,))
+    np.testing.assert_allclose(np.asarray(packed), zh, atol=1e-10)
+
+    shape, factors = (8, 8), (2, 4)
+    t = rng.normal(size=shape)
+    folded = adjoint_fold_nd(jnp.asarray(np.fft.fftn(t)), shape, factors,
+                             C128)
+    from repro.core import interleave_nd
+
+    shards = np.asarray(interleave_nd(jnp.asarray(t), factors))
+    got = np.fft.ifftn(np.asarray(folded), axes=(1, 2)) / np.prod(factors)
+    np.testing.assert_allclose(got.real, shards, atol=1e-9)
+    np.testing.assert_allclose(got.imag, 0, atol=1e-9)
+
+
+# -------------------------------------------------- even-shard ValueError
+def test_even_shard_value_error_is_documented_and_raised():
+    """The real-kind packing constraint fails LOUDLY with the documented
+    '2m | s' message (README / DESIGN.md §9) -- 1-D plans, n-D plans, and
+    the shared helper -- never as a downstream reshape error."""
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        require_even_shards(30, 6)                 # L = 5, odd
+    require_even_shards(60, 6)                     # L = 10: fine
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        CodedRFFT(s=30, m=6, n_workers=8)          # 30 % 12 != 0
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        CodedIRFFT(s=30, m=6, n_workers=8)
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        CodedRFFTN(shape=(8, 6), factors=(2, 2), n_workers=8)  # L_last = 3
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        CodedIRFFTN(shape=(8, 6), factors=(2, 2), n_workers=8)
+
+
+def test_even_shard_error_reaches_service_clients():
+    """A service request whose length breaks 2m | s surfaces the same
+    documented error instead of an opaque shape failure."""
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8))
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        svc.submit_rfft(jnp.zeros(252, jnp.float32))   # 252 % 8 != 0
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        # odd last axis: no pair packing exists at any factorization
+        svc.submit_rfftn(jnp.zeros((4, 7), jnp.float32))
+    # but a shape that only a real-kind-aware factor placement can serve
+    # IS served (plan_factors even_last_shard keeps the last shard even)
+    y = svc.submit_rfftn(jnp.zeros((4, 6), jnp.float32))
+    assert y.shape == (4, 4)
+
+
+# ------------------------------------------------------------ the service
+def test_service_rfftn_and_irfftn_kinds():
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=3))
+    rng = np.random.default_rng(1)
+    ts = [rng.normal(size=(16, 16)).astype(np.float32) for _ in range(5)]
+    for t, y in zip(ts, svc.submit_batch(
+            [jnp.asarray(t) for t in ts], kind="rfftn")):
+        want = np.fft.rfftn(t.astype(np.float64))
+        assert y.shape == want.shape
+        assert _relerr(y, want) < 1e-2
+    ys = [np.fft.rfftn(t).astype(np.complex64) for t in ts]
+    for t, z in zip(ts, svc.submit_batch(
+            [jnp.asarray(y) for y in ys], kind="irfftn")):
+        assert z.shape == t.shape
+        assert np.abs(z - t).max() < 1e-2
+    # single-request conveniences
+    y = svc.submit_rfftn(jnp.asarray(ts[0]))
+    assert _relerr(y, np.fft.rfftn(ts[0].astype(np.float64))) < 1e-2
+    z = svc.submit_irfftn(jnp.asarray(ys[0]))
+    assert np.abs(z - ts[0]).max() < 1e-2
+    # n-D kinds never take the 1-D planar kernel executors
+    assert not svc._kernel_path((16, 16), "rfftn")
+    assert not svc._kernel_path((16, 16), "irfftn")
+
+
+def test_service_mixed_kinds_with_nd():
+    """One submit_batch call mixing all five kinds buckets correctly and
+    returns every result in submission order."""
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=9))
+    rng = np.random.default_rng(2)
+    t = rng.normal(size=(16, 16)).astype(np.float32)
+    x1 = (rng.normal(size=256) + 1j * rng.normal(size=256)).astype(
+        np.complex64)
+    xr = rng.normal(size=256).astype(np.float32)
+    yh = np.fft.rfft(xr).astype(np.complex64)
+    yn = np.fft.rfftn(t).astype(np.complex64)
+    outs = svc.submit_batch(
+        [jnp.asarray(x1), jnp.asarray(t), jnp.asarray(xr),
+         jnp.asarray(yh), jnp.asarray(yn)],
+        kind=["c2c", "rfftn", "r2c", "c2r", "irfftn"])
+    assert _relerr(outs[0], np.fft.fft(x1.astype(np.complex128))) < 1e-2
+    assert _relerr(outs[1], np.fft.rfftn(t.astype(np.float64))) < 1e-2
+    assert _relerr(outs[2], np.fft.rfft(xr.astype(np.float64))) < 1e-2
+    assert np.abs(outs[3] - xr).max() < 1e-2
+    assert np.abs(outs[4] - t).max() < 1e-2
+    # five kinds -> five buckets, each charged its own arrival draw
+    assert svc.stats.batches == 5
+    assert svc.stats.requests == 5
+
+
+def test_service_rfftn_warmup_and_wire_scale():
+    """warmup() accepts shape tuples for the n-D kinds, and the straggler
+    model charges rfftn/irfftn buckets the halved real-kind wire share."""
+    svc = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=0))
+    assert svc.warmup(lengths=[(16, 16)], kinds=("rfftn", "irfftn"),
+                      buckets=(1, 2)) == 4
+    lat_r, _ = svc._simulate_arrivals(4096, kind="rfftn")
+    svc2 = FFTService(FFTServiceConfig(s=256, m=4, n_workers=8, seed=0))
+    lat_c, _ = svc2._simulate_arrivals(4096, kind="c2c")
+    # same seed, same draws: real-kind arrivals are never slower and
+    # strictly faster on average (wire share halved)
+    assert lat_r.mean() < lat_c.mean()
+
+
+# ---------------------------------------------------------------- the mesh
+def test_rfftn_under_mesh_shard_map():
+    """DistributedCodedPlan runs the n-D real plans UNCHANGED: half-size
+    packed shard shapes and per-request masks thread through both
+    shard_map stages (1-wide axis keeps it single-device; the 8-device
+    run lives in test_coded_runtime's subprocess)."""
+    from repro.distributed import DistributedCodedPlan, test_mesh
+
+    mesh = test_mesh((1,), ("workers",))
+    rng = np.random.default_rng(0)
+    t = rng.normal(size=(3, 16, 16)).astype(np.float32)
+    masks = np.stack([np.roll(np.arange(8) % 2 == 0, i) for i in range(3)])
+    plan = CodedRFFTN(shape=(16, 16), factors=(2, 2), n_workers=8)
+    d = DistributedCodedPlan(plan, mesh, masked_fill=float("nan"))
+    out = np.asarray(d.run(jnp.asarray(t), jnp.asarray(masks)))
+    want = np.fft.rfftn(t.astype(np.float64), axes=(-2, -1))
+    assert not np.isnan(out).any()
+    assert _relerr(out, want) < 1e-2
+
+    iplan = CodedIRFFTN(shape=(16, 16), factors=(2, 2), n_workers=8)
+    di = DistributedCodedPlan(iplan, mesh, masked_fill=float("nan"))
+    y = np.fft.rfftn(t, axes=(-2, -1)).astype(np.complex64)
+    back = np.asarray(di.run(jnp.asarray(y), jnp.asarray(masks)))
+    assert np.abs(back - t).max() < 1e-2
