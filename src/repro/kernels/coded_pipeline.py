@@ -37,17 +37,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.cmatmul import bcmatmul_body, cmatmul_body
-from repro.kernels.fourstep_fft import encode_fourstep_body
+from repro.kernels.fourstep_fft import _cmul_mm, encode_fourstep_body
 
 __all__ = [
     "lagrange_planes_body",
+    "subsets_from_masks_body",
     "bucket_body",
     "bucket_body_masked",
     "bucket_body_fftworker",
     "coded_fft_bucket",
     "coded_fft_bucket_masked",
+    "coded_fft_bucket_streaming",
+    "coded_fft_bucket_streaming_masked",
     "pack_real_planes",
     "half_postdecode_body",
     "rbucket_body",
@@ -142,6 +146,41 @@ def lagrange_planes_body(subsets, n):
     return ivr, ivi, ivr @ onehot, ivi @ onehot
 
 
+def subsets_from_masks_body(masks, m):
+    """First-m-available responder subsets from raw masks, Mosaic-safe.
+
+    ``masks``: ``(bq, n)`` availability planes (any dtype; nonzero =
+    responded).  Returns ``(bq, m)`` int32 -- each request's first m
+    available worker indices in ascending order, matching the host-side
+    ``ops.mask_subsets`` (stable argsort).  No sort/cumsum primitives:
+    the running count of available workers before slot k is one
+    triangular-ones matmul, selection is a rank-vs-iota one-hot, and the
+    index extraction a masked reduction -- every op lowers in a kernel
+    body, so the host ships raw masks and ZERO decode metadata.
+    Short rows (fewer than m available) mirror the argsort contract
+    exactly: slots past the responder count fill with the FIRST
+    non-responders in index order, keeping the Lagrange nodes distinct
+    (the whole-bucket kernel computes every worker spectrum anyway, so
+    such a row still decodes the true transform -- masks are simulated
+    straggler metadata, not missing data).
+    """
+    bq, n = masks.shape
+    f32 = jnp.float32
+    mk = (masks.astype(f32) > 0.5).astype(f32)
+    kp = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    tri = (kp < kk).astype(f32)                  # strictly-lower ones
+    rank = mk @ tri                              # (bq, n) availables before k
+    rank_nr = (1.0 - mk) @ tri                   # ... and unavailables
+    cnt = jnp.sum(mk, axis=1)[:, None, None]     # (bq, 1, 1) responder count
+    jj = jax.lax.broadcasted_iota(jnp.int32, (bq, m, n), 1).astype(f32)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (bq, m, n), 2).astype(f32)
+    sel = (rank[:, None, :] == jj).astype(f32) * mk[:, None, :]
+    sel += ((rank_nr[:, None, :] == jj - cnt).astype(f32)
+            * (1.0 - mk[:, None, :]))
+    return jnp.sum(sel * kidx, axis=2).astype(jnp.int32)
+
+
 def bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
                 twr, twi, fmr, fmi):
     """The full pipeline on one (bq, s) block of requests.
@@ -187,16 +226,19 @@ def bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
     return outr, outi
 
 
-def bucket_body_masked(xr, xi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+def bucket_body_masked(xr, xi, masks, gr, gi, far, fai, wr, wi, fbr, fbi,
                        twr, twi, fmr, fmi):
     """:func:`bucket_body` with the decode matrices built IN the body.
 
-    Takes each request's ``(m,)`` responder subset instead of
-    precomputed decode planes: the Lagrange weights are formed in VMEM
-    (DESIGN.md §8) and contracted immediately -- the ``(bq, m, N)``
-    matrices never exist outside the kernel's working set.
+    Takes each request's raw ``(n,)`` responder mask instead of
+    precomputed decode planes: the first-m subset is selected in-kernel
+    (:func:`subsets_from_masks_body`) and the Lagrange weights formed in
+    VMEM (DESIGN.md §8) and contracted immediately -- neither the subset
+    indices nor the ``(bq, m, N)`` matrices exist outside the kernel's
+    working set.
     """
-    n = gr.shape[0]
+    n, m = gr.shape
+    subsets = subsets_from_masks_body(masks, m)
     _, _, dr, di = lagrange_planes_body(subsets, n)
     return bucket_body(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
                        twr, twi, fmr, fmi)
@@ -353,11 +395,12 @@ def rbucket_body(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
     return half_postdecode_body(hr, hi, swr, swi, twr, twi, fhr, fhi, s)
 
 
-def rbucket_body_masked(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+def rbucket_body_masked(xr, masks, gr, gi, far, fai, wr, wi, fbr, fbi,
                         swr, swi, twr, twi, fhr, fhi, s):
-    """:func:`rbucket_body` with in-VMEM Lagrange decode matrices (cf.
-    :func:`bucket_body_masked`)."""
-    n = gr.shape[0]
+    """:func:`rbucket_body` with in-kernel subset selection + in-VMEM
+    Lagrange decode matrices (cf. :func:`bucket_body_masked`)."""
+    n, m = gr.shape
+    subsets = subsets_from_masks_body(masks, m)
     _, _, dr, di = lagrange_planes_body(subsets, n)
     return rbucket_body(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
                         swr, swi, twr, twi, fhr, fhi, s)
@@ -451,12 +494,12 @@ def coded_rfft_bucket(xr, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
 
 
 def _rbucket_kernel_masked(s):
-    def kernel(xr_ref, sub_ref, gr_ref, gi_ref,
+    def kernel(xr_ref, mk_ref, gr_ref, gi_ref,
                far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
                swr_ref, swi_ref, twr_ref, twi_ref, fhr_ref, fhi_ref,
                or_ref, oi_ref):
         or_ref[...], oi_ref[...] = rbucket_body_masked(
-            xr_ref[...], sub_ref[...], gr_ref[...], gi_ref[...],
+            xr_ref[...], mk_ref[...], gr_ref[...], gi_ref[...],
             far_ref[...], fai_ref[...], wr_ref[...], wi_ref[...],
             fbr_ref[...], fbi_ref[...], swr_ref[...], swi_ref[...],
             twr_ref[...], twi_ref[...], fhr_ref[...], fhi_ref[...], s)
@@ -464,12 +507,12 @@ def _rbucket_kernel_masked(s):
     return kernel
 
 
-def coded_rfft_bucket_masked(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+def coded_rfft_bucket_masked(xr, masks, gr, gi, far, fai, wr, wi, fbr, fbi,
                              swr, swi, twr, twi, fhr, fhi, s, *,
                              block_q: int = 1, interpret: bool = False):
-    """:func:`coded_rfft_bucket` taking ``(q, m)`` responder subsets in
-    place of decode planes -- the Lagrange weights are built in VMEM per
-    grid step (DESIGN.md §8)."""
+    """:func:`coded_rfft_bucket` taking raw ``(q, N)`` responder masks in
+    place of decode planes -- subset selection AND the Lagrange weights
+    run in VMEM per grid step (DESIGN.md §8)."""
     q, s_ = xr.shape
     n, m = gr.shape
     a = far.shape[0]
@@ -479,9 +522,10 @@ def coded_rfft_bucket_masked(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
     sh = s // 2 + 1
     rows = m // 2 + 1
     block_q = max(1, min(block_q, q))
+    masks = masks.astype(xr.dtype)
     spec_x = pl.BlockSpec((block_q, s), lambda i: (i, 0))
     spec_o = pl.BlockSpec((block_q, sh), lambda i: (i, 0))
-    spec_sub = pl.BlockSpec((block_q, m), lambda i: (i, 0))
+    spec_mk = pl.BlockSpec((block_q, n), lambda i: (i, 0))
     spec_g = pl.BlockSpec((n, m), lambda i: (0, 0))
     spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
     spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
@@ -496,14 +540,14 @@ def coded_rfft_bucket_masked(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
     return pl.pallas_call(
         _rbucket_kernel_masked(s),
         grid=(pl.cdiv(q, block_q),),
-        in_specs=[spec_x, spec_sub, spec_g, spec_g,
+        in_specs=[spec_x, spec_mk, spec_g, spec_g,
                   spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb,
                   spec_sw, spec_sw, spec_tw, spec_tw, spec_fh, spec_fh],
         out_specs=[spec_o, spec_o],
         out_shape=out_shape,
         interpret=interpret,
         name="coded_rfft_bucket_masked",
-    )(xr, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+    )(xr, masks, gr, gi, far, fai, wr, wi, fbr, fbi,
       swr, swi, twr, twi, fhr, fhi)
 
 
@@ -599,11 +643,12 @@ def irbucket_body(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
     return ir_unpack_body(hr, hi)
 
 
-def irbucket_body_masked(yr, yi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+def irbucket_body_masked(yr, yi, masks, gr, gi, far, fai, wr, wi, fbr, fbi,
                          fpr, fpi, ctwr, ctwi, pwr, pwi, s):
-    """:func:`irbucket_body` with in-VMEM Lagrange decode matrices (cf.
-    :func:`bucket_body_masked`)."""
-    n = gr.shape[0]
+    """:func:`irbucket_body` with in-kernel subset selection + in-VMEM
+    Lagrange decode matrices (cf. :func:`bucket_body_masked`)."""
+    n, m = gr.shape
+    subsets = subsets_from_masks_body(masks, m)
     _, _, dr, di = lagrange_planes_body(subsets, n)
     return irbucket_body(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
                          fpr, fpi, ctwr, ctwi, pwr, pwi, s)
@@ -647,12 +692,12 @@ def _irbucket_kernel(s):
     return kernel
 
 
-def _irbucket_specs(s, m, n, a, b, block_q, subsets: bool):
+def _irbucket_specs(s, m, n, a, b, block_q, masked: bool):
     ell = a * b * 2
     sh = s // 2 + 1
     spec_y = pl.BlockSpec((block_q, sh), lambda i: (i, 0))
     spec_o = pl.BlockSpec((block_q, s), lambda i: (i, 0))
-    decode = ([pl.BlockSpec((block_q, m), lambda i: (i, 0))] if subsets
+    decode = ([pl.BlockSpec((block_q, n), lambda i: (i, 0))] if masked
               else [pl.BlockSpec((block_q, m, n), lambda i: (i, 0, 0))] * 2)
     shared = [
         pl.BlockSpec((n, m), lambda i: (0, 0)),       # gr
@@ -692,7 +737,7 @@ def coded_irfft_bucket(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
     a = far.shape[0]
     b = fbr.shape[0]
     block_q = max(1, min(block_q, q))
-    in_specs, spec_o = _irbucket_specs(s, m, n, a, b, block_q, subsets=False)
+    in_specs, spec_o = _irbucket_specs(s, m, n, a, b, block_q, masked=False)
     return pl.pallas_call(
         _irbucket_kernel(s),
         grid=(pl.cdiv(q, block_q),),
@@ -706,12 +751,12 @@ def coded_irfft_bucket(yr, yi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
 
 
 def _irbucket_kernel_masked(s):
-    def kernel(yr_ref, yi_ref, sub_ref, gr_ref, gi_ref,
+    def kernel(yr_ref, yi_ref, mk_ref, gr_ref, gi_ref,
                far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
                fpr_ref, fpi_ref, ctwr_ref, ctwi_ref, pwr_ref, pwi_ref,
                o_ref):
         o_ref[...] = irbucket_body_masked(
-            yr_ref[...], yi_ref[...], sub_ref[...],
+            yr_ref[...], yi_ref[...], mk_ref[...],
             gr_ref[...], gi_ref[...], far_ref[...], fai_ref[...],
             wr_ref[...], wi_ref[...], fbr_ref[...], fbi_ref[...],
             fpr_ref[...], fpi_ref[...], ctwr_ref[...], ctwi_ref[...],
@@ -720,19 +765,20 @@ def _irbucket_kernel_masked(s):
     return kernel
 
 
-def coded_irfft_bucket_masked(yr, yi, subsets, gr, gi, far, fai, wr, wi,
+def coded_irfft_bucket_masked(yr, yi, masks, gr, gi, far, fai, wr, wi,
                               fbr, fbi, fpr, fpi, ctwr, ctwi, pwr, pwi, s, *,
                               block_q: int = 1, interpret: bool = False):
-    """:func:`coded_irfft_bucket` taking ``(q, m)`` responder subsets in
-    place of decode planes -- the Lagrange weights are built in VMEM per
-    grid step (DESIGN.md §8), completing the device-resident path for all
-    four kinds."""
+    """:func:`coded_irfft_bucket` taking raw ``(q, N)`` responder masks in
+    place of decode planes -- subset selection and the Lagrange weights are
+    built in VMEM per grid step (DESIGN.md §8), completing the
+    device-resident path for all four kinds."""
     q, _ = yr.shape
     n, m = gr.shape
     a = far.shape[0]
     b = fbr.shape[0]
     block_q = max(1, min(block_q, q))
-    in_specs, spec_o = _irbucket_specs(s, m, n, a, b, block_q, subsets=True)
+    masks = masks.astype(yr.dtype)
+    in_specs, spec_o = _irbucket_specs(s, m, n, a, b, block_q, masked=True)
     return pl.pallas_call(
         _irbucket_kernel_masked(s),
         grid=(pl.cdiv(q, block_q),),
@@ -741,7 +787,7 @@ def coded_irfft_bucket_masked(yr, yi, subsets, gr, gi, far, fai, wr, wi,
         out_shape=jax.ShapeDtypeStruct((q, s), yr.dtype),
         interpret=interpret,
         name="coded_irfft_bucket_masked",
-    )(yr, yi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi,
+    )(yr, yi, masks, gr, gi, far, fai, wr, wi, fbr, fbi,
       fpr, fpi, ctwr, ctwi, pwr, pwi)
 
 
@@ -798,26 +844,26 @@ def coded_fft_bucket(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi,
     )(xr, xi, dr, di, gr, gi, far, fai, wr, wi, fbr, fbi, twr, twi, fmr, fmi)
 
 
-def _bucket_kernel_masked(xr_ref, xi_ref, sub_ref, gr_ref, gi_ref,
+def _bucket_kernel_masked(xr_ref, xi_ref, mk_ref, gr_ref, gi_ref,
                           far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
                           twr_ref, twi_ref, fmr_ref, fmi_ref, or_ref, oi_ref):
     or_ref[...], oi_ref[...] = bucket_body_masked(
-        xr_ref[...], xi_ref[...], sub_ref[...],
+        xr_ref[...], xi_ref[...], mk_ref[...],
         gr_ref[...], gi_ref[...], far_ref[...], fai_ref[...],
         wr_ref[...], wi_ref[...], fbr_ref[...], fbi_ref[...],
         twr_ref[...], twi_ref[...], fmr_ref[...], fmi_ref[...])
 
 
-def coded_fft_bucket_masked(xr, xi, subsets, gr, gi, far, fai, wr, wi,
+def coded_fft_bucket_masked(xr, xi, masks, gr, gi, far, fai, wr, wi,
                             fbr, fbi, twr, twi, fmr, fmi, *, block_q: int = 1,
                             interpret: bool = False):
-    """:func:`coded_fft_bucket` taking ``(q, m)`` responder subsets in place
-    of the ``(q, m, N)`` decode planes.
+    """:func:`coded_fft_bucket` taking raw ``(q, N)`` responder masks in
+    place of the ``(q, m, N)`` decode planes.
 
-    The per-request Lagrange decode matrices are built INSIDE the kernel
-    (VMEM-resident, DESIGN.md §8), so the host ships two int32 words per
-    request per shard instead of ``2 * m * N`` f32 matrix entries -- and no
-    host inversion or LRU exists at all.
+    Subset selection (first-m-available) AND the per-request Lagrange
+    decode matrices run INSIDE the kernel (VMEM-resident, DESIGN.md §8),
+    so the host ships the availability bits it already has -- zero decode
+    metadata, no host inversion or LRU at all.
     """
     q, s = xr.shape
     n, m = gr.shape
@@ -825,8 +871,9 @@ def coded_fft_bucket_masked(xr, xi, subsets, gr, gi, far, fai, wr, wi,
     b = fbr.shape[0]
     ell = a * b
     block_q = max(1, min(block_q, q))
+    masks = masks.astype(xr.dtype)
     spec_x = pl.BlockSpec((block_q, s), lambda i: (i, 0))
-    spec_sub = pl.BlockSpec((block_q, m), lambda i: (i, 0))
+    spec_mk = pl.BlockSpec((block_q, n), lambda i: (i, 0))
     spec_g = pl.BlockSpec((n, m), lambda i: (0, 0))
     spec_fa = pl.BlockSpec((a, a), lambda i: (0, 0))
     spec_w = pl.BlockSpec((a, b), lambda i: (0, 0))
@@ -840,11 +887,308 @@ def coded_fft_bucket_masked(xr, xi, subsets, gr, gi, far, fai, wr, wi,
     return pl.pallas_call(
         _bucket_kernel_masked,
         grid=(pl.cdiv(q, block_q),),
-        in_specs=[spec_x, spec_x, spec_sub, spec_g, spec_g,
+        in_specs=[spec_x, spec_x, spec_mk, spec_g, spec_g,
                   spec_fa, spec_fa, spec_w, spec_w, spec_fb, spec_fb,
                   spec_tw, spec_tw, spec_fm, spec_fm],
         out_specs=[spec_x, spec_x],
         out_shape=out_shape,
         interpret=interpret,
         name="coded_fft_bucket_masked",
-    )(xr, xi, subsets, gr, gi, far, fai, wr, wi, fbr, fbi, twr, twi, fmr, fmi)
+    )(xr, xi, masks, gr, gi, far, fai, wr, wi, fbr, fbi, twr, twi, fmr, fmi)
+
+
+# ===================== streaming bucket: one launch beyond the VMEM budget
+#
+# The fused bucket kernel needs the whole (bq, s) working set VMEM-resident;
+# past ~1M elements the ops layer used to FALL BACK to the multi-launch
+# stage path.  The streaming kernel keeps the ONE-launch contract for
+# arbitrarily large (s, m): payload and the inter-stage scratch live in HBM
+# (ANY memory space) and the kernel hand-rolls double-buffered DMA over
+# column tiles (stage 1+2, column-local) then row tiles (stage 3 + encode +
+# decode + recombine, all row-local on the scrambled payload), staging tile
+# k+1 while tile k computes.  The input is VIEWED as (q, A, B, m) -- the
+# interleave relabeling composed with the four-step matrix view is still a
+# free reshape of the flat request -- and the output is written NATURALLY
+# ordered as (q, m, B, A) via an in-VMEM tile transpose, so no XLA
+# pre/post-pass brackets the launch.  Only the c2c bucket streams: the r2c
+# split butterfly pairs bin p with n2-p, which is not column-local, so the
+# real kinds keep the stage fallback for over-budget shapes.
+
+
+def _streaming_bucket_kernel(masked, nbt, nat, block_q, block_a, block_b,
+                             *refs):
+    xr_hbm, xi_hbm = refs[:2]
+    rest = refs[2:]
+    if masked:
+        mk_ref = rest[0]
+        rest = rest[1:]
+    else:
+        dr_ref, di_ref = rest[:2]
+        rest = rest[2:]
+    (gr_ref, gi_ref, far_ref, fai_ref, wr_ref, wi_ref, fbr_ref, fbi_ref,
+     twr_ref, twi_ref, fmr_ref, fmi_ref) = rest[:12]
+    (or_hbm, oi_hbm, t1r_hbm, t1i_hbm,
+     abr, abi, t1s_r, t1s_i, bbr, bbi, obr, obi,
+     sem_a, sem_t1, sem_b, sem_o) = rest[12:]
+
+    n, m = gr_ref.shape
+    a = far_ref.shape[0]
+    b = fbr_ref.shape[0]
+    bq = block_q
+    q0 = pl.program_id(0) * block_q
+
+    # per-request decode planes, once per batch block (tiny: (bq, m, n))
+    if masked:
+        subsets = subsets_from_masks_body(mk_ref[...], m)
+        _, _, dr, di = lagrange_planes_body(subsets, n)
+    else:
+        dr, di = dr_ref[...], di_ref[...]
+
+    # ---- phase A: stage 1 + twiddle over B-column tiles -> t1 HBM scratch
+    def a_copies(j, slot):
+        cols = pl.ds(j * block_b, block_b)
+        return (
+            pltpu.make_async_copy(
+                xr_hbm.at[pl.ds(q0, bq), :, cols, :], abr.at[slot],
+                sem_a.at[slot, 0]),
+            pltpu.make_async_copy(
+                xi_hbm.at[pl.ds(q0, bq), :, cols, :], abi.at[slot],
+                sem_a.at[slot, 1]),
+        )
+
+    for c in a_copies(0, 0):
+        c.start()
+    far = far_ref[...]
+    fai = fai_ref[...]
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+
+    def phase_a(j, carry):
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < nbt)
+        def _():
+            for c in a_copies(j + 1, jax.lax.rem(j + 1, 2)):
+                c.start()
+
+        for c in a_copies(j, slot):
+            c.wait()
+        # column DFT per message shard: contract A, (bq, b-tile, m) folded
+        mr = abr[slot].transpose(1, 0, 2, 3).reshape(a, bq * block_b * m)
+        mi = abi[slot].transpose(1, 0, 2, 3).reshape(a, bq * block_b * m)
+        t1r, t1i = _cmul_mm(far, fai, mr, mi)
+        t1r = t1r.reshape(a, bq, block_b, m)
+        t1i = t1i.reshape(a, bq, block_b, m)
+        w_r = jax.lax.dynamic_slice_in_dim(
+            wr, j * block_b, block_b, 1)[:, None, :, None]
+        w_i = jax.lax.dynamic_slice_in_dim(
+            wi, j * block_b, block_b, 1)[:, None, :, None]
+        t2r = t1r * w_r - t1i * w_i
+        t2i = t1r * w_i + t1i * w_r
+        t1s_r[...] = t2r.transpose(1, 0, 2, 3)
+        t1s_i[...] = t2i.transpose(1, 0, 2, 3)
+        cols = pl.ds(j * block_b, block_b)
+        outs = (
+            pltpu.make_async_copy(
+                t1s_r, t1r_hbm.at[pl.ds(q0, bq), :, cols, :], sem_t1.at[0]),
+            pltpu.make_async_copy(
+                t1s_i, t1i_hbm.at[pl.ds(q0, bq), :, cols, :], sem_t1.at[1]),
+        )
+        for c in outs:
+            c.start()
+        for c in outs:
+            c.wait()
+        return carry
+
+    jax.lax.fori_loop(0, nbt, phase_a, 0)
+
+    # ---- phase B: stage 3 + encode + decode + recombine over A-row tiles
+    def b_copies(i, slot):
+        rows = pl.ds(i * block_a, block_a)
+        return (
+            pltpu.make_async_copy(
+                t1r_hbm.at[pl.ds(q0, bq), rows, :, :], bbr.at[slot],
+                sem_b.at[slot, 0]),
+            pltpu.make_async_copy(
+                t1i_hbm.at[pl.ds(q0, bq), rows, :, :], bbi.at[slot],
+                sem_b.at[slot, 1]),
+        )
+
+    for c in b_copies(0, 0):
+        c.start()
+    gr = gr_ref[...]
+    gi = gi_ref[...]
+    fbr = fbr_ref[...]
+    fbi = fbi_ref[...]
+    twr = twr_ref[...]
+    twi = twi_ref[...]
+    fmr = fmr_ref[...]
+    fmi = fmi_ref[...]
+    tile = block_a * b
+
+    def phase_b(i, carry):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < nat)
+        def _():
+            for c in b_copies(i + 1, jax.lax.rem(i + 1, 2)):
+                c.start()
+
+        for c in b_copies(i, slot):
+            c.wait()
+        # row DFT per shard: contract B with (bq, a-tile, m) folded in rows
+        tr = bbr[slot].transpose(0, 1, 3, 2).reshape(bq * block_a * m, b)
+        ti = bbi[slot].transpose(0, 1, 3, 2).reshape(bq * block_a * m, b)
+        s3r, s3i = _cmul_mm(tr, ti, fbr, fbi)
+        # MDS encode: contract the shard axis with G
+        s3r = s3r.reshape(bq, block_a, m, b).transpose(2, 0, 1, 3).reshape(m, -1)
+        s3i = s3i.reshape(bq, block_a, m, b).transpose(2, 0, 1, 3).reshape(m, -1)
+        er, ei = _cmul_mm(gr, gi, s3r, s3i)
+        er = er.reshape(n, bq, tile).transpose(1, 0, 2)
+        ei = ei.reshape(n, bq, tile).transpose(1, 0, 2)
+        # per-request decode (scrambled payload order carried through)
+        hr, hi = bcmatmul_body(dr, di, er, ei)
+        # recombine: the scrambled payload slice [c*B+d for c in tile i] is
+        # CONTIGUOUS, so the pre-scrambled twiddle slices per tile
+        tw_r = jax.lax.dynamic_slice_in_dim(twr, i * tile, tile, 1)[None]
+        tw_i = jax.lax.dynamic_slice_in_dim(twi, i * tile, tile, 1)[None]
+        ur = hr * tw_r - hi * tw_i
+        ui = hr * tw_i + hi * tw_r
+        ur = ur.transpose(1, 0, 2).reshape(m, bq * tile)
+        ui = ui.transpose(1, 0, 2).reshape(m, bq * tile)
+        outr, outi = _cmul_mm(fmr, fmi, ur, ui)
+        # natural order: out[j, q, c, d] -> output[q, j, d, c-tile]
+        obr[...] = outr.reshape(m, bq, block_a, b).transpose(1, 0, 3, 2)
+        obi[...] = outi.reshape(m, bq, block_a, b).transpose(1, 0, 3, 2)
+        cols = pl.ds(i * block_a, block_a)
+        outs = (
+            pltpu.make_async_copy(
+                obr, or_hbm.at[pl.ds(q0, bq), :, :, cols], sem_o.at[0]),
+            pltpu.make_async_copy(
+                obi, oi_hbm.at[pl.ds(q0, bq), :, :, cols], sem_o.at[1]),
+        )
+        for c in outs:
+            c.start()
+        for c in outs:
+            c.wait()
+        return carry
+
+    jax.lax.fori_loop(0, nat, phase_b, 0)
+
+
+def _even_divisor(n: int, cap: int) -> int:
+    d = max(1, min(cap, n))
+    while n % d:
+        d -= 1
+    return d
+
+
+def _streaming_bucket_call(masked, xr, xi, decode_args, gr, gi, far, fai,
+                           wr, wi, fbr, fbi, twr, twi, fmr, fmi,
+                           block_q, block_a, block_b, interpret, name):
+    q, s = xr.shape
+    n, m = gr.shape
+    a = far.shape[0]
+    b = fbr.shape[0]
+    ell = a * b
+    f32 = xr.dtype
+    # interleave + matrix view in one free reshape: x4[q, a, b, i] = M_i[a, b]
+    x4r = xr.reshape(q, a, b, m)
+    x4i = xi.reshape(q, a, b, m)
+    block_q = max(1, min(block_q, q))
+    pad = (-q) % block_q
+    if pad:  # DMA tile sizes are static: round the batch up
+        x4r = jnp.concatenate([x4r, jnp.zeros((pad, a, b, m), f32)])
+        x4i = jnp.concatenate([x4i, jnp.zeros((pad, a, b, m), f32)])
+        if masked:  # all-available filler keeps the Lagrange nodes distinct
+            decode_args = [jnp.concatenate(
+                [decode_args[0], jnp.ones((pad, n), f32)])]
+        else:
+            decode_args = [
+                jnp.concatenate([d, jnp.zeros((pad, m, n), f32)])
+                for d in decode_args]
+    qp = q + pad
+    block_a = _even_divisor(a, block_a)
+    block_b = _even_divisor(b, block_b)
+    nat = a // block_a
+    nbt = b // block_b
+
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    def vspec(*shape):
+        return pl.BlockSpec(shape, lambda i, r=len(shape): (0,) * r)
+
+    if masked:
+        decode_specs = [pl.BlockSpec((block_q, n), lambda i: (i, 0))]
+    else:
+        decode_specs = [
+            pl.BlockSpec((block_q, m, n), lambda i: (i, 0, 0))] * 2
+    in_specs = [any_spec, any_spec, *decode_specs,
+                vspec(n, m), vspec(n, m), vspec(a, a), vspec(a, a),
+                vspec(a, b), vspec(a, b), vspec(b, b), vspec(b, b),
+                vspec(m, ell), vspec(m, ell), vspec(m, m), vspec(m, m)]
+    out_shape = [
+        jax.ShapeDtypeStruct((qp, m, b, a), f32),   # natural-order output
+        jax.ShapeDtypeStruct((qp, m, b, a), f32),
+        jax.ShapeDtypeStruct((qp, a, b, m), f32),   # t1 HBM scratch
+        jax.ShapeDtypeStruct((qp, a, b, m), f32),
+    ]
+    scratch = [
+        pltpu.VMEM((2, block_q, a, block_b, m), f32),   # phase A in (x2)
+        pltpu.VMEM((2, block_q, a, block_b, m), f32),
+        pltpu.VMEM((block_q, a, block_b, m), f32),      # phase A staging
+        pltpu.VMEM((block_q, a, block_b, m), f32),
+        pltpu.VMEM((2, block_q, block_a, b, m), f32),   # phase B in (x2)
+        pltpu.VMEM((2, block_q, block_a, b, m), f32),
+        pltpu.VMEM((block_q, m, b, block_a), f32),      # phase B staging
+        pltpu.VMEM((block_q, m, b, block_a), f32),
+        pltpu.SemaphoreType.DMA((2, 2)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2, 2)),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    outs = pl.pallas_call(
+        functools.partial(_streaming_bucket_kernel, masked, nbt, nat,
+                          block_q, block_a, block_b),
+        grid=(qp // block_q,),
+        in_specs=in_specs,
+        out_specs=[any_spec, any_spec, any_spec, any_spec],
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+        name=name,
+    )(x4r, x4i, *decode_args, gr, gi, far, fai, wr, wi, fbr, fbi,
+      twr, twi, fmr, fmi)
+    return outs[0][:q].reshape(q, s), outs[1][:q].reshape(q, s)
+
+
+def coded_fft_bucket_streaming(xr, xi, dr, di, gr, gi, far, fai, wr, wi,
+                               fbr, fbi, twr, twi, fmr, fmi, *,
+                               block_q: int = 1, block_a: int = 256,
+                               block_b: int = 256, interpret: bool = False):
+    """One-launch streaming c2c bucket for shapes beyond the VMEM budget.
+
+    Same contract as :func:`coded_fft_bucket` (including the pre-scrambled
+    ``twr/twi``) but only (block_q, A, block_b, m) / (block_q, block_a, B,
+    m) tiles are VMEM-resident, double-buffered against HBM.
+    """
+    return _streaming_bucket_call(
+        False, xr, xi, [dr, di], gr, gi, far, fai, wr, wi, fbr, fbi,
+        twr, twi, fmr, fmi, block_q, block_a, block_b, interpret,
+        "coded_fft_bucket_streaming")
+
+
+def coded_fft_bucket_streaming_masked(xr, xi, masks, gr, gi, far, fai, wr, wi,
+                                      fbr, fbi, twr, twi, fmr, fmi, *,
+                                      block_q: int = 1, block_a: int = 256,
+                                      block_b: int = 256,
+                                      interpret: bool = False):
+    """:func:`coded_fft_bucket_streaming` taking raw ``(q, N)`` responder
+    masks: in-kernel subset selection + Lagrange decode (DESIGN.md §8), so
+    the biggest buckets keep both the one-launch AND the zero-metadata
+    contracts."""
+    masks = masks.astype(xr.dtype)
+    return _streaming_bucket_call(
+        True, xr, xi, [masks], gr, gi, far, fai, wr, wi, fbr, fbi,
+        twr, twi, fmr, fmi, block_q, block_a, block_b, interpret,
+        "coded_fft_bucket_streaming_masked")

@@ -34,6 +34,16 @@ Kernels:
   MESSAGE shards (not the ``N`` coded ones — an N/m flop saving) and
   applies the generator contraction in VMEM.  Coded shards never
   round-trip through HBM between encode and worker compute.
+* ``multistep_fused`` — the mixed-radix generalization: ``L = f1 * ... * fk``
+  with one dense-DFT matmul + twiddle per factor.  Flops per element scale
+  with ``sum(f_i)`` instead of ``A + B = 2*sqrt(L)``, so deeper plans win at
+  large L; the autotuner picks the plan per backend (autotune.py).
+* ``fourstep_streaming`` — one-launch four-step for shapes whose full
+  (A, B) matrix exceeds VMEM: the kernel keeps x/out/t1 in HBM (ANY memory
+  space) and hand-rolls double-buffered DMA over column tiles (stage 1+2)
+  then row tiles (stage 3), staging tile k+1 while tile k computes.  The
+  output is written in NATURAL order (batch, B, A) via an in-VMEM tile
+  transpose, so no XLA unscramble pass follows.
 
 The jit wrappers with layout pack/unpack live in ops.py; the jnp oracles in
 ref.py.
@@ -46,6 +56,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "fourstep_body",
@@ -56,6 +67,9 @@ __all__ = [
     "fourstep_stage2",
     "encode_fourstep_body",
     "encode_fourstep_fused",
+    "multistep_body",
+    "multistep_fused",
+    "fourstep_streaming",
 ]
 
 
@@ -286,3 +300,296 @@ def fourstep_stage2(tr, ti, fbr, fbi, *, block_q: int = 1, block_a=256,
         interpret=interpret,
         name="fourstep_fft_stage2",
     )(tr, ti, fbr, fbi)
+
+
+# --------------------------------------------------------------------------
+# mixed-radix (multistep) four-step
+# --------------------------------------------------------------------------
+def _parse_stage_planes(factors, planes):
+    """Group the flat plane list into per-stage (fr, fi, twr, twi) tuples.
+
+    The flat order is per stage: DFT planes (f, f), then — for every stage
+    but the last, whose ``rest`` is 1 and whose twiddle is identically
+    one — twiddle planes (f, rest).
+    """
+    stages = []
+    idx = 0
+    for i, _ in enumerate(factors):
+        fr, fi = planes[idx], planes[idx + 1]
+        idx += 2
+        twr = twi = None
+        if i + 1 < len(factors):
+            twr, twi = planes[idx], planes[idx + 1]
+            idx += 2
+        stages.append((fr, fi, twr, twi))
+    return stages
+
+
+def multistep_body(xr, xi, stages):
+    """Mixed-radix four-step on one (bq, L) block.
+
+    ``stages``: per-factor (fr, fi, twr, twi) planes from
+    :func:`_parse_stage_planes`; ``fr`` is the dense (f, f) DFT matrix and
+    ``twr`` the (f, rest) twiddle (None on the last stage).  Each stage is
+    the classic four-step stage 1 applied recursively: split the remaining
+    length as ``f * rest``, contract ``f`` with one dense matmul (batch and
+    already-processed digits folded into the columns), twiddle, and push the
+    new digit onto the lead axis.  After all k stages the result is the
+    scrambled spectrum with digit order (bq, c1, ..., ck) and
+    ``X[c1 + f1*c2 + f1*f2*c3 + ...]`` — for two factors this is exactly
+    :func:`fourstep_body`'s ``out[c, d] = X[c + d*A]``.  The ops layer
+    unscrambles with one reversed-axes transpose.
+    """
+    bq, total = xr.shape
+    lead = bq
+    tr, ti = xr, xi
+    for fr, fi, twr, twi in stages:
+        f = fr.shape[0]
+        rest = total // f
+        mr = tr.reshape(lead, f, rest).transpose(1, 0, 2).reshape(f, lead * rest)
+        mi = ti.reshape(lead, f, rest).transpose(1, 0, 2).reshape(f, lead * rest)
+        t1r, t1i = _cmul_mm(fr, fi, mr, mi)
+        t1r = t1r.reshape(f, lead, rest)
+        t1i = t1i.reshape(f, lead, rest)
+        if twr is not None:
+            wr_ = twr[:, None, :]
+            wi_ = twi[:, None, :]
+            t1r, t1i = t1r * wr_ - t1i * wi_, t1r * wi_ + t1i * wr_
+        tr = t1r.transpose(1, 0, 2).reshape(lead * f, rest)
+        ti = t1i.transpose(1, 0, 2).reshape(lead * f, rest)
+        lead *= f
+        total = rest
+    return tr.reshape(bq, -1), ti.reshape(bq, -1)
+
+
+def _multistep_kernel(factors, *refs):
+    n_planes = 4 * len(factors) - 2
+    xr_ref, xi_ref = refs[:2]
+    plane_refs = refs[2:2 + n_planes]
+    or_ref, oi_ref = refs[2 + n_planes:]
+    stages = _parse_stage_planes(factors, [r[...] for r in plane_refs])
+    or_ref[...], oi_ref[...] = multistep_body(xr_ref[...], xi_ref[...], stages)
+
+
+def multistep_fused(xr, xi, planes, factors, *, block_q: int = 1,
+                    interpret=False):
+    """Batched mixed-radix four-step FFT (one launch, k dense stages).
+
+    ``xr, xi``: (batch, L) planes of x in natural order; ``planes``: flat
+    per-stage DFT/twiddle planes (see :func:`_parse_stage_planes`);
+    ``factors``: the radix plan with ``prod(factors) == L``.  Returns
+    (batch, L) planes in the multistep scrambled digit order.
+    """
+    batch, ell = xr.shape
+    block_q = max(1, min(block_q, batch))
+    spec_x = pl.BlockSpec((block_q, ell), lambda i: (i, 0))
+    in_specs = [spec_x, spec_x]
+    for p in planes:
+        in_specs.append(
+            pl.BlockSpec(p.shape, lambda i, r=p.ndim: (0,) * r))
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, ell), xr.dtype),
+        jax.ShapeDtypeStruct((batch, ell), xr.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_multistep_kernel, tuple(factors)),
+        grid=(pl.cdiv(batch, block_q),),
+        in_specs=in_specs,
+        out_specs=[spec_x, spec_x],
+        out_shape=out_shape,
+        interpret=interpret,
+        name="fourstep_fft_multistep",
+    )(xr, xi, *planes)
+
+
+# --------------------------------------------------------------------------
+# streaming four-step: one launch with double-buffered HBM<->VMEM DMA
+# --------------------------------------------------------------------------
+def _streaming_kernel(nbt, nat, block_q, block_a, block_b,
+                      xr_hbm, xi_hbm, far_ref, fai_ref, wr_ref, wi_ref,
+                      fbr_ref, fbi_ref,
+                      or_hbm, oi_hbm, t1r_hbm, t1i_hbm,
+                      abr, abi, t1s_r, t1s_i, bbr, bbi, obr, obi,
+                      sem_a, sem_t1, sem_b, sem_o):
+    """Two sequential phases inside ONE kernel launch.
+
+    Phase A walks B-column tiles (stage 1 + twiddle are column-local):
+    DMA x tile in, compute, DMA the t1 tile out to an HBM scratch.  Phase B
+    walks A-row tiles (stage 3 is row-local): DMA t1 tile in, contract F_B,
+    transpose the tile in VMEM and DMA it to the NATURAL-order output
+    (batch, B, A).  Input DMAs are double-buffered — tile k+1 streams while
+    tile k computes; the (smaller) result write-backs block, which keeps a
+    single staging buffer per phase and still hides the dominant read
+    latency.  Phase B only starts after every phase-A write-back has waited,
+    so the t1 scratch is consistent without an explicit barrier.
+    """
+    q0 = pl.program_id(0) * block_q
+
+    def a_copies(j, slot):
+        cols = pl.ds(j * block_b, block_b)
+        return (
+            pltpu.make_async_copy(
+                xr_hbm.at[pl.ds(q0, block_q), :, cols], abr.at[slot],
+                sem_a.at[slot, 0]),
+            pltpu.make_async_copy(
+                xi_hbm.at[pl.ds(q0, block_q), :, cols], abi.at[slot],
+                sem_a.at[slot, 1]),
+        )
+
+    for c in a_copies(0, 0):
+        c.start()
+    far = far_ref[...]
+    fai = fai_ref[...]
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+
+    def phase_a(j, carry):
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < nbt)
+        def _():
+            for c in a_copies(j + 1, jax.lax.rem(j + 1, 2)):
+                c.start()
+
+        for c in a_copies(j, slot):
+            c.wait()
+        tr, ti = stage1_body(
+            abr[slot], abi[slot], far, fai,
+            jax.lax.dynamic_slice_in_dim(wr, j * block_b, block_b, 1),
+            jax.lax.dynamic_slice_in_dim(wi, j * block_b, block_b, 1))
+        t1s_r[...] = tr
+        t1s_i[...] = ti
+        cols = pl.ds(j * block_b, block_b)
+        outs = (
+            pltpu.make_async_copy(
+                t1s_r, t1r_hbm.at[pl.ds(q0, block_q), :, cols],
+                sem_t1.at[0]),
+            pltpu.make_async_copy(
+                t1s_i, t1i_hbm.at[pl.ds(q0, block_q), :, cols],
+                sem_t1.at[1]),
+        )
+        for c in outs:
+            c.start()
+        for c in outs:
+            c.wait()
+        return carry
+
+    jax.lax.fori_loop(0, nbt, phase_a, 0)
+
+    def b_copies(i, slot):
+        rows = pl.ds(i * block_a, block_a)
+        return (
+            pltpu.make_async_copy(
+                t1r_hbm.at[pl.ds(q0, block_q), rows, :], bbr.at[slot],
+                sem_b.at[slot, 0]),
+            pltpu.make_async_copy(
+                t1i_hbm.at[pl.ds(q0, block_q), rows, :], bbi.at[slot],
+                sem_b.at[slot, 1]),
+        )
+
+    for c in b_copies(0, 0):
+        c.start()
+    fbr = fbr_ref[...]
+    fbi = fbi_ref[...]
+
+    def phase_b(i, carry):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < nat)
+        def _():
+            for c in b_copies(i + 1, jax.lax.rem(i + 1, 2)):
+                c.start()
+
+        for c in b_copies(i, slot):
+            c.wait()
+        t3r, t3i = stage2_body(bbr[slot], bbi[slot], fbr, fbi)
+        # out[c, d] = X[c + d*A]: tile rows are c's, so the transposed tile
+        # lands at output[:, :, c-tile] of the natural (batch, B, A) layout.
+        obr[...] = jnp.transpose(t3r, (0, 2, 1))
+        obi[...] = jnp.transpose(t3i, (0, 2, 1))
+        cols = pl.ds(i * block_a, block_a)
+        outs = (
+            pltpu.make_async_copy(
+                obr, or_hbm.at[pl.ds(q0, block_q), :, cols], sem_o.at[0]),
+            pltpu.make_async_copy(
+                obi, oi_hbm.at[pl.ds(q0, block_q), :, cols], sem_o.at[1]),
+        )
+        for c in outs:
+            c.start()
+        for c in outs:
+            c.wait()
+        return carry
+
+    jax.lax.fori_loop(0, nat, phase_b, 0)
+
+
+def _even_divisor(n: int, cap: int) -> int:
+    d = max(1, min(cap, n))
+    while n % d:
+        d -= 1
+    return d
+
+
+def fourstep_streaming(xr, xi, far, fai, wr, wi, fbr, fbi, *,
+                       block_q: int = 1, block_a: int = 256,
+                       block_b: int = 256, interpret=False):
+    """One-launch four-step FFT for shapes exceeding the VMEM budget.
+
+    Same plane inputs as :func:`fourstep_fused` but x/out/t1 stay in HBM;
+    only (block_q, A, block_b) / (block_q, block_a, B) tiles are VMEM
+    resident at a time (x2 for double buffering).  Returns (batch, B, A)
+    planes in NATURAL order — ``out[:, d, c] = X[d*A + c]`` — so callers
+    reshape (free) instead of transposing.
+    """
+    batch, a, b = xr.shape
+    block_q = max(1, min(block_q, batch))
+    pad = (-batch) % block_q
+    if pad:  # DMA tile sizes are static: round the batch up
+        z = jnp.zeros((pad, a, b), xr.dtype)
+        xr = jnp.concatenate([xr, z])
+        xi = jnp.concatenate([xi, z])
+    batchp = batch + pad
+    block_a = _even_divisor(a, block_a)
+    block_b = _even_divisor(b, block_b)
+    nat = a // block_a
+    nbt = b // block_b
+    f32 = xr.dtype
+
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    def vspec(*shape):
+        return pl.BlockSpec(shape, lambda i, r=len(shape): (0,) * r)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((batchp, b, a), f32),   # natural-order output
+        jax.ShapeDtypeStruct((batchp, b, a), f32),
+        jax.ShapeDtypeStruct((batchp, a, b), f32),   # t1 HBM scratch
+        jax.ShapeDtypeStruct((batchp, a, b), f32),
+    ]
+    scratch = [
+        pltpu.VMEM((2, block_q, a, block_b), f32),   # phase A in (x2 slots)
+        pltpu.VMEM((2, block_q, a, block_b), f32),
+        pltpu.VMEM((block_q, a, block_b), f32),      # phase A out staging
+        pltpu.VMEM((block_q, a, block_b), f32),
+        pltpu.VMEM((2, block_q, block_a, b), f32),   # phase B in (x2 slots)
+        pltpu.VMEM((2, block_q, block_a, b), f32),
+        pltpu.VMEM((block_q, b, block_a), f32),      # phase B out staging
+        pltpu.VMEM((block_q, b, block_a), f32),
+        pltpu.SemaphoreType.DMA((2, 2)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SemaphoreType.DMA((2, 2)),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    outs = pl.pallas_call(
+        functools.partial(_streaming_kernel, nbt, nat, block_q, block_a,
+                          block_b),
+        grid=(batchp // block_q,),
+        in_specs=[any_spec, any_spec, vspec(a, a), vspec(a, a),
+                  vspec(a, b), vspec(a, b), vspec(b, b), vspec(b, b)],
+        out_specs=[any_spec, any_spec, any_spec, any_spec],
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+        name="fourstep_fft_streaming",
+    )(xr, xi, far, fai, wr, wi, fbr, fbi)
+    return outs[0][:batch], outs[1][:batch]

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.cmatmul import (
     bcmatmul,
     bcmatmul_body,
@@ -46,6 +46,8 @@ from repro.kernels.coded_pipeline import (
     bucket_body_masked,
     coded_fft_bucket,
     coded_fft_bucket_masked,
+    coded_fft_bucket_streaming,
+    coded_fft_bucket_streaming_masked,
     coded_irfft_bucket,
     coded_irfft_bucket_masked,
     coded_rfft_bucket,
@@ -61,14 +63,19 @@ from repro.kernels.coded_pipeline import (
     rbucket_body,
     rbucket_body_fftworker,
     rbucket_body_masked,
+    subsets_from_masks_body,
 )
 from repro.kernels.fourstep_fft import (
+    _parse_stage_planes,
     encode_fourstep_body,
     encode_fourstep_fused,
     fourstep_body,
     fourstep_fused,
     fourstep_stage1,
     fourstep_stage2,
+    fourstep_streaming,
+    multistep_body,
+    multistep_fused,
     stage1_body,
     stage2_body,
 )
@@ -94,6 +101,7 @@ __all__ = [
     "coded_bucket",
     "coded_bucket_direct",
     "coded_bucket_fusable",
+    "coded_bucket_streamable",
     "coded_bucket_masked",
     "coded_rbucket",
     "coded_rbucket_direct",
@@ -121,6 +129,21 @@ _FUSED_MAX_ELEMS = 512 * 512
 # whenever a block stays under ~32 MB/plane -- the collapsed call traces the
 # kernel body once and lowers to plain fused XLA matmuls.
 _INTERPRET_BLOCK_ELEMS = 1 << 23
+
+# bf16-plane mode: DFT/twiddle constants in bfloat16 with f32 payload and
+# f32 accumulation (mixed-dtype dots promote).  Halves the constant-plane
+# VMEM footprint; the relative error budget the property suite holds the
+# mode to -- a plan size that exceeds it gets bf16 auto-disabled per (s, m)
+# by the service warmup probe.
+BF16_RTOL = 2e-2
+
+
+def _plane_dtype(precision: str):
+    if precision == "bf16":
+        return jnp.bfloat16  # ml_dtypes.bfloat16: numpy-compatible
+    if precision in (None, "f32", "float32"):
+        return np.float32
+    raise ValueError(f"unknown plane precision {precision!r}")
 
 
 def default_interpret() -> bool:
@@ -170,6 +193,21 @@ def _block_l(total: int, rows: int, interpret: bool) -> int:
     if interpret:
         return max(1, min(total, _INTERPRET_BLOCK_ELEMS // max(rows, 1)))
     return min(total, 512)
+
+
+def _tuned_block_q(kind: str, q: int, per_elem: int, mode: str,
+                   **params) -> int:
+    """Measured batch-block size, falling back to the VMEM heuristic.
+
+    Every dispatcher routes through this: a ``lookup`` into the autotune
+    table (populated by ``FFTService.warmup()`` / the bench harness, keyed
+    per backend+mode+shape) is a pure dict read, so dispatch stays
+    trace-time cheap; a miss degrades to the old :func:`_block_q` rule.
+    """
+    ent = autotune.lookup(kind, mode=mode, **params)
+    if ent and "block_q" in ent:
+        return max(1, min(q, int(ent["block_q"])))
+    return _block_q(q, per_elem, mode == "interpret")
 
 
 # Twiddle/DFT planes are computed with NUMPY and memoized: called inside a
@@ -234,42 +272,128 @@ def _recombine_planes_scrambled(s: int, m: int, a: int, b: int,
     return perm(twr), perm(twi), fr, fi
 
 
+@functools.lru_cache(maxsize=None)
+def _multistep_planes(factors: tuple, dtype=np.float32):
+    """Flat plane list for the mixed-radix multistep kernel.
+
+    Per stage: the (f, f) DFT planes, then (for every stage but the last)
+    the (f, rest) inter-stage twiddle where ``rest`` is the product of the
+    remaining factors -- exactly the ordering
+    ``fourstep_fft._parse_stage_planes`` regroups.
+    """
+    rest = 1
+    for f in factors:
+        rest *= f
+    planes: list = []
+    for idx, f in enumerate(factors):
+        rest //= f
+        planes.extend(_dft_planes(f, dtype))
+        if idx < len(factors) - 1:
+            planes.extend(_twiddle_planes(f, rest, dtype))
+    return tuple(planes)
+
+
 # ---------------------------------------------------------------- four-step
 def fourstep_planar(xr: jax.Array, xi: jax.Array, *,
                     interpret: bool | None = None,
-                    fused: bool | None = None):
+                    fused: bool | None = None,
+                    variant: str | None = None,
+                    factors=None,
+                    precision: str = "f32"):
     """Batched planar FFT along the last axis via the four-step kernels.
 
     ``xr, xi``: (batch, L) f32 planes.  Returns natural-order (batch, L)
-    planes of ``fft(x, axis=-1)``.  ``fused=None`` picks the single-kernel
-    path when the (A, B) matrix fits the VMEM budget, else the two-pass
-    stage1/stage2 kernels.  Degenerate factorizations (prime or
-    near-prime L, where the dense (B, B) DFT factor would dwarf an FFT's
-    flops AND its plane would not fit VMEM) fall back to the platform FFT.
+    planes of ``fft(x, axis=-1)``.
+
+    ``variant`` selects the execution plan explicitly: ``"fused"`` (one
+    launch; mixed-radix multistep when ``factors`` has > 2 entries),
+    ``"two_pass"`` (stage1/stage2 kernels), ``"streaming"`` (double-
+    buffered DMA grid, natural-order output), or ``"xla"`` (platform FFT).
+    ``variant=None`` consults the autotune table for this (L, mode) and
+    falls back to the VMEM heuristic on a miss: fused when the (A, B)
+    matrix fits the budget, else two-pass; degenerate factorizations
+    (prime or near-prime L, where the dense (B, B) DFT factor would dwarf
+    an FFT's flops AND its plane would not fit VMEM) take the platform
+    FFT.  The legacy ``fused`` bool maps onto fused/two_pass.
+
+    ``precision="bf16"`` casts the DFT/twiddle planes to bfloat16 while the
+    matmuls still accumulate in f32 (``preferred_element_type``); gate on
+    :data:`BF16_RTOL` -- see ``FFTService.warmup``'s per-shape probe.
     """
     mode = _mode(interpret)
     batch, ell = xr.shape
     a, b = split_factor(ell)
-    if b * b > _FUSED_MAX_ELEMS:
+    if variant is None and fused is not None:
+        variant = "fused" if fused else "two_pass"
+    if variant is None:
+        ent = autotune.lookup("fourstep", L=ell, mode=mode)
+        if ent:
+            variant = ent.get("variant")
+            if factors is None and ent.get("factors"):
+                factors = tuple(ent["factors"])
+    if variant is None:
+        if b * b > _FUSED_MAX_ELEMS:
+            variant = "xla"
+        elif a * b <= _FUSED_MAX_ELEMS:
+            variant = "fused"
+        else:
+            variant = "two_pass"
+    if variant != "xla" and b * b > _FUSED_MAX_ELEMS and not (
+            variant == "fused" and factors is not None and len(factors) > 2):
+        # degenerate split: the dense (B, B) plane cannot fit -- the only
+        # honest kernels are a multistep plan or the platform FFT
+        variant = "xla"
+    if variant == "xla":
         z = jnp.fft.fft(xr + 1j * xi, axis=-1)
         return jnp.real(z).astype(xr.dtype), jnp.imag(z).astype(xr.dtype)
-    if fused is None:
-        fused = (a * b) <= _FUSED_MAX_ELEMS
+    dt = _plane_dtype(precision)
+    itp = mode == "interpret"
+    if variant == "fused" and factors is not None and len(factors) > 2:
+        factors = tuple(int(f) for f in factors)
+        planes = _multistep_planes(factors, dt)
+        if mode == "direct":
+            outr, outi = multistep_body(
+                xr, xi, _parse_stage_planes(factors, planes))
+        else:
+            bq = _tuned_block_q("fourstep", batch, ell, mode, L=ell)
+            outr, outi = multistep_fused(
+                xr, xi, planes, factors, block_q=bq, interpret=itp)
+        # digit-reversed output X[c1 + f1*c2 + ...] -> reverse the axes
+        k = len(factors)
+        outr = outr.reshape(batch, *factors).transpose(
+            (0,) + tuple(range(k, 0, -1))).reshape(batch, ell)
+        outi = outi.reshape(batch, *factors).transpose(
+            (0,) + tuple(range(k, 0, -1))).reshape(batch, ell)
+        return outr, outi
+    if factors is not None and len(factors) == 2:
+        a, b = int(factors[0]), int(factors[1])
+    far, fai = _dft_planes(a, dt)
+    fbr, fbi = _dft_planes(b, dt)
+    wr, wi = _twiddle_planes(a, b, dt)
+    if variant == "streaming" and mode != "direct":
+        ent = autotune.lookup("fourstep", L=ell, mode=mode) or {}
+        outr, outi = fourstep_streaming(
+            xr.reshape(batch, a, b), xi.reshape(batch, a, b),
+            far, fai, wr, wi, fbr, fbi,
+            block_q=int(ent.get("block_q", 1) or 1),
+            block_a=int(ent.get("block_a", 256) or 256),
+            block_b=int(ent.get("block_b", 256) or 256),
+            interpret=itp)
+        # natural-order (batch, B, A) output: flat X, no unscramble
+        return outr.reshape(batch, ell), outi.reshape(batch, ell)
+    if variant == "streaming":
+        variant = "two_pass"  # direct mode has no DMA grid to stream
     xr = xr.reshape(batch, a, b)
     xi = xi.reshape(batch, a, b)
-    far, fai = _dft_planes(a)
-    fbr, fbi = _dft_planes(b)
-    wr, wi = _twiddle_planes(a, b)
     if mode == "direct":
-        if fused:
+        if variant == "fused":
             outr, outi = fourstep_body(xr, xi, far, fai, wr, wi, fbr, fbi)
         else:
             t1r, t1i = stage1_body(xr, xi, far, fai, wr, wi)
             outr, outi = stage2_body(t1r, t1i, fbr, fbi)
     else:
-        itp = mode == "interpret"
-        bq = _block_q(batch, a * b, itp)
-        if fused:
+        bq = _tuned_block_q("fourstep", batch, a * b, mode, L=ell)
+        if variant == "fused":
             outr, outi = fourstep_fused(
                 xr, xi, far, fai, wr, wi, fbr, fbi,
                 block_q=bq, interpret=itp)
@@ -451,56 +575,108 @@ def coded_bucket_fusable(s: int, m: int, n: int) -> bool:
             and b * b <= _FUSED_MAX_ELEMS)
 
 
+def coded_bucket_streamable(s: int, m: int, n: int) -> bool:
+    """Can the over-VMEM c2c bucket run as the ONE-launch streaming grid?
+
+    The streaming kernel keeps only (block_q, A, block_b, m) /
+    (block_q, block_a, B, m) tiles resident, so the batch working set
+    drops out of the gate; what must still fit are the shared planes --
+    the (A, A)/(B, B) DFT factors and the (m, s) pre-scrambled recombine
+    twiddle -- plus a non-degenerate split (A > 1, else there is nothing
+    to tile over).
+    """
+    ell = s // m
+    a, b = split_factor(ell)
+    return (a > 1
+            and a * a <= _FUSED_MAX_ELEMS
+            and b * b <= _FUSED_MAX_ELEMS
+            and m * ell <= 4 * _FUSED_MAX_ELEMS)
+
+
+def _streaming_blocks(kind: str, mode: str, **params):
+    """(block_q, block_a, block_b) for a streaming launch: tuned entry if
+    the autotune table has one, else the 256-tile default."""
+    ent = autotune.lookup(kind, mode=mode, **params) or {}
+    return (max(1, int(ent.get("block_q", 1) or 1)),
+            int(ent.get("block_a", 256) or 256),
+            int(ent.get("block_b", 256) or 256))
+
+
 def coded_bucket(xr: jax.Array, xi: jax.Array,
                  dr: jax.Array, di: jax.Array,
                  gr: jax.Array, gi: jax.Array, s: int, *,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 block_q: int | None = None,
+                 precision: str = "f32"):
     """The service's whole-bucket hot path as ONE Pallas launch.
 
     ``xr, xi``: (q, s) request planes; ``dr, di``: (q, m, N) per-request
     scatter decode matrices; ``gr, gi``: (N, m) generator planes.  Returns
     (q, s) output planes -- interleave, fused encode+worker, decode matmul
     and recombine with no HBM round-trips between stages (DESIGN.md §6).
-    Caller must check :func:`coded_bucket_fusable` first.
+    Shapes beyond :func:`coded_bucket_fusable` route to the streaming
+    double-buffered grid when :func:`coded_bucket_streamable` allows;
+    ``block_q=None`` consults the autotune table, ``precision="bf16"``
+    casts the shared planes (f32 accumulation throughout).
     """
     mode = _mode(interpret)
     q, s_ = xr.shape
     n, m = gr.shape
     ell = s // m
     a, b = split_factor(ell)
-    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
-              *_recombine_planes_scrambled(s, m, a, b))
+    dt = _plane_dtype(precision)
+    planes = (*_dft_planes(a, dt), *_twiddle_planes(a, b, dt),
+              *_dft_planes(b, dt), *_recombine_planes_scrambled(s, m, a, b, dt))
     if mode == "direct":
         return bucket_body(xr, xi, dr, di, gr, gi, *planes)
     itp = mode == "interpret"
-    bq = _block_q(q, 2 * s + (m + n) * ell, itp)
+    if not coded_bucket_fusable(s, m, n) and coded_bucket_streamable(s, m, n):
+        bq, ba, bb = _streaming_blocks("bucket", mode, s=s, m=m, n=n)
+        return coded_fft_bucket_streaming(
+            xr, xi, dr, di, gr, gi, *planes,
+            block_q=(block_q or bq), block_a=ba, block_b=bb, interpret=itp)
+    if block_q is None:
+        block_q = _tuned_block_q("bucket", q, 2 * s + (m + n) * ell, mode,
+                                 s=s, m=m, n=n)
     return coded_fft_bucket(
-        xr, xi, dr, di, gr, gi, *planes, block_q=bq, interpret=itp)
+        xr, xi, dr, di, gr, gi, *planes, block_q=block_q, interpret=itp)
 
 
-def coded_bucket_masked(xr: jax.Array, xi: jax.Array, subsets: jax.Array,
+def coded_bucket_masked(xr: jax.Array, xi: jax.Array, masks: jax.Array,
                         gr: jax.Array, gi: jax.Array, s: int, *,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        block_q: int | None = None,
+                        precision: str = "f32"):
     """:func:`coded_bucket` with IN-KERNEL decode matrices (DESIGN.md §8).
 
-    ``subsets``: (q, m) int32 responder indices per request (from
-    :func:`mask_subsets`).  The Lagrange weights are built in VMEM per
-    grid step and contracted immediately; nothing decode-related crosses
-    the host boundary.  Caller checks :func:`coded_bucket_fusable`.
+    ``masks``: (q, N) responder masks, shipped RAW -- subset selection
+    (first-m responders) now happens inside the kernel
+    (``subsets_from_masks_body``), then the Lagrange weights are built in
+    VMEM per grid step and contracted immediately; nothing decode-related
+    crosses the host boundary.  Same fused/streaming routing as
+    :func:`coded_bucket`.
     """
     mode = _mode(interpret)
     q, _ = xr.shape
     n, m = gr.shape
     ell = s // m
     a, b = split_factor(ell)
-    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
-              *_recombine_planes_scrambled(s, m, a, b))
+    dt = _plane_dtype(precision)
+    planes = (*_dft_planes(a, dt), *_twiddle_planes(a, b, dt),
+              *_dft_planes(b, dt), *_recombine_planes_scrambled(s, m, a, b, dt))
     if mode == "direct":
-        return bucket_body_masked(xr, xi, subsets, gr, gi, *planes)
+        return bucket_body_masked(xr, xi, masks, gr, gi, *planes)
     itp = mode == "interpret"
-    bq = _block_q(q, 2 * s + (m + n) * ell, itp)
+    if not coded_bucket_fusable(s, m, n) and coded_bucket_streamable(s, m, n):
+        bq, ba, bb = _streaming_blocks("bucket", mode, s=s, m=m, n=n)
+        return coded_fft_bucket_streaming_masked(
+            xr, xi, masks, gr, gi, *planes,
+            block_q=(block_q or bq), block_a=ba, block_b=bb, interpret=itp)
+    if block_q is None:
+        block_q = _tuned_block_q("bucket", q, 2 * s + (m + n) * ell, mode,
+                                 s=s, m=m, n=n)
     return coded_fft_bucket_masked(
-        xr, xi, subsets, gr, gi, *planes, block_q=bq, interpret=itp)
+        xr, xi, masks, gr, gi, *planes, block_q=block_q, interpret=itp)
 
 
 def coded_bucket_direct(xr: jax.Array, xi: jax.Array,
@@ -535,54 +711,67 @@ def coded_rbucket_fusable(s: int, m: int, n: int) -> bool:
             and b * b <= _FUSED_MAX_ELEMS)
 
 
-def _r2c_postdecode_planes(s: int, m: int):
+def _r2c_postdecode_planes(s: int, m: int, dtype=np.float32):
     n2 = s // m // 2
-    return (*_split_planes(2 * n2), *_recombine_planes(s, m)[:2],
-            *_half_dft_planes(m))
+    return (*_split_planes(2 * n2, dtype), *_recombine_planes(s, m, dtype)[:2],
+            *_half_dft_planes(m, dtype))
 
 
 def coded_rbucket(xr: jax.Array, dr: jax.Array, di: jax.Array,
                   gr: jax.Array, gi: jax.Array, s: int, *,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None,
+                  block_q: int | None = None,
+                  precision: str = "f32"):
     """The r2c whole-bucket hot path (DESIGN.md §7) as ONE Pallas launch.
 
     ``xr``: (q, s) REAL request plane; ``dr, di``: (q, m, N) scatter decode
     matrices; ``gr, gi``: (N, m) generator planes.  Returns (q, s//2+1)
-    half-spectrum planes.  Caller checks :func:`coded_rbucket_fusable`.
+    half-spectrum planes.  Caller checks :func:`coded_rbucket_fusable`
+    (the packed-butterfly pairing couples column p with n2-p, so the r2c
+    pipeline has no column-local streaming variant -- see DESIGN.md §10).
     """
     mode = _mode(interpret)
     q, _ = xr.shape
     n, m = gr.shape
     n2 = s // m // 2
     a, b = split_factor(n2)
-    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
-              *_r2c_postdecode_planes(s, m))
+    dt = _plane_dtype(precision)
+    planes = (*_dft_planes(a, dt), *_twiddle_planes(a, b, dt),
+              *_dft_planes(b, dt), *_r2c_postdecode_planes(s, m, dt))
     if mode == "direct":
         return rbucket_body(xr, dr, di, gr, gi, *planes, s)
     itp = mode == "interpret"
-    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
+    if block_q is None:
+        block_q = _tuned_block_q("rbucket", q, 2 * s + (m + n) * n2, mode,
+                                 s=s, m=m, n=n)
     return coded_rfft_bucket(xr, dr, di, gr, gi, *planes, s,
-                             block_q=bq, interpret=itp)
+                             block_q=block_q, interpret=itp)
 
 
-def coded_rbucket_masked(xr: jax.Array, subsets: jax.Array,
+def coded_rbucket_masked(xr: jax.Array, masks: jax.Array,
                          gr: jax.Array, gi: jax.Array, s: int, *,
-                         interpret: bool | None = None):
-    """:func:`coded_rbucket` with in-kernel Lagrange decode matrices
+                         interpret: bool | None = None,
+                         block_q: int | None = None,
+                         precision: str = "f32"):
+    """:func:`coded_rbucket` with in-kernel subset selection + Lagrange
+    decode from raw ``(q, N)`` responder masks
     (cf. :func:`coded_bucket_masked`)."""
     mode = _mode(interpret)
     q, _ = xr.shape
     n, m = gr.shape
     n2 = s // m // 2
     a, b = split_factor(n2)
-    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
-              *_r2c_postdecode_planes(s, m))
+    dt = _plane_dtype(precision)
+    planes = (*_dft_planes(a, dt), *_twiddle_planes(a, b, dt),
+              *_dft_planes(b, dt), *_r2c_postdecode_planes(s, m, dt))
     if mode == "direct":
-        return rbucket_body_masked(xr, subsets, gr, gi, *planes, s)
+        return rbucket_body_masked(xr, masks, gr, gi, *planes, s)
     itp = mode == "interpret"
-    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
-    return coded_rfft_bucket_masked(xr, subsets, gr, gi, *planes, s,
-                                    block_q=bq, interpret=itp)
+    if block_q is None:
+        block_q = _tuned_block_q("rbucket", q, 2 * s + (m + n) * n2, mode,
+                                 s=s, m=m, n=n)
+    return coded_rfft_bucket_masked(xr, masks, gr, gi, *planes, s,
+                                    block_q=block_q, interpret=itp)
 
 
 def coded_rbucket_direct(xr: jax.Array, dvr: jax.Array, dvi: jax.Array,
@@ -607,9 +796,9 @@ def rfft_postdecode_planar(hr: jax.Array, hi: jax.Array, s: int):
 
 
 # ------------------------------------------------ real-output (c2r) buckets
-def _c2r_message_planes(s: int, m: int):
-    ctwr, ctwi, fpr, fpi = _recombine_planes(s, m, sign=1.0)
-    pwr, pwi = _split_planes(s // m, sign=1.0)
+def _c2r_message_planes(s: int, m: int, dtype=np.float32):
+    ctwr, ctwi, fpr, fpi = _recombine_planes(s, m, dtype, sign=1.0)
+    pwr, pwi = _split_planes(s // m, dtype, sign=1.0)
     return fpr, fpi, ctwr, ctwi, pwr, pwi
 
 
@@ -627,7 +816,9 @@ def coded_irbucket_fusable(s: int, m: int, n: int) -> bool:
 def coded_irbucket(yr: jax.Array, yi: jax.Array,
                    dr: jax.Array, di: jax.Array,
                    gr: jax.Array, gi: jax.Array, s: int, *,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None,
+                   block_q: int | None = None,
+                   precision: str = "f32"):
     """The c2r whole-bucket hot path (DESIGN.md §9) as ONE Pallas launch.
 
     ``yr, yi``: (q, s//2+1) half-spectrum request planes; ``dr, di``:
@@ -642,35 +833,44 @@ def coded_irbucket(yr: jax.Array, yi: jax.Array,
     n, m = gr.shape
     n2 = s // m // 2
     a, b = split_factor(n2)
-    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
-              *_c2r_message_planes(s, m))
+    dt = _plane_dtype(precision)
+    planes = (*_dft_planes(a, dt), *_twiddle_planes(a, b, dt),
+              *_dft_planes(b, dt), *_c2r_message_planes(s, m, dt))
     if mode == "direct":
         return irbucket_body(yr, yi, dr, di, gr, gi, *planes, s)
     itp = mode == "interpret"
-    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
+    if block_q is None:
+        block_q = _tuned_block_q("irbucket", q, 2 * s + (m + n) * n2, mode,
+                                 s=s, m=m, n=n)
     return coded_irfft_bucket(yr, yi, dr, di, gr, gi, *planes, s,
-                              block_q=bq, interpret=itp)
+                              block_q=block_q, interpret=itp)
 
 
-def coded_irbucket_masked(yr: jax.Array, yi: jax.Array, subsets: jax.Array,
+def coded_irbucket_masked(yr: jax.Array, yi: jax.Array, masks: jax.Array,
                           gr: jax.Array, gi: jax.Array, s: int, *,
-                          interpret: bool | None = None):
-    """:func:`coded_irbucket` with in-kernel Lagrange decode matrices
-    (cf. :func:`coded_bucket_masked`) -- all four kinds now share the §8
-    device-resident decode path."""
+                          interpret: bool | None = None,
+                          block_q: int | None = None,
+                          precision: str = "f32"):
+    """:func:`coded_irbucket` with in-kernel subset selection + Lagrange
+    decode from raw ``(q, N)`` responder masks
+    (cf. :func:`coded_bucket_masked`) -- all four kinds share the §8
+    zero-metadata device-resident decode path."""
     mode = _mode(interpret)
     q, _ = yr.shape
     n, m = gr.shape
     n2 = s // m // 2
     a, b = split_factor(n2)
-    planes = (*_dft_planes(a), *_twiddle_planes(a, b), *_dft_planes(b),
-              *_c2r_message_planes(s, m))
+    dt = _plane_dtype(precision)
+    planes = (*_dft_planes(a, dt), *_twiddle_planes(a, b, dt),
+              *_dft_planes(b, dt), *_c2r_message_planes(s, m, dt))
     if mode == "direct":
-        return irbucket_body_masked(yr, yi, subsets, gr, gi, *planes, s)
+        return irbucket_body_masked(yr, yi, masks, gr, gi, *planes, s)
     itp = mode == "interpret"
-    bq = _block_q(q, 2 * s + (m + n) * n2, itp)
-    return coded_irfft_bucket_masked(yr, yi, subsets, gr, gi, *planes, s,
-                                     block_q=bq, interpret=itp)
+    if block_q is None:
+        block_q = _tuned_block_q("irbucket", q, 2 * s + (m + n) * n2, mode,
+                                 s=s, m=m, n=n)
+    return coded_irfft_bucket_masked(yr, yi, masks, gr, gi, *planes, s,
+                                     block_q=block_q, interpret=itp)
 
 
 def irfft_message_planar(yr: jax.Array, yi: jax.Array, s: int, m: int):

@@ -70,7 +70,7 @@ from repro.core.rfftn import CodedIRFFTN, CodedRFFTN
 from repro.core.strategies import coded_fft_threshold
 from repro.distributed.coded_runtime import DistributedCodedPlan
 from repro.distributed.straggler import StragglerModel
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from repro.serving.batching import bucket_size
 from repro.serving.decode_cache import DecodeMatrixCache
 
@@ -100,6 +100,17 @@ class FFTServiceConfig:
     #                               fallback; past the C(N, k) mask-pattern
     #                               count for small fleets, so steady state
     #                               is all-hit)
+    precision: str = "f32"        # kernel plane precision: "bf16" casts the
+    #                               DFT/twiddle planes to bfloat16 (f32
+    #                               accumulation); a per-(s, m, kind) probe
+    #                               against the f32 twin auto-disables any
+    #                               shape whose error exceeds ops.BF16_RTOL
+    autotune: bool = True         # measure candidate tilings/variants at
+    #                               warmup() and persist the winning table
+    #                               to the backend-keyed JSON cache
+    #                               (kernels/autotune.py); dispatch falls
+    #                               back to the static heuristics when off
+    autotune_reps: int = 3        # timing repetitions per candidate
 
 
 @dataclasses.dataclass
@@ -264,6 +275,65 @@ class FFTService:
         """
         return self.cfg.device_decode and self.cfg.m <= mds.LAGRANGE_MAX_M
 
+    def _precision_for(self, s, kind: str) -> str:
+        """Resolved kernel plane precision for one bucket family.
+
+        ``cfg.precision="bf16"`` is a REQUEST, not a guarantee: the first
+        bucket of each (s, m, kind) probes the bf16 pipeline against its
+        f32 twin and auto-disables the shape (verdict recorded in the
+        autotune table, so it persists with the tiling entries) whenever
+        the relative error exceeds ``ops.BF16_RTOL`` -- the same budget
+        the property suite enforces.
+        """
+        cfg = self.cfg
+        if cfg.precision != "bf16" or kind in self.ND_KINDS or \
+                not isinstance(s, int):
+            return "f32"
+        mode = ops._mode(None)
+        ent = autotune.lookup("bf16", s=s, m=cfg.m, k=kind, mode=mode)
+        if ent is None:
+            ent = autotune.record(
+                "bf16", {"ok": bool(self._probe_bf16(s, kind))},
+                s=s, m=cfg.m, k=kind, mode=mode)
+        return "bf16" if ent.get("ok") else "f32"
+
+    def _probe_bf16(self, s: int, kind: str) -> bool:
+        """Does the bf16-plane pipeline stay inside the f32 error budget
+        at this (s, m, kind)?  Compares one small bucket against the f32
+        run of the SAME masked executor (full-responder masks)."""
+        plan = self._plan_for(s, kind)
+        m, n = plan.m, plan.n_workers
+        gr, gi = ref.planar(plan.generator)
+        rng = np.random.default_rng(0)
+        q = 2
+        masks = jnp.asarray(np.ones((q, n), bool))
+        f32 = np.float32
+        if kind == "r2c":
+            xb = jnp.asarray(rng.standard_normal((q, s)).astype(f32))
+            run = lambda p: ops.coded_rbucket_masked(
+                xb, masks, gr, gi, s, precision=p)
+        elif kind == "c2r":
+            yr = jnp.asarray(rng.standard_normal((q, s // 2 + 1)).astype(f32))
+            yi = jnp.asarray(rng.standard_normal((q, s // 2 + 1)).astype(f32))
+            run = lambda p: ops.coded_irbucket_masked(
+                yr, yi, masks, gr, gi, s, precision=p)
+        else:
+            xr = jnp.asarray(rng.standard_normal((q, s)).astype(f32))
+            xi = jnp.asarray(rng.standard_normal((q, s)).astype(f32))
+            run = lambda p: ops.coded_bucket_masked(
+                xr, xi, masks, gr, gi, s, precision=p)
+        try:
+            want = run("f32")
+            got = run("bf16")
+        except Exception:
+            return False
+        want = want if isinstance(want, tuple) else (want,)
+        got = got if isinstance(got, tuple) else (got,)
+        scale = max(float(jnp.max(jnp.abs(w))) for w in want) or 1.0
+        err = max(float(jnp.max(jnp.abs(g - w)))
+                  for g, w in zip(got, want)) / scale
+        return err <= ops.BF16_RTOL
+
     def _runner_for(self, s, bucket: int, kind: str = "c2c"):
         """One jitted batched encode->worker->decode per (s, m, kind,
         bucket).  The executables persist for the service lifetime --
@@ -271,7 +341,8 @@ class FFTService:
         n-D kinds always take the generic ``plan.run`` branch."""
         kernel = self._kernel_path(s, kind)
         dev = kernel and self._device_decode()
-        key = (s, self.cfg.m, kind, bucket, kernel, dev)
+        prec = self._precision_for(s, kind) if kernel else "f32"
+        key = (s, self.cfg.m, kind, bucket, kernel, dev, prec)
         if key not in self._runners:
             if dev:
                 self._runners[key] = self._make_masked_runner(s, bucket, kind)
@@ -291,32 +362,37 @@ class FFTService:
     def _make_masked_runner(self, s: int, bucket: int, kind: str = "c2c"):
         """The device-decode bucket executor (DESIGN.md §8).
 
-        Takes ``(requests, masks)`` and nothing else: responder subsets,
-        Lagrange decode matrices, worker transform and recombine all happen
-        inside ONE jitted call -- on TPU the fusable shapes run it as one
-        Pallas launch with the decode matrices built in VMEM
-        (``ops.coded_bucket_masked``).  The c2c ingress buffer is donated:
-        with no host-side decode cache aliasing bucket I/O, XLA may reuse
-        the request buffer for the same-shape spectrum output.
+        Takes ``(requests, masks)`` and nothing else: the whole-bucket
+        kernels consume the RAW masks -- subset selection, Lagrange decode
+        matrices, worker transform and recombine all happen inside ONE
+        jitted call, and on TPU inside one Pallas launch with the decode
+        matrices built in VMEM (``ops.coded_bucket_masked``; shapes past
+        the VMEM budget stream through the double-buffered grid, §10).
+        The c2c ingress buffer is donated: with no host-side decode cache
+        aliasing bucket I/O, XLA may reuse the request buffer for the
+        same-shape spectrum output.
         """
         plan = self._plan_for(s, kind)
         m, n = plan.m, plan.n_workers
         gr, gi = ref.planar(plan.generator)
         n2 = s // m // 2  # packed shard length of the real kinds
         direct = ops.default_interpret()
+        prec = self._precision_for(s, kind)
 
         if kind == "r2c":
             whole = not direct and ops.coded_rbucket_fusable(s, m, n)
 
             def fn(xb, masks):
-                subsets = ops.mask_subsets(masks, m)
                 if direct:
+                    subsets = ops.mask_subsets(masks, m)
                     ivr, ivi = ops.lagrange_compact_planes(subsets, n)
                     yr, yi = ops.coded_rbucket_direct(
                         xb, ivr, ivi, subsets, gr, gi, s)
                 elif whole:
-                    yr, yi = ops.coded_rbucket_masked(xb, subsets, gr, gi, s)
+                    yr, yi = ops.coded_rbucket_masked(xb, masks, gr, gi, s,
+                                                      precision=prec)
                 else:
+                    subsets = ops.mask_subsets(masks, m)
                     dr, di = ops.lagrange_scatter_planes(subsets, n)
                     zr, zi = ops.pack_real_planes(xb, m)
                     br, bi = ops.encode_worker(zr, zi, gr, gi)
@@ -330,9 +406,9 @@ class FFTService:
             whole = not direct and ops.coded_irbucket_fusable(s, m, n)
 
             def fn(yb, masks):
-                subsets = ops.mask_subsets(masks, m)
                 yr, yi = ref.planar(yb)
                 if direct:
+                    subsets = ops.mask_subsets(masks, m)
                     ivr, ivi = ops.lagrange_compact_planes(subsets, n)
                     return ops.coded_irbucket_direct(
                         yr, yi, ivr, ivi, subsets, gr, gi, s)
@@ -340,8 +416,10 @@ class FFTService:
                     # ONE Pallas launch with in-VMEM decode matrices --
                     # the last kind to get a whole-bucket kernel
                     # (DESIGN.md §9)
-                    return ops.coded_irbucket_masked(yr, yi, subsets,
-                                                     gr, gi, s)
+                    return ops.coded_irbucket_masked(yr, yi, masks,
+                                                     gr, gi, s,
+                                                     precision=prec)
+                subsets = ops.mask_subsets(masks, m)
                 dr, di = ops.lagrange_scatter_planes(subsets, n)
                 zr, zi = ops.irfft_message_planar(yr, yi, s, m)
                 br, bi = ops.encode_worker(zr, -zi, gr, -gi)
@@ -351,19 +429,22 @@ class FFTService:
 
             return jax.jit(fn)
 
-        whole = not direct and ops.coded_bucket_fusable(s, m, n)
+        whole = not direct and (ops.coded_bucket_fusable(s, m, n)
+                                or ops.coded_bucket_streamable(s, m, n))
         ell = plan.shard_len
 
         def fn(xb, masks):
-            subsets = ops.mask_subsets(masks, m)
             xr, xi = ref.planar(xb)
             if direct:
+                subsets = ops.mask_subsets(masks, m)
                 ivr, ivi = ops.lagrange_compact_planes(subsets, n)
                 yr, yi = ops.coded_bucket_direct(
                     xr, xi, ivr, ivi, subsets, gr, gi, s)
             elif whole:
-                yr, yi = ops.coded_bucket_masked(xr, xi, subsets, gr, gi, s)
+                yr, yi = ops.coded_bucket_masked(xr, xi, masks, gr, gi, s,
+                                                 precision=prec)
             else:
+                subsets = ops.mask_subsets(masks, m)
                 dr, di = ops.lagrange_scatter_planes(subsets, n)
                 cr = jnp.swapaxes(xr.reshape(bucket, ell, m), -1, -2)
                 ci = jnp.swapaxes(xi.reshape(bucket, ell, m), -1, -2)
@@ -398,6 +479,7 @@ class FFTService:
         m = plan.m
         gr, gi = ref.planar(plan.generator)
         n2 = s // m // 2  # packed shard length of the real kinds
+        prec = self._precision_for(s, kind)
 
         if kind == "r2c":
             if ops.default_interpret():
@@ -413,7 +495,8 @@ class FFTService:
             def fn(xb, dplanes):
                 dr, di = dplanes[0], dplanes[1]
                 if whole:
-                    yr, yi = ops.coded_rbucket(xb, dr, di, gr, gi, s)
+                    yr, yi = ops.coded_rbucket(xb, dr, di, gr, gi, s,
+                                               precision=prec)
                     return ref.unplanar(yr, yi)
                 zr, zi = ops.pack_real_planes(xb, m)     # relabel ingress
                 br, bi = ops.encode_worker(zr, zi, gr, gi)
@@ -438,7 +521,8 @@ class FFTService:
                 dr, di = dplanes[0], dplanes[1]
                 yr, yi = ref.planar(yb)
                 if whole:
-                    return ops.coded_irbucket(yr, yi, dr, di, gr, gi, s)
+                    return ops.coded_irbucket(yr, yi, dr, di, gr, gi, s,
+                                              precision=prec)
                 zr, zi = ops.irfft_message_planar(yr, yi, s, m)
                 # ifft(G @ z) via the conj trick on planes:
                 # conj(fft(conj(G) @ conj(z))) / n2 through the same fused
@@ -465,7 +549,8 @@ class FFTService:
 
             return jax.jit(fn)
 
-        whole = ops.coded_bucket_fusable(s, m, plan.n_workers)
+        whole = (ops.coded_bucket_fusable(s, m, plan.n_workers)
+                 or ops.coded_bucket_streamable(s, m, plan.n_workers))
 
         def fn(xb: jax.Array, dplanes: jax.Array) -> jax.Array:
             # dplanes: (2, bucket, m, N) stacked real/imag scatter decode
@@ -473,7 +558,8 @@ class FFTService:
             dr, di = dplanes[0], dplanes[1]
             xr, xi = ref.planar(xb)                      # ingress split
             if whole:
-                yr, yi = ops.coded_bucket(xr, xi, dr, di, gr, gi, s)
+                yr, yi = ops.coded_bucket(xr, xi, dr, di, gr, gi, s,
+                                          precision=prec)
                 return ref.unplanar(yr, yi)              # egress recombine
             # interleave on planes: c_i[j] = x[i + j*m]
             cr = jnp.swapaxes(xr.reshape(bucket, ell, m), -1, -2)
@@ -628,6 +714,14 @@ class FFTService:
         tuples with n-D kinds), so one call can warm mixed traffic.
         Returns the number of executables compiled.  On the fallback
         (host-LRU) path this also primes the all-alive mask entry.
+
+        With ``cfg.autotune`` (the default) this is also when the tiling
+        search runs: per warmed (s, kind) on the kernel path the autotuner
+        times the candidate four-step variants and bucket block_q tilings
+        and persists the winners to the backend-keyed JSON table
+        (kernels/autotune.py), so the executables compiled below already
+        bake the measured plan in -- and the NEXT process skips the search
+        entirely (warm table).
         """
         cfg = self.cfg
         lengths = [cfg.s] if lengths is None else list(lengths)
@@ -637,6 +731,21 @@ class FFTService:
                 buckets.append(b)
                 b *= 2
             buckets.append(cfg.max_batch)
+        if cfg.autotune:
+            kind_keys = {"c2c": "bucket", "r2c": "rbucket", "c2r": "irbucket"}
+            mode = ops._mode(None)
+            qmax = max(buckets)
+            for s in lengths:
+                for k in kinds:
+                    if (isinstance(s, (tuple, list)) or k not in kind_keys
+                            or not self._kernel_path(s, k)):
+                        continue
+                    ell = s // cfg.m if k == "c2c" else s // cfg.m // 2
+                    autotune.ensure_fourstep(
+                        ell, mode=mode, reps=cfg.autotune_reps)
+                    autotune.ensure_bucket(
+                        kind_keys[k], s, cfg.m, cfg.n_workers, q=qmax,
+                        mode=mode, reps=cfg.autotune_reps)
         outs = []
         for s in lengths:
             if isinstance(s, (tuple, list)):

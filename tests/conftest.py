@@ -1,8 +1,25 @@
 # NOTE: no XLA_FLAGS device-count override here on purpose — smoke tests and
 # benches must see exactly 1 CPU device.  Multi-device tests spawn a
 # subprocess that sets --xla_force_host_platform_device_count itself.
+import os
+
 import jax
+import pytest
 
 # Double precision is required for the complex-RS decode conditioning tests
 # and the Prony error locator; model code is dtype-explicit throughout.
 jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_autotune_cache(tmp_path_factory):
+    """Point the kernel autotuner's JSON cache at a session tmpdir so tests
+    never read or pollute the user-level ~/.cache/coded-fft table (service
+    warmup runs the search by default)."""
+    old = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = str(tmp_path_factory.mktemp("autotune"))
+    yield
+    if old is None:
+        os.environ.pop("REPRO_AUTOTUNE_CACHE", None)
+    else:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = old

@@ -368,13 +368,12 @@ def test_coded_irfft_bucket_kernel_parity(s, m, n):
     # direct path (off-TPU default) computes the identical body
     out2 = ops.coded_irbucket(yr, yi, dr, di, gr, gi, s)
     assert _relerr(out2, np.asarray(out)) < 1e-5
-    # masked variant: decode matrices built in-kernel from the subsets
-    subsets = jnp.asarray(np.stack(
-        [DecodeMatrixCache.subset_of(row, m) for row in masks]))
-    out3 = ops.coded_irbucket_masked(yr, yi, subsets, gr, gi, s,
+    # masked variant: raw masks in, subset selection + decode matrices
+    # built in-kernel
+    out3 = ops.coded_irbucket_masked(yr, yi, jnp.asarray(masks), gr, gi, s,
                                      interpret=True)
     assert _relerr(out3, xs) < 1e-3
-    out4 = ops.coded_irbucket_masked(yr, yi, subsets, gr, gi, s)
+    out4 = ops.coded_irbucket_masked(yr, yi, jnp.asarray(masks), gr, gi, s)
     assert _relerr(out4, xs) < 1e-3
     # and the reference plan agrees (the acceptance cross-check)
     from repro.core import CodedIRFFT

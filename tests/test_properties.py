@@ -340,3 +340,92 @@ def test_shim_mode_reported():
     backed it -- the deterministic shim or real hypothesis."""
     assert MAX_EXAMPLES >= 1
     assert HAVE_HYPOTHESIS in (True, False)
+
+
+# --------------------------------------------------- bf16 plane precision
+# The opt-in bf16 twiddle/DFT planes (f32 accumulation) must stay inside
+# ops.BF16_RTOL of the float64 oracle -- the same budget the service's
+# per-(s, m, kind) warmup probe enforces before enabling the mode.
+BF16_CONFIGS = [(64, 2, 5), (96, 3, 7), (256, 4, 8), (2048, 4, 8)]
+
+
+@pytest.mark.parametrize("cfg", BF16_CONFIGS)
+def test_bf16_bucket_planes_within_error_budget(cfg):
+    from repro.core import mds
+    from repro.kernels import ops, ref
+
+    s, m, n = cfg
+    q = 3
+    rng = np.random.default_rng(s)
+    g = mds.rs_generator(n, m, jnp.complex64)
+    gr, gi = ref.planar(g)
+    x = rng.standard_normal((q, s)) + 1j * rng.standard_normal((q, s))
+    xr = jnp.asarray(x.real.astype(np.float32))
+    xi = jnp.asarray(x.imag.astype(np.float32))
+    masks = np.zeros((q, n), bool)
+    for r in range(q):
+        masks[r, rng.choice(n, size=m, replace=False)] = True
+    want = np.fft.fft(x, axis=-1)
+    for itp in (None, True):
+        yr, yi = ops.coded_bucket_masked(
+            xr, xi, jnp.asarray(masks), gr, gi, s,
+            interpret=itp, precision="bf16")
+        got = np.asarray(yr) + 1j * np.asarray(yi)
+        rel = np.abs(got - want).max() / np.abs(want).max()
+        assert rel < ops.BF16_RTOL, (cfg, itp, rel)
+        # and bf16 must actually differ from the f32 planes (the knob is
+        # live, not silently ignored)
+        fr, fi = ops.coded_bucket_masked(
+            xr, xi, jnp.asarray(masks), gr, gi, s,
+            interpret=itp, precision="f32")
+        assert np.abs(np.asarray(fr) - np.asarray(yr)).max() > 0
+
+
+@pytest.mark.parametrize("ell", [256, 4096])
+def test_bf16_fourstep_within_error_budget(ell):
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(ell)
+    x = rng.standard_normal((2, ell)) + 1j * rng.standard_normal((2, ell))
+    xr = jnp.asarray(x.real.astype(np.float32))
+    xi = jnp.asarray(x.imag.astype(np.float32))
+    want = np.fft.fft(x, axis=-1)
+    for variant in ("fused", "two_pass"):
+        outr, outi = ops.fourstep_planar(xr, xi, variant=variant,
+                                         precision="bf16")
+        got = np.asarray(outr) + 1j * np.asarray(outi)
+        rel = np.abs(got - want).max() / np.abs(want).max()
+        assert rel < ops.BF16_RTOL, (ell, variant, rel)
+
+
+def test_bf16_probe_auto_disables_per_shape(monkeypatch, tmp_path):
+    """cfg.precision="bf16" is gated per (s, m, kind): a failing probe
+    records ok=False in the autotune table and the runner stays f32."""
+    from repro.kernels import autotune
+    from repro.serving.fft_service import FFTService, FFTServiceConfig
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    saved = dict(autotune._TABLES)
+    saved_loaded = set(autotune._LOADED)
+    autotune._TABLES.clear()
+    autotune._LOADED.clear()
+    try:
+        cfg = FFTServiceConfig(s=64, m=2, n_workers=4, precision="bf16",
+                               autotune=False)
+        svc = FFTService(cfg)
+        monkeypatch.setattr(FFTService, "_probe_bf16",
+                            lambda self, s, kind: False)
+        assert svc._precision_for(64, "c2c") == "f32"
+        ent = autotune.lookup("bf16", s=64, m=2, k="c2c",
+                              mode=__import__("repro.kernels.ops",
+                                              fromlist=["ops"])._mode(None))
+        assert ent == {"ok": False}
+        # the verdict is sticky: a healthy probe later still reads f32
+        monkeypatch.setattr(FFTService, "_probe_bf16",
+                            lambda self, s, kind: True)
+        assert svc._precision_for(64, "c2c") == "f32"
+    finally:
+        autotune._TABLES.clear()
+        autotune._TABLES.update(saved)
+        autotune._LOADED.clear()
+        autotune._LOADED.update(saved_loaded)

@@ -1,0 +1,62 @@
+"""CI smoke for the kernel autotuner (DESIGN.md §10): cold search ->
+persisted table -> warm reuse, on a tiny candidate set.
+
+Runs in the kernels-interpret job.  The point is structural, not perf:
+a search actually executes the candidate variants, the winning entries
+land in the backend-keyed JSON cache, a simulated fresh process reloads
+that file instead of re-searching, and dispatch reads the recorded
+winner.  Everything here is seconds-cheap (L=64, s=64 buckets, 1 rep).
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="autotune-smoke-")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = tmp
+
+    from repro.kernels import autotune, ops
+
+    # -- cold search: one four-step shape, one bucket shape, tiny reps
+    before = autotune.searches_run()
+    fent = autotune.ensure_fourstep(64, batch=2, mode="direct", reps=1)
+    bent = autotune.ensure_bucket("bucket", 64, 2, 4, q=4, mode="direct",
+                                  reps=1)
+    assert autotune.searches_run() == before + 2, "searches did not run"
+    assert fent["variant"] in ("fused", "two_pass", "xla"), fent
+    assert bent["block_q"] in (1, 2, 4), bent
+
+    # -- the table was persisted, backend-keyed, schema-stamped
+    path = autotune.cache_path()
+    assert path.exists(), f"no cache file at {path}"
+    blob = json.loads(path.read_text())
+    assert blob["version"] == autotune.SCHEMA_VERSION
+    keys = sorted(blob["entries"])
+    assert any(k.startswith("fourstep|") for k in keys), keys
+    assert any(k.startswith("bucket|") for k in keys), keys
+
+    # -- warm reuse: a fresh process (memory dropped, disk kept) must do
+    #    ZERO additional searches for the same keys
+    autotune.clear(memory_only=True)
+    warm_f = autotune.ensure_fourstep(64, batch=2, mode="direct", reps=1)
+    warm_b = autotune.ensure_bucket("bucket", 64, 2, 4, q=4, mode="direct",
+                                    reps=1)
+    assert autotune.searches_run() == before + 2, "warm path re-searched"
+    assert warm_f["variant"] == fent["variant"]
+    assert warm_b["block_q"] == bent["block_q"]
+
+    # -- dispatch reads the recorded winner
+    got = ops._tuned_block_q("bucket", 4, 10**9, "direct", s=64, m=2, n=4)
+    assert got == bent["block_q"], (got, bent)
+
+    print(f"autotune smoke ok: {len(keys)} entries in {path.name}, "
+          f"fourstep->{fent['variant']}, bucket block_q={bent['block_q']}, "
+          f"warm reuse verified")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
