@@ -6,6 +6,13 @@ Also measures the batched scheduler (DESIGN.md §5): wall-clock throughput
 of ``submit_batch`` (one jitted encode/decode per (s, m) bucket) vs the
 sequential per-request path, emitted to ``BENCH_service.json`` for the
 perf trajectory.
+
+The ``open_loop`` section (DESIGN.md §11) is the SLO story: a Poisson
+arrival trace drives the streaming front-end (deadline-aware continuous
+batching + double-buffered staging) against the naive fill-only /
+synchronous-staging baseline IN THE SAME RUN, reporting p50/p99 latency
+vs offered load.  The acceptance claim -- streaming p99 at mid-load at
+least 1.3x better than the baseline -- is asserted on every full run.
 """
 
 from __future__ import annotations
@@ -13,17 +20,42 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import platform
+import statistics
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.straggler import StragglerModel
-from repro.serving import FFTService, FFTServiceConfig
+from repro.serving import FFTService, FFTServiceConfig, ServiceStats
 
 # BENCH_SMOKE=1 (the CI bench-smoke job): few requests/reps, NO artifact
 # write -- structural + correctness signal only, fast enough to gate PRs
 SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
+# BENCH_ONLY=<section> runs a single section (stragglers | batched |
+# open_loop) for a focused CI signal; implies no artifact write
+ONLY = os.environ.get("BENCH_ONLY", "")
+
+
+def _want(section: str) -> bool:
+    return not ONLY or ONLY == section
+
+
+def _versions() -> dict:
+    """Stamp each BENCH_service.json entry so trajectory rows are
+    comparable across CI runners (jax/platform drift is the usual
+    explanation for a mystery step in the curves)."""
+    import jaxlib
+
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
 
 
 def _requests(n, s, key):
@@ -35,8 +67,7 @@ def _requests(n, s, key):
     return xs, key
 
 
-def run() -> list[str]:
-    lines = ["bench_service: coded FFT serving with stragglers"]
+def _straggler_section(lines: list[str]) -> None:
     for mu in ((1.0,) if SMOKE else (2.0, 1.0, 0.5)):
         svc = FFTService(FFTServiceConfig(
             s=2048, m=4, n_workers=8,
@@ -56,6 +87,8 @@ def run() -> list[str]:
             f"tolerated, worst err {worst:.1e}")
         assert worst < 1e-2
 
+
+def _batched_sections(result: dict, lines: list[str]) -> None:
     # ---- batched scheduler throughput (DESIGN.md §5/§8) ---------------------
     n_req, s = (16 if SMOKE else 64), 2048
     cfg = FFTServiceConfig(s=s, m=4, n_workers=8,
@@ -63,8 +96,6 @@ def run() -> list[str]:
                            seed=0, max_batch=64)
     key = jax.random.PRNGKey(1)
     xs, key = _requests(n_req, s, key)
-
-    from repro.serving import ServiceStats
 
     seq = FFTService(cfg)
     jax.block_until_ready(seq.submit(xs[0]))           # compile warm-up
@@ -86,7 +117,7 @@ def run() -> list[str]:
                 for x, y in zip(xs, outs_bat))
     assert worst < 1e-2
     bat_stats = bat.stats.summary()
-    result = {
+    result.update({
         "s": s,
         "m": cfg.m,
         "n_workers": cfg.n_workers,
@@ -103,13 +134,11 @@ def run() -> list[str]:
         "sync_s": bat_stats["sync_s"],
         "host_transfers": bat_stats["host_transfers"],
         "decode_cache_misses": bat_stats["decode_cache_misses"],
-    }
+    })
 
     # ---- real-input (r2c) bucket config (DESIGN.md §7) ----------------------
     # same shape, REAL traffic: half-payload worker shards through the
     # r2c executor vs serving the same signals as complex requests
-    import numpy as np
-
     rng = np.random.default_rng(7)
     xs_real = [jnp.asarray(rng.normal(size=s).astype(np.float32))
                for _ in range(n_req)]
@@ -131,7 +160,6 @@ def run() -> list[str]:
             else:
                 rsvc.submit_batch(xs_cplx)
             acc.append(time.perf_counter() - t0)
-    import statistics
 
     r_med, c_med = statistics.median(t_r2c), statistics.median(t_c2c)
     result["rfft"] = {
@@ -195,6 +223,129 @@ def run() -> list[str]:
         lines.append(
             f"  batched scheduler (smoke): {n_req} reqs in {dt_bat * 1e3:.1f} "
             f"ms [BENCH_SMOKE=1: artifact not written]")
+    else:
+        lines.append(
+            f"  batched scheduler: {n_req} reqs in {dt_bat * 1e3:.1f} ms "
+            f"({result['batched_rps']:.0f} rps) vs sequential "
+            f"{dt_seq * 1e3:.1f} ms ({result['sequential_rps']:.0f} rps) "
+            f"-> {result['batch_speedup']:.2f}x")
+
+
+def _open_loop_section(lines: list[str]) -> dict:
+    """Poisson arrival trace -> p50/p99 latency vs offered load, streaming
+    front-end vs the naive (fill-only, synchronous-staging) baseline
+    measured in the SAME run (DESIGN.md §11)."""
+    from repro.serving.streaming import (
+        AdmissionError,
+        StreamConfig,
+        StreamingFFTService,
+    )
+
+    s = 512 if SMOKE else 2048
+    cfg = FFTServiceConfig(s=s, m=4, n_workers=8,
+                           straggler=StragglerModel(t0=1.0, mu=1.0),
+                           seed=0, max_batch=32)
+    svc = FFTService(cfg)
+    # precompile every power-of-two bucket: a cold compile inside a
+    # latency window would swamp the queueing signal being measured
+    svc.warmup()
+    rng = np.random.default_rng(11)
+    pool = [(rng.normal(size=s)
+             + 1j * rng.normal(size=s)).astype(np.complex64)
+            for _ in range(32)]
+    rates = [300] if SMOKE else [500, 1000, 2000]
+    n_per = 40 if SMOKE else 600
+    slack = 0.005
+    modes = {
+        "streaming": StreamConfig(slack_s=slack),
+        # the before-this-PR story: dispatch only full buckets, stage
+        # synchronously -- batch rps is identical, the tail is not
+        "naive": StreamConfig(slack_s=slack, fill_only=True,
+                              pipelined=False),
+    }
+    out = {"s": s, "m": cfg.m, "n_workers": cfg.n_workers,
+           "max_batch": cfg.max_batch, "slack_ms": slack * 1e3,
+           "n_per_rate": n_per, "curves": {}}
+    for mode, scfg in modes.items():
+        curve = []
+        for rate in rates:
+            svc.stats = ServiceStats()       # fresh window per drive
+            stream = StreamingFFTService(svc, scfg)
+            arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_per))
+            futs, rejected = [], 0
+            t0 = time.perf_counter()
+            for i, t_arr in enumerate(arrivals):
+                lag = t_arr - (time.perf_counter() - t0)
+                if lag > 0:
+                    time.sleep(lag)
+                try:
+                    futs.append((i, stream.submit(pool[i % len(pool)])))
+                except AdmissionError:
+                    rejected += 1
+            stream.drain()
+            stream.close()
+            lats = np.asarray([f.latency_s for _, f in futs])
+            worst = max(
+                float(np.abs(f.result()
+                             - np.fft.fft(pool[i % len(pool)])).max())
+                for i, f in futs[:8])
+            assert worst < 1e-2
+            st = svc.stats.summary()
+            # structural invariants of the streaming path: nothing lost,
+            # ONE device->host transfer per dispatched bucket
+            assert len(futs) + rejected == n_per
+            assert st["host_transfers"] == st["batches"]
+            assert st["latency"]["count"] == len(futs)
+            curve.append({
+                "offered_rps": rate,
+                "n_offered": n_per,
+                "completed": len(futs),
+                "rejected": rejected,
+                "p50_ms": float(np.percentile(lats, 50) * 1e3),
+                "p99_ms": float(np.percentile(lats, 99) * 1e3),
+                "mean_ms": float(lats.mean() * 1e3),
+                "buckets": st["batches"],
+                "fill_dispatches": st["fill_dispatches"],
+                "deadline_dispatches": st["deadline_dispatches"],
+                "drain_dispatches": st["drain_dispatches"],
+                "queue_peak": st["queue_peak"],
+                "staging_overlap_s": st["staging_overlap_s"],
+            })
+            lines.append(
+                f"  open-loop[{mode}] {rate} rps: p50 "
+                f"{curve[-1]['p50_ms']:.1f} ms, p99 "
+                f"{curve[-1]['p99_ms']:.1f} ms "
+                f"({curve[-1]['completed']}/{n_per} ok, "
+                f"{rejected} rejected, "
+                f"{st['deadline_dispatches']}/{st['fill_dispatches']}"
+                f"/{st['drain_dispatches']} ddl/fill/drain)")
+        out["curves"][mode] = curve
+    mid = len(rates) // 2
+    ratio = (out["curves"]["naive"][mid]["p99_ms"]
+             / out["curves"]["streaming"][mid]["p99_ms"])
+    out["mid_load_rps"] = rates[mid]
+    out["p99_naive_over_streaming_mid_load"] = ratio
+    lines.append(
+        f"  open-loop p99 @ {rates[mid]} rps: naive/streaming = "
+        f"{ratio:.2f}x (acceptance floor 1.3x)")
+    if not SMOKE:
+        assert ratio >= 1.3, (
+            f"streaming p99 must beat the fill-only baseline by >=1.3x "
+            f"at mid-load; measured {ratio:.2f}x")
+    return out
+
+
+def run() -> list[str]:
+    lines = ["bench_service: coded FFT serving with stragglers"]
+    result: dict = {}
+    if _want("stragglers"):
+        _straggler_section(lines)
+    if _want("batched"):
+        _batched_sections(result, lines)
+    if _want("open_loop"):
+        result["open_loop"] = _open_loop_section(lines)
+    result["versions"] = _versions()
+    if SMOKE or ONLY:
         return lines
     # anchor to the repo root so the tracked artifact updates regardless of cwd
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_service.json"
@@ -210,11 +361,7 @@ def run() -> list[str]:
             pass
     result["history"] = history
     out_path.write_text(json.dumps(result, indent=2) + "\n")
-    lines.append(
-        f"  batched scheduler: {n_req} reqs in {dt_bat * 1e3:.1f} ms "
-        f"({result['batched_rps']:.0f} rps) vs sequential "
-        f"{dt_seq * 1e3:.1f} ms ({result['sequential_rps']:.0f} rps) "
-        f"-> {result['batch_speedup']:.2f}x  [written to {out_path}]")
+    lines.append(f"  [written to {out_path}]")
     return lines
 
 

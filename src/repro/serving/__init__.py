@@ -1,9 +1,16 @@
-from repro.serving.batching import bucket_size, pad_requests
+from repro.serving.batching import LatencyHistogram, bucket_size, pad_requests
 from repro.serving.decode_cache import DecodeMatrixCache
 from repro.serving.engine import EngineConfig, GenerationEngine
 from repro.serving.fft_service import FFTService, FFTServiceConfig, ServiceStats
 from repro.serving.serve_step import make_serve_fns, sample_token
+from repro.serving.streaming import (
+    AdmissionError,
+    StreamConfig,
+    StreamingFFTService,
+)
 
-__all__ = ["DecodeMatrixCache", "EngineConfig", "GenerationEngine",
-           "FFTService", "FFTServiceConfig", "ServiceStats", "bucket_size",
-           "pad_requests", "make_serve_fns", "sample_token"]
+__all__ = ["AdmissionError", "DecodeMatrixCache", "EngineConfig",
+           "GenerationEngine", "FFTService", "FFTServiceConfig",
+           "LatencyHistogram", "ServiceStats", "StreamConfig",
+           "StreamingFFTService", "bucket_size", "pad_requests",
+           "make_serve_fns", "sample_token"]

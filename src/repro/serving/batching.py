@@ -4,11 +4,74 @@ Both schedulers (the LM generation engine and the coded-FFT service) pad
 variable request counts into fixed power-of-two buckets so the jitted
 compute functions never retrace on partial batches; finished/padded rows
 are masked rather than blocking the batch.
+
+:class:`LatencyHistogram` is the per-request latency aggregate the
+streaming front-end (``serving/streaming.py``) records into
+``ServiceStats``: log-spaced bins so p50/p99 queries stay O(bins) without
+keeping per-request samples alive.
 """
 
 from __future__ import annotations
 
-__all__ = ["bucket_size", "pad_requests"]
+import math
+
+__all__ = ["LatencyHistogram", "bucket_size", "pad_requests"]
+
+
+class LatencyHistogram:
+    """Log-spaced latency histogram with O(1) record and O(bins) quantiles.
+
+    Bins cover ``LO``..``HI`` seconds at ``PER_DECADE`` bins per decade
+    (~15% bin width -- one bin edge per 10^(1/16)x); out-of-range samples
+    clamp to the edge bins.  Percentiles return the geometric midpoint of
+    the winning bin, which is plenty for SLO reporting (p50/p99 good to a
+    bin width) without the memory of a per-request sample list.
+    """
+
+    LO = 1e-6          # 1 us
+    HI = 1e3           # 1000 s
+    PER_DECADE = 16
+
+    def __init__(self):
+        decades = int(round(math.log10(self.HI / self.LO)))
+        self.counts = [0] * (decades * self.PER_DECADE + 1)
+        self.n = 0
+        self.total = 0.0
+        self.max = 0.0
+
+    def record(self, seconds: float) -> None:
+        s = max(float(seconds), 0.0)
+        if s > 0.0:
+            b = int((math.log10(s) - math.log10(self.LO)) * self.PER_DECADE)
+            b = min(max(b, 0), len(self.counts) - 1)
+        else:
+            b = 0
+        self.counts[b] += 1
+        self.n += 1
+        self.total += s
+        self.max = max(self.max, s)
+
+    def percentile(self, q: float) -> float:
+        """The ``q``-th percentile (0..100) in seconds (NaN when empty)."""
+        if self.n == 0:
+            return float("nan")
+        rank = max(1, math.ceil(q / 100.0 * self.n))
+        seen = 0
+        for b, cnt in enumerate(self.counts):
+            seen += cnt
+            if seen >= rank:
+                lo = self.LO * 10 ** (b / self.PER_DECADE)
+                return lo * 10 ** (0.5 / self.PER_DECADE)
+        return self.max
+
+    def summary(self) -> dict:
+        return {
+            "count": self.n,
+            "mean_s": self.total / self.n if self.n else float("nan"),
+            "p50_s": self.percentile(50.0),
+            "p99_s": self.percentile(99.0),
+            "max_s": self.max,
+        }
 
 
 def bucket_size(n: int, cap: int) -> int:

@@ -70,17 +70,31 @@ class GenerationEngine:
         outs: list[list[int]] = [[] for _ in range(e.batch_size)]
         done = np.zeros(e.batch_size, bool)
         step0 = e.prompt_len
+        # Fetch tokens ONE STEP BEHIND the decode launches: step t+1's
+        # decode goes out (async dispatch) BEFORE token t crosses to the
+        # host, so the blocking device_get and the per-token EOS/append
+        # bookkeeping overlap the next step's device compute instead of
+        # serializing with it.  An EOS discovered on the host simply
+        # discards the already-launched speculative step -- wasted FLOPs
+        # for one step, never wrong tokens (and one decode FEWER than the
+        # old loop paid in the no-EOS case, which decoded past the last
+        # fetched token).
+        pending = next_tok
         for t in range(e.max_new_tokens):
-            toks = np.asarray(jax.device_get(next_tok)).reshape(-1)
+            spec = None
+            if t + 1 < e.max_new_tokens:
+                logits, cache = self._decode(
+                    self.params, cache, pending,
+                    jnp.asarray(step0 + t, jnp.int32))
+                key, sub = jax.random.split(key)
+                spec = sample_token(logits, sub, e.temperature)
+            toks = np.asarray(jax.device_get(pending)).reshape(-1)
             for i in range(n_live):
                 if not done[i]:
                     outs[i].append(int(toks[i]))
                     if e.eos_id is not None and toks[i] == e.eos_id:
                         done[i] = True
-            if done[:n_live].all():
+            if done[:n_live].all() or spec is None:
                 break
-            logits, cache = self._decode(
-                self.params, cache, next_tok, jnp.asarray(step0 + t, jnp.int32))
-            key, sub = jax.random.split(key)
-            next_tok = sample_token(logits, sub, e.temperature)
+            pending = spec
         return [outs[i] for i in range(n_live)]

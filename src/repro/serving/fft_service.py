@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional, Sequence, Union
 
 import jax
@@ -71,10 +72,28 @@ from repro.core.strategies import coded_fft_threshold
 from repro.distributed.coded_runtime import DistributedCodedPlan
 from repro.distributed.straggler import StragglerModel
 from repro.kernels import autotune, ops, ref
-from repro.serving.batching import bucket_size
+from repro.serving.batching import LatencyHistogram, bucket_size
 from repro.serving.decode_cache import DecodeMatrixCache
 
 __all__ = ["FFTServiceConfig", "FFTService", "ServiceStats"]
+
+
+def _donate_ingress(fn):
+    """Jit ``fn`` with its ingress buffer donated.
+
+    The real-kind bucket I/O changes shape across the call (``f32[b, s]``
+    -> ``c64[b, s//2+1]`` and its adjoint), so XLA can never ALIAS the
+    donated ingress to the output the way the same-shape c2c path does --
+    but donation still releases the buffer after its last use, so the
+    encode/worker temporaries reuse its memory instead of growing the
+    peak bucket footprint (ROADMAP item 5).  jax warns per-executable
+    that no aliasing happened; that is the expected outcome here, not a
+    bug signal, so the message is filtered (idempotently, message-scoped)
+    when such a runner is built.
+    """
+    warnings.filterwarnings(
+        "ignore", message="Some donated buffers were not usable")
+    return jax.jit(fn, donate_argnums=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,7 +144,19 @@ class ServiceStats:
     #                                both stay 0 on the device-decode path
     dispatch_s: float = 0.0        # wall time staging + launching buckets
     sync_s: float = 0.0            # wall time blocked on device results
-    host_transfers: int = 0        # device->host fetches (1 per submit_batch)
+    host_transfers: int = 0        # device->host fetches (1 per submit_batch
+    #                                call; 1 per bucket on the streaming path)
+    # -- open-loop streaming observables (serving/streaming.py, §11) ----
+    queue_peak: int = 0            # high-water mark of undispatched requests
+    rejected: int = 0              # admission-control rejections
+    fill_dispatches: int = 0       # buckets dispatched because they filled
+    deadline_dispatches: int = 0   # ... because the oldest member's slack
+    #                                ran out
+    drain_dispatches: int = 0      # ... flushed by drain()/close()
+    staging_overlap_s: float = 0.0  # host staging wall time hidden behind
+    #                                 a downstream bucket's device compute
+    latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)  # per-request arrival->result
 
     def summary(self) -> dict:
         n = max(self.requests, 1)
@@ -142,6 +173,13 @@ class ServiceStats:
             "dispatch_s": self.dispatch_s,
             "sync_s": self.sync_s,
             "host_transfers": self.host_transfers,
+            "queue_peak": self.queue_peak,
+            "rejected": self.rejected,
+            "fill_dispatches": self.fill_dispatches,
+            "deadline_dispatches": self.deadline_dispatches,
+            "drain_dispatches": self.drain_dispatches,
+            "staging_overlap_s": self.staging_overlap_s,
+            "latency": self.latency.summary(),
         }
 
 
@@ -400,7 +438,10 @@ class FFTService:
                     yr, yi = ops.rfft_postdecode_planar(hr, hi, s)
                 return ref.unplanar(yr, yi)
 
-            return jax.jit(fn)
+            # real ingress donated too (ROADMAP item 5): no aliasing (the
+            # shape changes), but the f32 request buffer frees early for
+            # the encode/worker temporaries
+            return _donate_ingress(fn)
 
         if kind == "c2r":
             whole = not direct and ops.coded_irbucket_fusable(s, m, n)
@@ -427,7 +468,8 @@ class FFTService:
                 hr, hi = ops.decode_apply(dr, di, br, bi)
                 return ops.irfft_unpack_planar(hr, hi)
 
-            return jax.jit(fn)
+            # half-spectrum ingress donated (same early-free rationale)
+            return _donate_ingress(fn)
 
         whole = not direct and (ops.coded_bucket_fusable(s, m, n)
                                 or ops.coded_bucket_streamable(s, m, n))
@@ -453,10 +495,9 @@ class FFTService:
                 yr, yi = ops.recombine_planar(hr, hi, s)
             return ref.unplanar(yr, yi)
 
-        # donate only c2c: its (bucket, s) c64 output matches the ingress
-        # buffer exactly, so donation is a true in-place reuse; the real
-        # kinds change shape/dtype across the call and would only earn
-        # "unusable donation" noise
+        # c2c donation is a true in-place ALIAS: the (bucket, s) c64
+        # output matches the ingress buffer exactly (the real kinds above
+        # donate for the early-free only)
         return jax.jit(fn, donate_argnums=0)
 
     def _make_kernel_runner(self, s: int, bucket: int, kind: str = "c2c"):
@@ -662,25 +703,11 @@ class FFTService:
             raise ValueError(
                 f"per-request kinds: got {len(kinds)} kinds "
                 f"for {len(xs)} requests")
-        for k in set(kinds):
-            if k not in self.KINDS:
-                raise ValueError(f"unknown bucket kind {k!r}")
         cfg = self.cfg
         results: list[Optional[np.ndarray]] = [None] * len(xs)
         by_bucket: dict[tuple, list[int]] = {}
         for i, (x, k) in enumerate(zip(xs, kinds)):
-            n_last = int(x.shape[-1])
-            if k in ("c2r", "irfftn") and n_last < 2:
-                raise ValueError(
-                    f"{k} requests need >= 2 half-spectrum bins "
-                    f"(s = 2*(bins-1) > 0), got {n_last}")
-            if k in self.ND_KINDS:
-                # n-D kinds bucket by the full TIME-domain shape tuple
-                time_last = 2 * (n_last - 1) if k == "irfftn" else n_last
-                s = tuple(int(d) for d in x.shape[:-1]) + (time_last,)
-            else:
-                s = 2 * (n_last - 1) if k == "c2r" else n_last
-            by_bucket.setdefault((s, k), []).append(i)
+            by_bucket.setdefault((self.bucket_key(x, k), k), []).append(i)
 
         # phase 1 -- dispatch: stage + launch every bucket, no host sync
         t0 = time.perf_counter()
@@ -810,15 +837,36 @@ class FFTService:
             return args
         return (jnp.asarray(xb), jnp.asarray(masks))
 
-    def _dispatch_bucket(self, s, idxs: list[int], xs,
-                         kind: str = "c2c") -> jax.Array:
-        """Stage + launch one bucket; returns the UNSYNCED device result.
+    # -- staging seam (shared with serving/streaming.py, DESIGN.md §11) --
+    def bucket_key(self, x, kind: str):
+        """The bucket extent ``s`` one request lands in: the scalar
+        TIME-domain length for 1-D kinds (a c2r request of ``h`` bins maps
+        to ``s = 2*(h-1)``), the full time-domain shape tuple for the n-D
+        kinds.  Validates the kind and minimal half-spectrum width."""
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown bucket kind {kind!r}")
+        n_last = int(x.shape[-1])
+        if kind in ("c2r", "irfftn") and n_last < 2:
+            raise ValueError(
+                f"{kind} requests need >= 2 half-spectrum bins "
+                f"(s = 2*(bins-1) > 0), got {n_last}")
+        if kind in self.ND_KINDS:
+            # n-D kinds bucket by the full TIME-domain shape tuple
+            time_last = 2 * (n_last - 1) if kind == "irfftn" else n_last
+            return tuple(int(d) for d in x.shape[:-1]) + (time_last,)
+        return 2 * (n_last - 1) if kind == "c2r" else n_last
 
-        The jitted call returns immediately (async dispatch), so callers
-        can launch every bucket before blocking once on all of them.
+    def stage_bucket(self, s, kind: str, reqs: Sequence) -> tuple:
+        """Host-side staging for one bucket of same-``(s, kind)`` requests.
+
+        Everything that costs host time lives here -- the straggler draw,
+        the numpy pack into the padded bucket buffer, and the host->device
+        argument conversion -- so the streaming front-end can run it on a
+        staging thread while the previous bucket computes (DESIGN.md §11).
+        Returns ``(bucket, args)`` for :meth:`launch_bucket`.
         """
         cfg = self.cfg
-        n_live = len(idxs)
+        n_live = len(reqs)
         bucket = bucket_size(n_live, cfg.max_batch)
         lat, mask = self._simulate_arrivals(n_live, kind)
         self._account(lat, mask)
@@ -826,11 +874,25 @@ class FFTService:
 
         xb = self._bucket_buffer(s, bucket, kind)
         real_in = kind in ("r2c", "rfftn")
-        for row, i in enumerate(idxs):
-            x = np.asarray(xs[i])
+        for row, x in enumerate(reqs):
+            x = np.asarray(x)
             xb[row] = x.real if real_in and np.iscomplexobj(x) else x
         # padded rows: every worker "responds" so decode stays well-posed
         masks = np.ones((bucket, cfg.n_workers), bool)
         masks[:n_live] = mask
-        return self._runner_for(s, bucket, kind)(
-            *self._bucket_args(s, kind, xb, masks))
+        return bucket, self._bucket_args(s, kind, xb, masks)
+
+    def launch_bucket(self, s, bucket: int, kind: str, args: tuple
+                      ) -> jax.Array:
+        """Launch one staged bucket; returns the UNSYNCED device result.
+
+        The jitted call returns immediately (async dispatch), so callers
+        can launch every bucket before blocking once on all of them.
+        """
+        return self._runner_for(s, bucket, kind)(*args)
+
+    def _dispatch_bucket(self, s, idxs: list[int], xs,
+                         kind: str = "c2c") -> jax.Array:
+        """Stage + launch one bucket (the closed-loop submit_batch path)."""
+        bucket, args = self.stage_bucket(s, kind, [xs[i] for i in idxs])
+        return self.launch_bucket(s, bucket, kind, args)

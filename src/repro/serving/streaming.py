@@ -1,0 +1,363 @@
+"""Open-loop streaming front-end for the FFT service (DESIGN.md §11).
+
+``FFTService.submit_batch`` is closed-loop: the caller hands over a
+complete request list and blocks on one device fetch, so its throughput
+number says nothing about latency under CONTINUOUS arrivals.
+:class:`StreamingFFTService` turns the batched scheduler into a
+continuously-batching service with an SLO story:
+
+* **Async request queue** -- :meth:`submit` is non-blocking: it enqueues
+  the request and returns a ``concurrent.futures.Future`` that resolves
+  to the transform (with its measured ``latency_s`` attached).
+* **Deadline-aware bucket formation** -- requests accumulate per
+  ``(s, m, kind)`` bucket and dispatch when the bucket FILLS
+  (``max_batch``) *or* when the OLDEST member's slack runs out,
+  whichever comes first.  A partial bucket never waits on arrivals that
+  may not come: the batch-rps knob and the p99 knob decouple.
+* **Admission control / backpressure** -- the undispatched queue is
+  bounded (``max_queue``); over capacity, :meth:`submit` raises a typed
+  :class:`AdmissionError` with a machine-readable ``reason`` instead of
+  letting queueing delay grow without bound (reject early, don't
+  collapse late).
+* **Double-buffered host->device staging** -- a dedicated staging
+  thread packs bucket k+1's numpy buffers and launches its (async)
+  device call while the sync thread is still blocked fetching bucket k.
+  The host-side interleave/pack cost that ``submit_batch`` pays
+  serially inside its dispatch loop is hidden behind device compute;
+  ``ServiceStats.staging_overlap_s`` measures exactly the hidden share.
+
+The pipeline is three threads around two depth-bounded queues::
+
+    callers --submit()--> pending per (s, kind)   [admission bound]
+        | scheduler: fill-or-deadline bucket formation
+        v
+    stage_q  (depth scfg.stage_depth)
+        | stager: straggler sim + numpy pack + H2D + async launch
+        v
+    sync_q   (depth 1  ==  double buffer: bucket k+1 stages/computes
+        |                   while bucket k is being fetched)
+        v syncer: jax.device_get -> resolve futures -> latency histogram
+
+Every ``FFTService`` internal (plan/runner caches, the staging numpy
+work, ``stats.batches`` accounting) is touched ONLY by the staging
+thread, so the service object itself never needs locks.  The bucket
+executors are untouched: the streaming path launches the SAME jitted
+one-launch/one-transfer runners as ``submit_batch`` (the jaxpr pins
+hold by construction).
+
+``fill_only=True`` + ``pipelined=False`` reproduce the naive baseline
+the open-loop benchmark races against: dispatch only full buckets, and
+stage synchronously on the scheduler thread.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from queue import Queue
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.serving.fft_service import FFTService
+
+__all__ = ["AdmissionError", "StreamConfig", "StreamingFFTService"]
+
+
+class AdmissionError(RuntimeError):
+    """Typed rejection from admission control.
+
+    ``reason`` is machine-readable: ``"queue_full"`` (the undispatched
+    queue is at ``max_queue``) or ``"closed"`` (submit after close).
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"request rejected: {reason}"
+                         + (f" ({detail})" if detail else ""))
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    slack_s: float = 0.010      # queueing slack before a PARTIAL bucket
+    #                             dispatches (per-request override via
+    #                             submit(..., slack_s=...))
+    max_queue: int = 1024       # admission bound on undispatched requests
+    stage_depth: int = 2        # bucket plans buffered ahead of the stager
+    fill_only: bool = False     # naive baseline: dispatch only on full
+    #                             buckets (plus the drain flush)
+    pipelined: bool = True      # False = naive baseline: stage + launch +
+    #                             sync inline on the scheduler thread
+
+
+@dataclasses.dataclass
+class _Request:
+    x: object                   # the (host) request payload
+    kind: str
+    arrival: float              # perf_counter at submit
+    deadline: float             # arrival + slack
+    future: Future
+
+
+@dataclasses.dataclass
+class _BucketPlan:
+    s: object                   # scalar length or n-D shape tuple
+    kind: str
+    reqs: list
+    reason: str                 # "fill" | "deadline" | "drain"
+
+
+class StreamingFFTService:
+    """Deadline-aware continuous batching over one :class:`FFTService`.
+
+    The wrapped service's ``stats`` object is extended in place (queue
+    peak, dispatch reasons, staging overlap, the per-request latency
+    histogram), so one ``ServiceStats.summary()`` tells the whole story.
+
+    Warm up the wrapped service (``service.warmup()``) BEFORE offering
+    traffic: the streaming scheduler dispatches every power-of-two
+    bucket size up to ``max_batch``, and a cold compile inside a latency
+    window is exactly the stall the front-end exists to avoid.
+    """
+
+    def __init__(self, service: FFTService,
+                 scfg: StreamConfig = StreamConfig()):
+        self.service = service
+        self.scfg = scfg
+        self.stats = service.stats       # extended in place
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: dict[tuple, list[_Request]] = {}
+        self._depth = 0                  # undispatched requests
+        self._outstanding = 0            # submitted, not yet resolved
+        self._closed = False
+        self._flush = False
+        self._stage_q: Queue = Queue(maxsize=max(1, scfg.stage_depth))
+        self._sync_q: Queue = Queue(maxsize=1)
+        self._threads = [threading.Thread(
+            target=self._scheduler, name="stream-scheduler", daemon=True)]
+        if scfg.pipelined:
+            self._threads.append(threading.Thread(
+                target=self._stager, name="stream-stager", daemon=True))
+            self._threads.append(threading.Thread(
+                target=self._syncer, name="stream-syncer", daemon=True))
+        for t in self._threads:
+            t.start()
+
+    # -- client surface -------------------------------------------------
+    def submit(self, x, kind: str = "c2c",
+               slack_s: Optional[float] = None) -> Future:
+        """Enqueue one request; returns a Future resolving to the result.
+
+        Non-blocking.  Raises :class:`AdmissionError` when the service is
+        over capacity (``reason="queue_full"``) or closed.  The resolved
+        future carries ``latency_s`` -- arrival-to-result wall time -- as
+        an attribute.
+        """
+        x = np.asarray(x)
+        s = self.service.bucket_key(x, kind)      # validates kind/shape
+        now = time.perf_counter()
+        slack = self.scfg.slack_s if slack_s is None else float(slack_s)
+        req = _Request(x, kind, now, now + slack, Future())
+        with self._cv:
+            if self._closed:
+                raise AdmissionError("closed")
+            if self._depth >= self.scfg.max_queue:
+                self.stats.rejected += 1
+                raise AdmissionError(
+                    "queue_full", f"max_queue={self.scfg.max_queue}")
+            self._pending.setdefault((s, kind), []).append(req)
+            self._depth += 1
+            self._outstanding += 1
+            self.stats.queue_peak = max(self.stats.queue_peak, self._depth)
+            self._cv.notify_all()
+        return req.future
+
+    @property
+    def queue_depth(self) -> int:
+        """Undispatched requests right now (the admission-bounded gauge)."""
+        with self._lock:
+            return self._depth
+
+    def flush(self) -> None:
+        """Dispatch every pending partial bucket immediately (reason
+        ``"drain"``), without waiting for fills or deadlines."""
+        with self._cv:
+            self._flush = True
+            self._cv.notify_all()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Flush, then block until every submitted request has resolved.
+
+        Returns False if ``timeout`` elapsed first.
+        """
+        with self._cv:
+            self._flush = True
+            self._cv.notify_all()
+            return self._cv.wait_for(
+                lambda: self._outstanding == 0, timeout)
+
+    def close(self) -> None:
+        """Drain outstanding work and stop the pipeline threads."""
+        with self._cv:
+            if self._closed:
+                return
+            self._flush = True
+            self._closed = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join()
+
+    def __enter__(self) -> "StreamingFFTService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- scheduler: fill-or-deadline bucket formation -------------------
+    def _scheduler(self) -> None:
+        cap = self.service.cfg.max_batch
+        while True:
+            with self._cv:
+                plan = None
+                while True:
+                    plan = self._pop_ready_locked(cap)
+                    if plan is not None or (self._closed
+                                            and not self._pending):
+                        break
+                    self._cv.wait(self._timeout_locked())
+            if plan is None:
+                break                        # closed and fully dispatched
+            with self._lock:
+                field = f"{plan.reason}_dispatches"
+                setattr(self.stats, field,
+                        getattr(self.stats, field) + 1)
+            if self.scfg.pipelined:
+                self._stage_q.put(plan)      # backpressure: bounded depth
+            else:
+                self._stage_and_sync(plan)   # naive serial baseline
+        self._stage_q.put(None)              # sentinel for the stager
+
+    def _pop_ready_locked(self, cap: int) -> Optional[_BucketPlan]:
+        """The first dispatchable bucket under the fill-or-deadline rule."""
+        now = time.perf_counter()
+        choice = reason = None
+        for key, reqs in self._pending.items():
+            if len(reqs) >= cap:
+                choice, reason = key, "fill"
+                break
+            if self._flush or self._closed:
+                choice, reason = key, "drain"
+                break
+            if not self.scfg.fill_only and reqs[0].deadline <= now:
+                choice, reason = key, "deadline"
+                break
+        if choice is None:
+            if self._flush and not self._pending:
+                self._flush = False          # drain finished; disarm
+            return None
+        reqs = self._pending[choice]
+        take, rest = reqs[:cap], reqs[cap:]
+        if rest:
+            self._pending[choice] = rest
+        else:
+            del self._pending[choice]
+        self._depth -= len(take)
+        return _BucketPlan(choice[0], choice[1], take, reason)
+
+    def _timeout_locked(self) -> Optional[float]:
+        """Sleep until the earliest slack expiry (None = wait for a fill
+        notification -- the fill_only baseline never sets an alarm)."""
+        if self.scfg.fill_only or not self._pending:
+            return None
+        expiry = min(reqs[0].deadline for reqs in self._pending.values())
+        return max(expiry - time.perf_counter(), 0.0)
+
+    # -- stager: numpy pack + H2D + async launch ------------------------
+    def _stager(self) -> None:
+        while True:
+            plan = self._stage_q.get()
+            if plan is None:
+                break
+            # overlapped iff a downstream bucket is still in flight when
+            # this one starts staging (the double-buffer win, measured)
+            overlapped = self._sync_q.unfinished_tasks > 0
+            t0 = time.perf_counter()
+            try:
+                out = self._stage_and_launch(plan)
+            except Exception as e:                # noqa: BLE001
+                self._resolve(plan, error=e)
+                continue
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.stats.dispatch_s += dt
+                if overlapped:
+                    self.stats.staging_overlap_s += dt
+            self._sync_q.put((plan, out))
+        self._sync_q.put(None)                    # sentinel for the syncer
+
+    def _stage_and_launch(self, plan: _BucketPlan):
+        svc = self.service
+        bucket, args = svc.stage_bucket(
+            plan.s, plan.kind, [r.x for r in plan.reqs])
+        return svc.launch_bucket(plan.s, bucket, plan.kind, args)
+
+    # -- syncer: one device->host fetch per bucket ----------------------
+    def _syncer(self) -> None:
+        while True:
+            item = self._sync_q.get()
+            if item is None:
+                self._sync_q.task_done()
+                break
+            plan, out = item
+            t0 = time.perf_counter()
+            try:
+                rows = jax.device_get(out)
+            except Exception as e:                # noqa: BLE001
+                self._sync_q.task_done()
+                self._resolve(plan, error=e)
+                continue
+            dt = time.perf_counter() - t0
+            self._sync_q.task_done()
+            with self._lock:
+                self.stats.sync_s += dt
+                self.stats.host_transfers += 1
+            self._resolve(plan, rows=rows)
+
+    def _stage_and_sync(self, plan: _BucketPlan) -> None:
+        """The unpipelined baseline: stage, launch, and block, serially
+        on the scheduler thread (no staging/compute overlap)."""
+        t0 = time.perf_counter()
+        try:
+            out = self._stage_and_launch(plan)
+        except Exception as e:                    # noqa: BLE001
+            self._resolve(plan, error=e)
+            return
+        t1 = time.perf_counter()
+        rows = jax.device_get(out)
+        t2 = time.perf_counter()
+        with self._lock:
+            self.stats.dispatch_s += t1 - t0
+            self.stats.sync_s += t2 - t1
+            self.stats.host_transfers += 1
+        self._resolve(plan, rows=rows)
+
+    def _resolve(self, plan: _BucketPlan, rows=None,
+                 error: Optional[Exception] = None) -> None:
+        now = time.perf_counter()
+        with self._cv:
+            for req in plan.reqs:
+                self.stats.latency.record(now - req.arrival)
+            self._outstanding -= len(plan.reqs)
+            self._cv.notify_all()
+        # futures resolve OUTSIDE the lock: done-callbacks may re-enter
+        # submit()
+        for row, req in enumerate(plan.reqs):
+            req.future.latency_s = now - req.arrival
+            if error is not None:
+                req.future.set_exception(error)
+            else:
+                req.future.set_result(rows[row])

@@ -36,6 +36,28 @@ def test_greedy_generation_deterministic(engine):
     assert all(len(o) == 8 for o in out1)
 
 
+def test_generate_eos_truncation_with_overlapped_fetch(engine):
+    """The one-step-behind token fetch (decode t+1 launches before token t
+    reaches the host) must not change WHAT is generated: EOS still
+    truncates each row at its first occurrence, and rows without an EOS
+    are untouched.  The speculative decode launched past an EOS is
+    discarded on the host, never emitted."""
+    eng, cfg = engine
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 10)) for _ in range(3)]
+    base = eng.generate(prompts)
+    eos = base[0][1]                 # force EOS at row 0's second token
+    old = eng.ecfg.eos_id
+    eng.ecfg.eos_id = eos
+    try:
+        out = eng.generate(prompts)
+    finally:
+        eng.ecfg.eos_id = old
+    for got, want in zip(out, base):
+        expect = want[:want.index(eos) + 1] if eos in want else want
+        assert got == expect
+
+
 def test_prefill_decode_consistency(engine):
     """Greedy decode continuation must match teacher-forced prefill logits."""
     eng, cfg = engine

@@ -1,0 +1,180 @@
+"""Streaming front-end (DESIGN.md §11): deadline-aware bucket formation,
+typed admission control, kind isolation, the double-buffered staging
+pipeline, and the latency histogram it reports through ServiceStats."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    AdmissionError,
+    FFTService,
+    FFTServiceConfig,
+    LatencyHistogram,
+    StreamConfig,
+    StreamingFFTService,
+)
+
+
+def _cfg(**kw):
+    kw.setdefault("s", 256)
+    kw.setdefault("m", 4)
+    kw.setdefault("n_workers", 8)
+    kw.setdefault("seed", 0)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("autotune", False)
+    return FFTServiceConfig(**kw)
+
+
+def _reqs(n, s=256, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.normal(size=s)
+             + 1j * rng.normal(size=s)).astype(np.complex64)
+            for _ in range(n)]
+
+
+def test_fill_dispatch_and_results():
+    """Full buckets dispatch on the fill rule alone (huge slack), and the
+    futures resolve to the true transforms with latency attached."""
+    svc = FFTService(_cfg())
+    with StreamingFFTService(svc, StreamConfig(slack_s=30.0)) as stream:
+        xs = _reqs(8)
+        futs = [stream.submit(x) for x in xs]
+        for x, f in zip(xs, futs):
+            assert np.abs(f.result(timeout=120) - np.fft.fft(x)).max() < 1e-2
+            assert f.latency_s > 0.0
+    st = svc.stats.summary()
+    assert st["fill_dispatches"] == 2            # 8 requests / max_batch 4
+    assert st["deadline_dispatches"] == 0
+    assert st["batches"] == 2
+    assert st["host_transfers"] == 2             # one fetch per bucket
+    assert st["latency"]["count"] == 8
+    assert st["queue_peak"] >= 1
+
+
+def test_partial_bucket_dispatches_at_slack_expiry():
+    """A partial bucket holds while its slack lasts, then dispatches on
+    the DEADLINE rule -- never early, never waiting for a fill that is
+    not coming."""
+    svc = FFTService(_cfg())
+    slack = 1.0
+    with StreamingFFTService(svc, StreamConfig(slack_s=slack)) as stream:
+        futs = [stream.submit(x) for x in _reqs(2, seed=1)]
+        time.sleep(slack * 0.3)
+        # well before expiry: the 2-of-4 bucket must still be queued
+        assert not any(f.done() for f in futs)
+        for f in futs:
+            f.result(timeout=120)
+    st = svc.stats.summary()
+    assert st["deadline_dispatches"] == 1 and st["fill_dispatches"] == 0
+    assert st["batches"] == 1                    # both rode ONE bucket
+    # dispatched at expiry, not before: arrival->result spans the slack
+    assert all(f.latency_s >= slack * 0.9 for f in futs)
+
+
+def test_admission_control_rejects_with_typed_reason():
+    """Over max_queue, submit fails fast with a machine-readable reason;
+    accepted requests still complete on close(), and a closed service
+    rejects with its own reason."""
+    svc = FFTService(_cfg())
+    stream = StreamingFFTService(
+        svc, StreamConfig(fill_only=True, pipelined=False, max_queue=2))
+    xs = _reqs(3, seed=2)
+    f0 = stream.submit(xs[0])
+    f1 = stream.submit(xs[1])                    # fill_only: both just queue
+    with pytest.raises(AdmissionError) as ei:
+        stream.submit(xs[2])
+    assert ei.value.reason == "queue_full"
+    assert svc.stats.rejected == 1
+    stream.close()                               # drain flushes the partial
+    assert np.abs(f0.result() - np.fft.fft(xs[0])).max() < 1e-2
+    assert f1.done()
+    assert svc.stats.drain_dispatches == 1
+    with pytest.raises(AdmissionError) as ei:
+        stream.submit(xs[2])
+    assert ei.value.reason == "closed"
+
+
+def test_mixed_kinds_never_share_a_bucket():
+    """c2c / r2c / c2r arrivals at the same length land in three separate
+    buckets -- kinds never mix inside one dispatch."""
+    svc = FFTService(_cfg(max_batch=8))
+    rng = np.random.default_rng(3)
+    xc = [(rng.normal(size=256)
+           + 1j * rng.normal(size=256)).astype(np.complex64)
+          for _ in range(2)]
+    xr = [rng.normal(size=256).astype(np.float32) for _ in range(2)]
+    yh = [np.fft.rfft(x).astype(np.complex64) for x in xr]
+    with StreamingFFTService(svc, StreamConfig(slack_s=30.0)) as stream:
+        futs = ([stream.submit(x) for x in xc]
+                + [stream.submit(x, kind="r2c") for x in xr]
+                + [stream.submit(y, kind="c2r") for y in yh])
+        assert stream.drain(timeout=240)
+    st = svc.stats.summary()
+    assert st["batches"] == 3                    # one bucket per (s, kind)
+    assert st["drain_dispatches"] == 3
+    for f, x in zip(futs[:2], xc):
+        assert np.abs(f.result() - np.fft.fft(x)).max() < 1e-2
+    for f, x in zip(futs[2:4], xr):
+        assert np.abs(f.result() - np.fft.rfft(x)).max() < 1e-2
+    for f, x in zip(futs[4:6], xr):
+        assert np.abs(f.result() - x).max() < 1e-2
+
+
+def test_pipeline_one_transfer_per_bucket_and_overlap_accounting():
+    """The staged pipeline keeps the one-fetch-per-bucket invariant and
+    accounts staging overlap without losing a single request."""
+    svc = FFTService(_cfg())
+    scfg = StreamConfig(slack_s=30.0, stage_depth=4)
+    with StreamingFFTService(svc, scfg) as stream:
+        xs = _reqs(16, seed=4)
+        futs = [stream.submit(x) for x in xs]
+        for f, x in zip(futs, xs):
+            assert np.abs(f.result(timeout=120) - np.fft.fft(x)).max() < 1e-2
+    st = svc.stats.summary()
+    assert st["requests"] == 16
+    assert st["batches"] == 4                    # 16 / max_batch 4, all fills
+    assert st["host_transfers"] == 4
+    assert st["staging_overlap_s"] >= 0.0
+    assert st["latency"]["count"] == 16
+    hist = st["latency"]
+    assert hist["p50_s"] <= hist["p99_s"] <= hist["max_s"] * 1.1
+
+
+def test_stage_error_propagates_to_futures():
+    """A request that blows up at staging time (here: a length the plan
+    cannot shard) resolves its future with the exception instead of
+    wedging the pipeline."""
+    svc = FFTService(_cfg())
+    with StreamingFFTService(svc, StreamConfig(slack_s=0.05)) as stream:
+        bad = stream.submit(_reqs(1, s=6, seed=5)[0])   # m=4 does not divide 6
+        good = stream.submit(_reqs(1, seed=6)[0])
+        with pytest.raises(Exception):
+            bad.result(timeout=120)
+        good.result(timeout=120)                 # pipeline still alive
+    assert svc.stats.latency.n == 2
+
+
+def test_submit_validates_kind_synchronously():
+    svc = FFTService(_cfg())
+    with StreamingFFTService(svc) as stream:
+        with pytest.raises(ValueError):
+            stream.submit(_reqs(1)[0], kind="c2x")
+        with pytest.raises(ValueError):
+            stream.submit(np.zeros(1, np.complex64), kind="c2r")
+
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for v in [0.001] * 90 + [1.0] * 10:
+        h.record(v)
+    s = h.summary()
+    assert s["count"] == 100
+    assert 0.0008 <= s["p50_s"] <= 0.00125       # within one log bin
+    assert 0.9 <= s["p99_s"] <= 1.3
+    assert s["max_s"] == 1.0
+    assert np.isnan(LatencyHistogram().percentile(50))
+    h.record(0.0)                                # clamps to the low edge
+    h.record(1e9)                                # ... and the high edge
+    assert h.n == 102
