@@ -17,6 +17,7 @@ least 1.3x better than the baseline -- is asserted on every full run.
 
 from __future__ import annotations
 
+import gc
 import json
 import os
 import pathlib
@@ -332,6 +333,88 @@ def _open_loop_section(lines: list[str]) -> dict:
         assert ratio >= 1.3, (
             f"streaming p99 must beat the fill-only baseline by >=1.3x "
             f"at mid-load; measured {ratio:.2f}x")
+
+    # ---- mixed-tier EDF scheduling (DESIGN.md §11) ----------------------
+    # the SAME Poisson trace twice at equal offered load: single-tier
+    # (everything at the standard slack) vs multi-tier EDF (interactive /
+    # standard / batch classes).  The acceptance claim: the interactive
+    # tier's p99 under EDF must not exceed the single-tier baseline p99.
+    rate = 300 if SMOKE else 1000
+    n_mix = 60 if SMOKE else 600
+    tiers = {"interactive": 0.002, "standard": slack, "batch": 0.050}
+    tier_names = np.asarray(["interactive", "standard", "batch"])
+    draw = rng.choice(3, size=n_mix, p=[0.3, 0.5, 0.2])
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_mix))
+    mixed = {"offered_rps": rate, "n_offered": n_mix,
+             "tiers_ms": {k: v * 1e3 for k, v in tiers.items()},
+             "tier_mix": {str(t): int((draw == i).sum())
+                          for i, t in enumerate(tier_names)}}
+    for mode in ("single_tier", "multi_tier"):
+        svc.stats = ServiceStats()
+        stream = StreamingFFTService(
+            svc, StreamConfig(slack_s=slack, tiers=tiers))
+        futs, rejected = [], 0
+        # collector pause != queueing: at a 2 ms interactive slack, one
+        # gen-2 GC sweep over the earlier sections' jaxpr graphs shows
+        # up as a multi-ms p99 outlier, so sweep NOW and hold the
+        # collector off for the (sub-second) timed drive
+        gc.collect()
+        gc.disable()
+        t0 = time.perf_counter()
+        for i, t_arr in enumerate(arrivals):
+            lag = t_arr - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            tier = ("standard" if mode == "single_tier"
+                    else str(tier_names[draw[i]]))
+            try:
+                futs.append((tier, stream.submit(pool[i % len(pool)],
+                                                 tier=tier)))
+            except AdmissionError:
+                rejected += 1
+        stream.drain()
+        stream.close()
+        gc.enable()
+        st = svc.stats.summary()
+        assert len(futs) + rejected == n_mix
+        assert st["latency"]["count"] == len(futs)
+        lats = {}
+        for tier, f in futs:
+            lats.setdefault(tier, []).append(f.latency_s)
+        per_tier = {
+            tier: {"count": len(v),
+                   "p50_ms": float(np.percentile(v, 50) * 1e3),
+                   "p99_ms": float(np.percentile(v, 99) * 1e3)}
+            for tier, v in sorted(lats.items())}
+        mixed[mode] = {
+            "completed": len(futs), "rejected": rejected,
+            "p99_all_ms": float(np.percentile(
+                [f.latency_s for _, f in futs], 99) * 1e3),
+            "per_tier": per_tier,
+            # the histogram-side view (per-tier LatencyHistogram): counts
+            # must agree with the exact per-future percentiles above
+            "hist_tiers": {k: {"count": v["count"],
+                               "p99_ms": v["p99_s"] * 1e3}
+                           for k, v in st["tiers"].items()},
+        }
+        for tier, v in per_tier.items():
+            assert st["tiers"][tier]["count"] == v["count"]
+        lines.append(
+            f"  mixed-tier[{mode}] {rate} rps: "
+            + ", ".join(f"{t} p99 {v['p99_ms']:.1f} ms (n={v['count']})"
+                        for t, v in per_tier.items()))
+    gain = (mixed["single_tier"]["p99_all_ms"]
+            / mixed["multi_tier"]["per_tier"]["interactive"]["p99_ms"])
+    mixed["interactive_p99_gain_vs_single_tier"] = gain
+    lines.append(
+        f"  mixed-tier interactive p99 vs single-tier baseline p99 @ "
+        f"{rate} rps: {gain:.2f}x (acceptance floor 1.0x)")
+    if not SMOKE:
+        assert (mixed["multi_tier"]["per_tier"]["interactive"]["p99_ms"]
+                <= mixed["single_tier"]["p99_all_ms"]), (
+            "interactive-tier p99 under EDF must not exceed the "
+            "single-tier baseline p99 at equal offered load")
+    out["mixed_tier"] = mixed
     return out
 
 

@@ -25,7 +25,11 @@ class LatencyHistogram:
     (~15% bin width -- one bin edge per 10^(1/16)x); out-of-range samples
     clamp to the edge bins.  Percentiles return the geometric midpoint of
     the winning bin, which is plenty for SLO reporting (p50/p99 good to a
-    bin width) without the memory of a per-request sample list.
+    bin width) without the memory of a per-request sample list.  The TOP
+    bin is the exception: samples past ``HI`` clamp into it, so its
+    midpoint would silently underreport an outlier (a 2000 s stall as
+    ~760 s); a percentile landing there reports the tracked ``max``
+    instead.
     """
 
     LO = 1e-6          # 1 us
@@ -60,6 +64,10 @@ class LatencyHistogram:
         for b, cnt in enumerate(self.counts):
             seen += cnt
             if seen >= rank:
+                if b == len(self.counts) - 1:
+                    # clamp bin: anything >= HI lands here, so the bin
+                    # midpoint is a lie -- report the true maximum
+                    return self.max
                 lo = self.LO * 10 ** (b / self.PER_DECADE)
                 return lo * 10 ** (0.5 / self.PER_DECADE)
         return self.max

@@ -148,15 +148,21 @@ class ServiceStats:
     #                                call; 1 per bucket on the streaming path)
     # -- open-loop streaming observables (serving/streaming.py, §11) ----
     queue_peak: int = 0            # high-water mark of undispatched requests
-    rejected: int = 0              # admission-control rejections
+    rejected: int = 0              # admission-control rejections (both
+    #                                "queue_full" and "closed" reasons)
+    cancelled: int = 0             # futures the caller cancelled before
+    #                                resolution (the bucket still computed)
     fill_dispatches: int = 0       # buckets dispatched because they filled
-    deadline_dispatches: int = 0   # ... because the oldest member's slack
-    #                                ran out
+    deadline_dispatches: int = 0   # ... because the earliest deadline
+    #                                across bucket heads expired (EDF)
     drain_dispatches: int = 0      # ... flushed by drain()/close()
     staging_overlap_s: float = 0.0  # host staging wall time hidden behind
     #                                 a downstream bucket's device compute
     latency: LatencyHistogram = dataclasses.field(
         default_factory=LatencyHistogram)  # per-request arrival->result
+    tier_latency: dict = dataclasses.field(default_factory=dict)
+    #                              # per-SLO-tier LatencyHistogram, keyed by
+    #                                tier name (streaming front-end only)
 
     def summary(self) -> dict:
         n = max(self.requests, 1)
@@ -175,11 +181,14 @@ class ServiceStats:
             "host_transfers": self.host_transfers,
             "queue_peak": self.queue_peak,
             "rejected": self.rejected,
+            "cancelled": self.cancelled,
             "fill_dispatches": self.fill_dispatches,
             "deadline_dispatches": self.deadline_dispatches,
             "drain_dispatches": self.drain_dispatches,
             "staging_overlap_s": self.staging_overlap_s,
             "latency": self.latency.summary(),
+            "tiers": {name: hist.summary()
+                      for name, hist in sorted(self.tier_latency.items())},
         }
 
 

@@ -9,34 +9,45 @@ continuously-batching service with an SLO story:
 * **Async request queue** -- :meth:`submit` is non-blocking: it enqueues
   the request and returns a ``concurrent.futures.Future`` that resolves
   to the transform (with its measured ``latency_s`` attached).
-* **Deadline-aware bucket formation** -- requests accumulate per
-  ``(s, m, kind)`` bucket and dispatch when the bucket FILLS
-  (``max_batch``) *or* when the OLDEST member's slack runs out,
-  whichever comes first.  A partial bucket never waits on arrivals that
-  may not come: the batch-rps knob and the p99 knob decouple.
+* **Multi-tier EDF bucket formation** -- every request belongs to a
+  named SLO tier (``StreamConfig.tiers``, e.g. ``interactive=2ms``,
+  ``standard=10ms``, ``batch=100ms``) whose slack sets its deadline.
+  Requests accumulate per ``(s, m, kind)`` bucket in
+  earliest-deadline-first order; buckets dispatch when they FILL
+  (``max_batch``) *or* when the earliest deadline across ALL bucket
+  heads expires -- the scheduler scans a deadline-ordered heap of
+  bucket heads, never dict insertion order, so a late-created bucket
+  with an urgent head is served first.
+* **Adaptive slack** -- an EWMA of the measured per-bucket-shape
+  compute time (stage + launch + sync) is subtracted from each tier's
+  nominal slack, so a tier's deadline budget covers QUEUEING only,
+  not compute the scheduler can already predict.  Shrinks under load,
+  grows back as the shape gets faster (``StreamConfig.adaptive``).
 * **Admission control / backpressure** -- the undispatched queue is
   bounded (``max_queue``); over capacity, :meth:`submit` raises a typed
   :class:`AdmissionError` with a machine-readable ``reason`` instead of
   letting queueing delay grow without bound (reject early, don't
-  collapse late).
+  collapse late).  Both reject reasons count into ``stats.rejected``.
 * **Double-buffered host->device staging** -- a dedicated staging
   thread packs bucket k+1's numpy buffers and launches its (async)
   device call while the sync thread is still blocked fetching bucket k.
-  The host-side interleave/pack cost that ``submit_batch`` pays
-  serially inside its dispatch loop is hidden behind device compute;
-  ``ServiceStats.staging_overlap_s`` measures exactly the hidden share.
+  ``ServiceStats.staging_overlap_s`` measures exactly the staging
+  sub-interval that ran while a downstream bucket was in flight
+  (explicit in-flight counter under the scheduler lock -- no unlocked
+  queue-internals peeking).
 
 The pipeline is three threads around two depth-bounded queues::
 
-    callers --submit()--> pending per (s, kind)   [admission bound]
-        | scheduler: fill-or-deadline bucket formation
+    callers --submit()--> per-(s, kind) EDF heaps   [admission bound]
+        | scheduler: fill-or-earliest-deadline bucket formation
         v
     stage_q  (depth scfg.stage_depth)
         | stager: straggler sim + numpy pack + H2D + async launch
         v
     sync_q   (depth 1  ==  double buffer: bucket k+1 stages/computes
         |                   while bucket k is being fetched)
-        v syncer: jax.device_get -> resolve futures -> latency histogram
+        v syncer: jax.device_get -> resolve futures -> latency histograms
+                  (one histogram per tier + the global one)
 
 Every ``FFTService`` internal (plan/runner caches, the staging numpy
 work, ``stats.batches`` accounting) is touched ONLY by the staging
@@ -44,6 +55,19 @@ thread, so the service object itself never needs locks.  The bucket
 executors are untouched: the streaming path launches the SAME jitted
 one-launch/one-transfer runners as ``submit_batch`` (the jaxpr pins
 hold by construction).
+
+Scheduler invariants (pinned by tests/test_streaming_service.py):
+
+* **EDF order** -- among dispatchable buckets the one with the
+  earliest head deadline goes first, and rows inside a bucket are
+  deadline-ordered, never FIFO.
+* **Flush scoping** -- :meth:`flush` drains exactly the requests
+  pending at flush time (a generation counter); requests submitted
+  after ``flush()`` returns ride the normal fill/deadline rules.
+* **Cancellation safety** -- a caller cancelling a pending future can
+  never kill a pipeline thread: resolution claims the future with
+  ``set_running_or_notify_cancel()`` and counts losses in
+  ``stats.cancelled``.
 
 ``fill_only=True`` + ``pipelined=False`` reproduce the naive baseline
 the open-loop benchmark races against: dispatch only full buckets, and
@@ -53,15 +77,17 @@ stage synchronously on the scheduler thread.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 import time
 from concurrent.futures import Future
 from queue import Queue
-from typing import Optional
+from typing import Mapping, Optional
 
 import jax
 import numpy as np
 
+from repro.serving.batching import LatencyHistogram
 from repro.serving.fft_service import FFTService
 
 __all__ = ["AdmissionError", "StreamConfig", "StreamingFFTService"]
@@ -72,6 +98,7 @@ class AdmissionError(RuntimeError):
 
     ``reason`` is machine-readable: ``"queue_full"`` (the undispatched
     queue is at ``max_queue``) or ``"closed"`` (submit after close).
+    Every rejection -- both reasons -- increments ``stats.rejected``.
     """
 
     def __init__(self, reason: str, detail: str = ""):
@@ -82,9 +109,22 @@ class AdmissionError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
-    slack_s: float = 0.010      # queueing slack before a PARTIAL bucket
-    #                             dispatches (per-request override via
-    #                             submit(..., slack_s=...))
+    slack_s: float = 0.010      # nominal slack of the DEFAULT tier (and
+    #                             of any tier left unset in ``tiers``);
+    #                             per-request override via
+    #                             submit(..., slack_s=...)
+    tiers: Optional[Mapping[str, float]] = None
+    #                           # named SLO tiers -> nominal slack seconds.
+    #                             None = {"interactive": 2ms,
+    #                             "standard": slack_s, "batch": 100ms}
+    default_tier: str = "standard"   # tier used when submit() names none
+    adaptive: bool = True       # subtract the EWMA-predicted compute time
+    #                             of the request's (s, kind) shape from the
+    #                             tier slack, so the deadline budget covers
+    #                             queueing only
+    ewma_alpha: float = 0.25    # EWMA weight of the newest compute sample
+    min_slack_frac: float = 0.1  # floor of the effective slack as a
+    #                              fraction of the nominal tier slack
     max_queue: int = 1024       # admission bound on undispatched requests
     stage_depth: int = 2        # bucket plans buffered ahead of the stager
     fill_only: bool = False     # naive baseline: dispatch only on full
@@ -92,14 +132,28 @@ class StreamConfig:
     pipelined: bool = True      # False = naive baseline: stage + launch +
     #                             sync inline on the scheduler thread
 
+    def resolved_tiers(self) -> dict[str, float]:
+        """The tier table with defaults filled in (name -> slack seconds)."""
+        if self.tiers is not None:
+            return {str(k): float(v) for k, v in self.tiers.items()}
+        return {"interactive": 0.002, "standard": self.slack_s,
+                "batch": 0.100}
+
 
 @dataclasses.dataclass
 class _Request:
     x: object                   # the (host) request payload
     kind: str
+    tier: str
     arrival: float              # perf_counter at submit
-    deadline: float             # arrival + slack
+    deadline: float             # arrival + effective slack
+    seq: int                    # submit order; EDF tie-break
+    gen: int                    # flush generation at submit time
     future: Future
+
+    def entry(self) -> tuple:
+        """The per-bucket heap entry (EDF order, seq tie-break)."""
+        return (self.deadline, self.seq, self)
 
 
 @dataclasses.dataclass
@@ -108,14 +162,17 @@ class _BucketPlan:
     kind: str
     reqs: list
     reason: str                 # "fill" | "deadline" | "drain"
+    stage_s: float = 0.0        # filled by the stager; the syncer adds its
+    #                             sync share and feeds the compute EWMA
 
 
 class StreamingFFTService:
-    """Deadline-aware continuous batching over one :class:`FFTService`.
+    """Multi-tier EDF continuous batching over one :class:`FFTService`.
 
     The wrapped service's ``stats`` object is extended in place (queue
-    peak, dispatch reasons, staging overlap, the per-request latency
-    histogram), so one ``ServiceStats.summary()`` tells the whole story.
+    peak, dispatch reasons, staging overlap, cancellations, the global
+    AND per-tier latency histograms), so one ``ServiceStats.summary()``
+    tells the whole story.
 
     Warm up the wrapped service (``service.warmup()``) BEFORE offering
     traffic: the streaming scheduler dispatches every power-of-two
@@ -127,14 +184,37 @@ class StreamingFFTService:
                  scfg: StreamConfig = StreamConfig()):
         self.service = service
         self.scfg = scfg
+        self.tiers = scfg.resolved_tiers()
+        if scfg.default_tier not in self.tiers:
+            raise ValueError(
+                f"default_tier {scfg.default_tier!r} not in tiers "
+                f"{sorted(self.tiers)}")
         self.stats = service.stats       # extended in place
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._pending: dict[tuple, list[_Request]] = {}
+        # per-(s, kind) EDF heaps of (deadline, seq, request)
+        self._pending: dict[tuple, list[tuple]] = {}
+        # deadline-ordered heap of bucket HEADS: (deadline, seq, key).
+        # Lazy invalidation: every time a request becomes the head of its
+        # bucket an entry is pushed, so the true head of every pending
+        # bucket always has an exact entry; stale entries are discarded
+        # when they surface.
+        self._heads: list[tuple] = []
+        self._seq = 0                    # submit counter (EDF tie-break)
+        self._gen = 0                    # flush generation counter
+        self._flush_upto: Optional[int] = None   # drain gens <= this
         self._depth = 0                  # undispatched requests
         self._outstanding = 0            # submitted, not yet resolved
         self._closed = False
-        self._flush = False
+        # compute-time EWMA per (s, kind): stage + launch + sync seconds
+        self._ewma: dict[tuple, float] = {}
+        # launched-but-not-yet-fetched buckets, and the "busy clock" that
+        # integrates the wall time with at least one bucket in flight --
+        # the overlap accounting reads this under the lock instead of
+        # racing on Queue.unfinished_tasks
+        self._inflight = 0
+        self._busy_total = 0.0
+        self._busy_since: Optional[float] = None
         self._stage_q: Queue = Queue(maxsize=max(1, scfg.stage_depth))
         self._sync_q: Queue = Queue(maxsize=1)
         self._threads = [threading.Thread(
@@ -148,33 +228,73 @@ class StreamingFFTService:
             t.start()
 
     # -- client surface -------------------------------------------------
-    def submit(self, x, kind: str = "c2c",
+    def submit(self, x, kind: str = "c2c", tier: Optional[str] = None,
                slack_s: Optional[float] = None) -> Future:
         """Enqueue one request; returns a Future resolving to the result.
 
-        Non-blocking.  Raises :class:`AdmissionError` when the service is
-        over capacity (``reason="queue_full"``) or closed.  The resolved
-        future carries ``latency_s`` -- arrival-to-result wall time -- as
-        an attribute.
+        Non-blocking.  ``tier`` names an SLO class from
+        ``StreamConfig.tiers`` (default ``scfg.default_tier``) whose
+        slack -- shrunk by the predicted compute time of this request's
+        bucket shape when ``scfg.adaptive`` -- sets the deadline;
+        ``slack_s`` overrides the nominal slack outright (the tier still
+        labels the latency accounting).  Raises :class:`AdmissionError`
+        when the service is over capacity (``reason="queue_full"``) or
+        closed.  The resolved future carries ``latency_s`` --
+        arrival-to-result wall time -- as an attribute.
         """
         x = np.asarray(x)
         s = self.service.bucket_key(x, kind)      # validates kind/shape
+        tier = self.scfg.default_tier if tier is None else tier
+        if tier not in self.tiers:
+            raise ValueError(
+                f"unknown tier {tier!r}; configured: {sorted(self.tiers)}")
+        base = self.tiers[tier] if slack_s is None else float(slack_s)
         now = time.perf_counter()
-        slack = self.scfg.slack_s if slack_s is None else float(slack_s)
-        req = _Request(x, kind, now, now + slack, Future())
         with self._cv:
             if self._closed:
+                self.stats.rejected += 1
                 raise AdmissionError("closed")
             if self._depth >= self.scfg.max_queue:
                 self.stats.rejected += 1
                 raise AdmissionError(
                     "queue_full", f"max_queue={self.scfg.max_queue}")
-            self._pending.setdefault((s, kind), []).append(req)
+            slack = self._effective_slack_locked((s, kind), base)
+            self._seq += 1
+            req = _Request(x, kind, tier, now, now + slack,
+                           self._seq, self._gen, Future())
+            heap = self._pending.setdefault((s, kind), [])
+            heapq.heappush(heap, req.entry())
+            if heap[0][2] is req:        # new bucket head -> index it
+                heapq.heappush(self._heads,
+                               (req.deadline, req.seq, (s, kind)))
             self._depth += 1
             self._outstanding += 1
             self.stats.queue_peak = max(self.stats.queue_peak, self._depth)
             self._cv.notify_all()
         return req.future
+
+    def _effective_slack_locked(self, key: tuple, base: float) -> float:
+        """The tier slack minus the EWMA-predicted compute time of this
+        bucket shape (floored at ``min_slack_frac`` of nominal), so the
+        remaining budget is pure queueing headroom."""
+        if not self.scfg.adaptive:
+            return base
+        predicted = self._ewma.get(key)
+        if predicted is None:
+            return base
+        return max(base - predicted, base * self.scfg.min_slack_frac)
+
+    def _record_compute_locked(self, key: tuple, seconds: float) -> None:
+        prev = self._ewma.get(key)
+        a = self.scfg.ewma_alpha
+        self._ewma[key] = (seconds if prev is None
+                           else a * seconds + (1.0 - a) * prev)
+
+    @property
+    def compute_ewma(self) -> dict[tuple, float]:
+        """Predicted compute seconds per (s, kind) bucket shape (a copy)."""
+        with self._lock:
+            return dict(self._ewma)
 
     @property
     def queue_depth(self) -> int:
@@ -183,10 +303,13 @@ class StreamingFFTService:
             return self._depth
 
     def flush(self) -> None:
-        """Dispatch every pending partial bucket immediately (reason
-        ``"drain"``), without waiting for fills or deadlines."""
+        """Dispatch every CURRENTLY pending partial bucket (reason
+        ``"drain"``), without waiting for fills or deadlines.  Scoped by
+        a generation counter: requests submitted after ``flush()``
+        returns are NOT swept into drain buckets."""
         with self._cv:
-            self._flush = True
+            self._flush_upto = self._gen
+            self._gen += 1
             self._cv.notify_all()
 
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -195,7 +318,8 @@ class StreamingFFTService:
         Returns False if ``timeout`` elapsed first.
         """
         with self._cv:
-            self._flush = True
+            self._flush_upto = self._gen
+            self._gen += 1
             self._cv.notify_all()
             return self._cv.wait_for(
                 lambda: self._outstanding == 0, timeout)
@@ -205,7 +329,6 @@ class StreamingFFTService:
         with self._cv:
             if self._closed:
                 return
-            self._flush = True
             self._closed = True
             self._cv.notify_all()
         for t in self._threads:
@@ -217,7 +340,7 @@ class StreamingFFTService:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    # -- scheduler: fill-or-deadline bucket formation -------------------
+    # -- scheduler: fill-or-earliest-deadline bucket formation ----------
     def _scheduler(self) -> None:
         cap = self.service.cfg.max_batch
         while True:
@@ -241,40 +364,101 @@ class StreamingFFTService:
                 self._stage_and_sync(plan)   # naive serial baseline
         self._stage_q.put(None)              # sentinel for the stager
 
+    def _head_key_locked(self) -> Optional[tuple]:
+        """The pending bucket with the EARLIEST head deadline, via the
+        lazy heap (stale entries discarded as they surface)."""
+        while self._heads:
+            deadline, seq, key = self._heads[0]
+            heap = self._pending.get(key)
+            if heap is not None and heap[0][:2] == (deadline, seq):
+                return key
+            heapq.heappop(self._heads)       # dispatched or superseded
+        return None
+
     def _pop_ready_locked(self, cap: int) -> Optional[_BucketPlan]:
-        """The first dispatchable bucket under the fill-or-deadline rule."""
+        """The EDF-ordered dispatch decision under the fill-or-deadline
+        rule: fill first (a full bucket never waits), then drain when a
+        flush/close is armed, then the earliest expired head."""
         now = time.perf_counter()
         choice = reason = None
-        for key, reqs in self._pending.items():
-            if len(reqs) >= cap:
-                choice, reason = key, "fill"
-                break
-            if self._flush or self._closed:
-                choice, reason = key, "drain"
-                break
-            if not self.scfg.fill_only and reqs[0].deadline <= now:
+        full = [key for key, heap in self._pending.items()
+                if len(heap) >= cap]
+        if full:
+            # ties between simultaneously-full buckets break EDF too
+            choice = min(full, key=lambda k: self._pending[k][0][0])
+            reason = "fill"
+        elif self._closed or self._flush_upto is not None:
+            elig = [key for key, heap in self._pending.items()
+                    if any(self._drains_locked(e[2]) for e in heap)]
+            if elig:
+                choice = min(elig, key=lambda k: self._pending[k][0][0])
+                reason = "drain"
+            elif self._flush_upto is not None and not self._closed:
+                self._flush_upto = None      # drain scope finished; disarm
+        if choice is None and not self.scfg.fill_only:
+            key = self._head_key_locked()
+            if key is not None and self._pending[key][0][0] <= now:
                 choice, reason = key, "deadline"
-                break
         if choice is None:
-            if self._flush and not self._pending:
-                self._flush = False          # drain finished; disarm
             return None
-        reqs = self._pending[choice]
-        take, rest = reqs[:cap], reqs[cap:]
-        if rest:
-            self._pending[choice] = rest
+        heap = self._pending[choice]
+        if reason == "drain":
+            # take only the requests inside the drain scope, EDF order
+            keep, take = [], []
+            while heap and len(take) < cap:
+                entry = heapq.heappop(heap)
+                (take if self._drains_locked(entry[2]) else keep).append(
+                    entry)
+            for entry in keep:
+                heapq.heappush(heap, entry)
+        else:
+            take = [heapq.heappop(heap) for _ in range(min(cap, len(heap)))]
+        if heap:
+            # re-index the new bucket head in the deadline heap
+            heapq.heappush(self._heads, (heap[0][0], heap[0][1], choice))
         else:
             del self._pending[choice]
         self._depth -= len(take)
-        return _BucketPlan(choice[0], choice[1], take, reason)
+        return _BucketPlan(choice[0], choice[1],
+                           [entry[2] for entry in take], reason)
+
+    def _drains_locked(self, req: _Request) -> bool:
+        """Is this request inside the current drain scope?  close()
+        drains everything; flush() only the generations it snapshotted."""
+        if self._closed:
+            return True
+        return self._flush_upto is not None and req.gen <= self._flush_upto
 
     def _timeout_locked(self) -> Optional[float]:
-        """Sleep until the earliest slack expiry (None = wait for a fill
+        """Sleep until the earliest head deadline (None = wait for a fill
         notification -- the fill_only baseline never sets an alarm)."""
         if self.scfg.fill_only or not self._pending:
             return None
-        expiry = min(reqs[0].deadline for reqs in self._pending.values())
-        return max(expiry - time.perf_counter(), 0.0)
+        key = self._head_key_locked()
+        if key is None:                      # unreachable: pending != {}
+            return None
+        return max(self._pending[key][0][0] - time.perf_counter(), 0.0)
+
+    # -- in-flight accounting (the staging-overlap clock) ---------------
+    def _busy_clock_locked(self, now: float) -> float:
+        """Total wall seconds, so far, with >= 1 launched-but-unfetched
+        bucket; differences of this clock measure exactly the overlapped
+        sub-interval of any window."""
+        busy = self._busy_total
+        if self._busy_since is not None:
+            busy += now - self._busy_since
+        return busy
+
+    def _inflight_inc_locked(self, now: float) -> None:
+        self._inflight += 1
+        if self._inflight == 1:
+            self._busy_since = now
+
+    def _inflight_dec_locked(self, now: float) -> None:
+        self._inflight -= 1
+        if self._inflight == 0:
+            self._busy_total += now - self._busy_since
+            self._busy_since = None
 
     # -- stager: numpy pack + H2D + async launch ------------------------
     def _stager(self) -> None:
@@ -282,20 +466,26 @@ class StreamingFFTService:
             plan = self._stage_q.get()
             if plan is None:
                 break
-            # overlapped iff a downstream bucket is still in flight when
-            # this one starts staging (the double-buffer win, measured)
-            overlapped = self._sync_q.unfinished_tasks > 0
             t0 = time.perf_counter()
+            with self._lock:
+                busy0 = self._busy_clock_locked(t0)
             try:
                 out = self._stage_and_launch(plan)
             except Exception as e:                # noqa: BLE001
                 self._resolve(plan, error=e)
                 continue
-            dt = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            dt = t1 - t0
+            plan.stage_s = dt
             with self._lock:
+                # the sub-interval of [t0, t1] during which a downstream
+                # bucket was between launch and fetch-completion: the
+                # double-buffer win, measured -- not inferred from a
+                # point sample of queue internals
+                overlap = min(self._busy_clock_locked(t1) - busy0, dt)
                 self.stats.dispatch_s += dt
-                if overlapped:
-                    self.stats.staging_overlap_s += dt
+                self.stats.staging_overlap_s += max(overlap, 0.0)
+                self._inflight_inc_locked(t1)
             self._sync_q.put((plan, out))
         self._sync_q.put(None)                    # sentinel for the syncer
 
@@ -318,13 +508,19 @@ class StreamingFFTService:
                 rows = jax.device_get(out)
             except Exception as e:                # noqa: BLE001
                 self._sync_q.task_done()
+                with self._lock:
+                    self._inflight_dec_locked(time.perf_counter())
                 self._resolve(plan, error=e)
                 continue
-            dt = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            dt = t1 - t0
             self._sync_q.task_done()
             with self._lock:
+                self._inflight_dec_locked(t1)
                 self.stats.sync_s += dt
                 self.stats.host_transfers += 1
+                self._record_compute_locked(
+                    (plan.s, plan.kind), plan.stage_s + dt)
             self._resolve(plan, rows=rows)
 
     def _stage_and_sync(self, plan: _BucketPlan) -> None:
@@ -343,6 +539,7 @@ class StreamingFFTService:
             self.stats.dispatch_s += t1 - t0
             self.stats.sync_s += t2 - t1
             self.stats.host_transfers += 1
+            self._record_compute_locked((plan.s, plan.kind), t2 - t0)
         self._resolve(plan, rows=rows)
 
     def _resolve(self, plan: _BucketPlan, rows=None,
@@ -351,13 +548,25 @@ class StreamingFFTService:
         with self._cv:
             for req in plan.reqs:
                 self.stats.latency.record(now - req.arrival)
+                self.stats.tier_latency.setdefault(
+                    req.tier, LatencyHistogram()).record(now - req.arrival)
             self._outstanding -= len(plan.reqs)
             self._cv.notify_all()
         # futures resolve OUTSIDE the lock: done-callbacks may re-enter
         # submit()
+        cancelled = 0
         for row, req in enumerate(plan.reqs):
             req.future.latency_s = now - req.arrival
+            # claim the future first: a caller's .cancel() on a pending
+            # future would otherwise make set_result/set_exception raise
+            # InvalidStateError and kill this pipeline thread
+            if not req.future.set_running_or_notify_cancel():
+                cancelled += 1
+                continue
             if error is not None:
                 req.future.set_exception(error)
             else:
                 req.future.set_result(rows[row])
+        if cancelled:
+            with self._lock:
+                self.stats.cancelled += cancelled

@@ -1,7 +1,10 @@
-"""Streaming front-end (DESIGN.md §11): deadline-aware bucket formation,
-typed admission control, kind isolation, the double-buffered staging
-pipeline, and the latency histogram it reports through ServiceStats."""
+"""Streaming front-end (DESIGN.md §11): multi-tier EDF bucket formation,
+adaptive slack, typed admission control, kind isolation, the
+double-buffered staging pipeline, the latency histograms it reports
+through ServiceStats, and the scheduler-lifecycle regressions (EDF
+order, flush scoping, cancellation safety, overlap accounting)."""
 
+import threading
 import time
 
 import numpy as np
@@ -163,6 +166,277 @@ def test_submit_validates_kind_synchronously():
             stream.submit(_reqs(1)[0], kind="c2x")
         with pytest.raises(ValueError):
             stream.submit(np.zeros(1, np.complex64), kind="c2r")
+
+
+def _slow_first_stage(svc, delay):
+    """Monkey-patch ``svc.stage_bucket`` so its FIRST call sleeps
+    ``delay`` seconds -- deterministically holds the scheduler (or the
+    stager) busy while more traffic arrives."""
+    orig = svc.stage_bucket
+    fired = []
+
+    def slow(*a, **kw):
+        if not fired:
+            fired.append(True)
+            time.sleep(delay)
+        return orig(*a, **kw)
+
+    svc.stage_bucket = slow
+
+
+def test_edf_earlier_deadline_bucket_dispatches_first():
+    """Regression (dispatch-ordering bug): bucket A is created first,
+    bucket B later with a SHORTER slack; when the scheduler next looks,
+    both heads have expired and B -- the earlier deadline -- must
+    dispatch first.  Insertion-order iteration served A first."""
+    svc = FFTService(_cfg())
+    _slow_first_stage(svc, 0.6)
+    order = []
+    scfg = StreamConfig(pipelined=False, adaptive=False)
+    with StreamingFFTService(svc, scfg) as stream:
+        # blocker: expires immediately, then stages for 0.6 s, so the
+        # scheduler is away while A and B queue up and BOTH expire
+        fblk = stream.submit(_reqs(1, s=128, seed=7)[0], slack_s=0.0)
+        time.sleep(0.1)
+        fa = stream.submit(_reqs(1, s=256, seed=8)[0], slack_s=0.30)
+        fb = stream.submit(_reqs(1, s=512, seed=9)[0], slack_s=0.10)
+        fa.add_done_callback(lambda f: order.append("A"))
+        fb.add_done_callback(lambda f: order.append("B"))
+        fblk.result(timeout=120)
+        fa.result(timeout=120)
+        fb.result(timeout=120)
+    assert order.index("B") < order.index("A"), order
+    assert svc.stats.deadline_dispatches == 3
+
+
+def test_edf_orders_rows_within_a_bucket():
+    """Ties WITHIN a bucket are EDF too: when a full bucket takes only
+    ``cap`` of the queued rows, it takes the EARLIEST DEADLINES, not the
+    first arrivals."""
+    svc = FFTService(_cfg(max_batch=2))
+    _slow_first_stage(svc, 0.4)
+    xs = _reqs(3, seed=10)
+    scfg = StreamConfig(pipelined=False, adaptive=False)
+    with StreamingFFTService(svc, scfg) as stream:
+        # blocker holds the scheduler while all three same-bucket
+        # requests queue up past cap=2
+        fblk = stream.submit(_reqs(1, s=128, seed=20)[0], slack_s=0.0)
+        time.sleep(0.1)
+        fa = stream.submit(xs[0], slack_s=5.0)   # FIFO would take fa, fb
+        fb = stream.submit(xs[1], slack_s=5.0)
+        fu = stream.submit(xs[2], slack_s=0.05)  # EDF takes fu, fa
+        fblk.result(timeout=120)
+        assert np.abs(fu.result(timeout=120)
+                      - np.fft.fft(xs[2])).max() < 1e-2
+        assert fa.done() and not fb.done()
+        stream.flush()
+        assert np.abs(fb.result(timeout=120)
+                      - np.fft.fft(xs[1])).max() < 1e-2
+        assert np.abs(fa.result(timeout=120)
+                      - np.fft.fft(xs[0])).max() < 1e-2
+    assert svc.stats.latency.n == 4
+
+
+def test_cancelled_future_does_not_kill_the_pipeline():
+    """Regression (Future race): a caller cancelling a pending future
+    made set_result raise InvalidStateError and killed the syncer; now
+    the resolution claims the future first, counts the cancellation,
+    and every subsequent request still completes."""
+    svc = FFTService(_cfg())
+    with StreamingFFTService(svc, StreamConfig(slack_s=0.2)) as stream:
+        xs = _reqs(3, seed=11)
+        f0 = stream.submit(xs[0])
+        assert f0.cancel()                       # pending -> cancellable
+        f1 = stream.submit(xs[1])
+        assert np.abs(f1.result(timeout=120) - np.fft.fft(xs[1])).max() < 1e-2
+        f2 = stream.submit(xs[2])                # pipeline must be alive
+        assert np.abs(f2.result(timeout=120) - np.fft.fft(xs[2])).max() < 1e-2
+        assert f0.cancelled()
+    assert svc.stats.cancelled == 1
+    assert svc.stats.latency.n == 3              # cancelled rows computed
+
+
+def test_flush_scope_excludes_later_submits():
+    """Regression (sticky flush): requests submitted AFTER flush()
+    returns must NOT be swept into drain buckets.  The old flag stayed
+    armed until the queue emptied, so a request arriving while the
+    flushed bucket staged was dispatched immediately as a partial
+    "drain" bucket."""
+    svc = FFTService(_cfg())
+    _slow_first_stage(svc, 0.5)
+    scfg = StreamConfig(slack_s=30.0, pipelined=False, adaptive=False)
+    stream = StreamingFFTService(svc, scfg)
+    f1 = stream.submit(_reqs(1, seed=12)[0])
+    stream.flush()                               # drains f1 (gen 0)
+    time.sleep(0.1)                              # scheduler is staging f1
+    f2 = stream.submit(_reqs(1, seed=13)[0])     # gen 1: NOT in scope
+    f1.result(timeout=120)
+    time.sleep(0.3)                              # old code drained f2 here
+    assert not f2.done()
+    assert svc.stats.drain_dispatches == 1
+    stream.flush()                               # new scope covers f2
+    f2.result(timeout=120)
+    stream.close()
+    assert svc.stats.drain_dispatches == 2
+
+
+def test_overlap_accounts_subinterval_not_whole_stage():
+    """Regression (overlap race): the stager used to classify its WHOLE
+    staging interval as overlapped from one unlocked peek at
+    sync_q.unfinished_tasks.  Now an in-flight clock under the lock
+    measures the actual overlapped sub-interval: a long stage that only
+    briefly coexists with a downstream fetch must not be counted
+    wholesale."""
+    svc = FFTService(_cfg())
+    orig = svc.stage_bucket
+    calls = []
+
+    def slow_second(*a, **kw):
+        calls.append(True)
+        if len(calls) == 2:
+            time.sleep(0.4)      # bucket 2 stages long AFTER bucket 1's
+        return orig(*a, **kw)    # (fast) fetch has already completed
+
+    svc.stage_bucket = slow_second
+    with StreamingFFTService(svc, StreamConfig(slack_s=30.0)) as stream:
+        xs = _reqs(8, seed=14)
+        futs = [stream.submit(x) for x in xs]    # two fill buckets of 4
+        for f in futs:
+            f.result(timeout=120)
+    st = svc.stats.summary()
+    assert st["batches"] == 2
+    # the 0.4 s stage of bucket 2 overlapped bucket 1's in-flight window
+    # only for the few ms that fetch actually took
+    assert st["staging_overlap_s"] <= 0.2
+    assert 0.0 <= st["staging_overlap_s"] <= st["dispatch_s"]
+
+
+def test_rejections_counted_for_both_reasons():
+    """Both admission reject reasons -- queue_full and closed -- count
+    into stats.rejected."""
+    svc = FFTService(_cfg())
+    stream = StreamingFFTService(
+        svc, StreamConfig(fill_only=True, pipelined=False, max_queue=1))
+    xs = _reqs(2, seed=15)
+    f0 = stream.submit(xs[0])
+    with pytest.raises(AdmissionError) as ei:
+        stream.submit(xs[1])
+    assert ei.value.reason == "queue_full"
+    assert svc.stats.rejected == 1
+    stream.close()
+    f0.result(timeout=120)
+    with pytest.raises(AdmissionError) as ei:
+        stream.submit(xs[1])
+    assert ei.value.reason == "closed"
+    assert svc.stats.rejected == 2
+
+
+# ---------------------------------------------------------------- tiers
+def test_tiers_map_to_slack_and_histograms():
+    """submit(tier=...) picks the tier's slack for the deadline and the
+    per-tier histogram for the accounting; unknown tiers fail fast."""
+    svc = FFTService(_cfg())
+    scfg = StreamConfig(
+        tiers={"interactive": 0.05, "batch": 5.0},
+        default_tier="interactive", adaptive=False)
+    with StreamingFFTService(svc, scfg) as stream:
+        with pytest.raises(ValueError):
+            stream.submit(_reqs(1)[0], tier="bogus")
+        xs = _reqs(1, seed=16)
+        fi = stream.submit(xs[0], tier="interactive")
+        fbat = stream.submit(_reqs(1, s=512, seed=16)[0], tier="batch")
+        # the interactive deadline expires long before batch's: it rides
+        # its own deadline bucket while the batch bucket stays queued
+        assert np.abs(fi.result(timeout=120) - np.fft.fft(xs[0])).max() < 1e-2
+        assert not fbat.done()
+        stream.flush()
+        fbat.result(timeout=120)
+    st = svc.stats.summary()
+    assert st["tiers"]["interactive"]["count"] == 1
+    assert st["tiers"]["batch"]["count"] == 1
+    assert st["tiers"]["interactive"]["p99_s"] <= st["tiers"]["batch"]["p99_s"]
+    assert st["latency"]["count"] == 2           # global histogram too
+
+
+def test_default_tier_must_exist():
+    svc = FFTService(_cfg())
+    with pytest.raises(ValueError):
+        StreamingFFTService(
+            svc, StreamConfig(tiers={"fast": 0.001}, default_tier="standard"))
+
+
+def test_adaptive_slack_shrinks_deadline_by_predicted_compute():
+    """With a compute EWMA recorded for the bucket shape, the effective
+    slack shrinks so the deadline budget covers queueing only: a partial
+    bucket dispatches well before its NOMINAL slack."""
+    svc = FFTService(_cfg())
+    scfg = StreamConfig(slack_s=5.0, min_slack_frac=0.01)
+    with StreamingFFTService(svc, scfg) as stream:
+        with stream._lock:                       # predicted compute: 4.9 s
+            stream._ewma[(256, "c2c")] = 4.9
+        t0 = time.perf_counter()
+        f = stream.submit(_reqs(1, seed=17)[0])
+        f.result(timeout=120)
+        waited = time.perf_counter() - t0
+    # effective slack = 5.0 - 4.9 = 0.1 s, not the nominal 5 s
+    assert waited < 3.0
+    assert svc.stats.deadline_dispatches == 1
+
+
+def test_adaptive_slack_floor_and_ewma_updates():
+    """The effective slack never drops below min_slack_frac of nominal,
+    and real dispatches feed the per-shape EWMA."""
+    svc = FFTService(_cfg())
+    scfg = StreamConfig(slack_s=0.4, min_slack_frac=0.25)
+    with StreamingFFTService(svc, scfg) as stream:
+        with stream._lock:                       # absurd prediction
+            stream._ewma[(256, "c2c")] = 100.0
+        t0 = time.perf_counter()
+        f = stream.submit(_reqs(1, seed=18)[0])
+        f.result(timeout=120)
+        waited = time.perf_counter() - t0
+        assert waited >= 0.4 * 0.25 * 0.9        # floored, not immediate
+        assert (256, "c2c") in stream.compute_ewma
+        assert stream.compute_ewma[(256, "c2c")] < 100.0  # EWMA moved
+
+
+# ------------------------------------------------------- lifecycle stress
+def test_scheduler_stress_random_cancels_and_flushes():
+    """Hundreds of tiny submits with random cancels and mid-stream
+    flushes: nothing lost, nothing deadlocked, every pipeline thread
+    exits -- all under an explicit wall-clock guard (a wedged scheduler
+    fails the drain timeout instead of hanging the suite)."""
+    t_start = time.perf_counter()
+    svc = FFTService(_cfg(s=64, max_batch=4))
+    scfg = StreamConfig(
+        tiers={"interactive": 0.002, "standard": 0.01, "batch": 0.05},
+        max_queue=10_000)
+    rng = np.random.default_rng(19)
+    xs = _reqs(8, s=64, seed=19)
+    stream = StreamingFFTService(svc, scfg)
+    futs, cancelled = [], 0
+    for i in range(300):
+        tier = ("interactive", "standard", "batch")[int(rng.integers(3))]
+        f = stream.submit(xs[i % len(xs)], tier=tier)
+        futs.append(f)
+        if rng.random() < 0.25 and f.cancel():
+            cancelled += 1
+        if i % 37 == 36:
+            stream.flush()
+    assert stream.drain(timeout=60.0), "scheduler deadlocked"
+    stream.close()
+    assert all(f.done() for f in futs)
+    ok = sum(1 for f in futs if not f.cancelled())
+    assert ok == 300 - cancelled
+    for f in futs:
+        if not f.cancelled():
+            f.result(timeout=1)                  # no stray exceptions
+    st = svc.stats.summary()
+    assert st["cancelled"] == cancelled
+    assert st["latency"]["count"] == 300         # cancelled rows computed too
+    assert sum(t["count"] for t in st["tiers"].values()) == 300
+    assert not any(t.is_alive() for t in stream._threads)
+    assert time.perf_counter() - t_start < 60.0, "wall-clock guard"
 
 
 def test_latency_histogram_percentiles():
