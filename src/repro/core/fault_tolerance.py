@@ -129,13 +129,17 @@ def correct_errors(
     received: np.ndarray,
     m: int,
     tol: float = 1e-6,
-) -> Optional[np.ndarray]:
-    """Return corrected received rows, or None if uncorrectable."""
+) -> Optional[tuple[np.ndarray, np.ndarray]]:
+    """Return ``(corrected rows, error indices)``, or None if uncorrectable.
+
+    The returned indices are the ones ``locate_errors`` found, so callers
+    never need a second Prony pass to learn who lied.
+    """
     err_idx = locate_errors(nodes, received, m, tol)
     if err_idx is None:
         return None
     if err_idx.shape[0] == 0:
-        return received
+        return received, err_idx
     k = nodes.shape[0]
     n_syn = k - m
     syn = syndromes(nodes, received, m)
@@ -145,7 +149,7 @@ def correct_errors(
     weighted_err, *_ = np.linalg.lstsq(design, syn, rcond=None)  # (e, L)
     corrected = received.copy()
     corrected[err_idx] -= weighted_err
-    return corrected
+    return corrected, err_idx
 
 
 @dataclasses.dataclass
@@ -164,24 +168,30 @@ def robust_decode(
 ) -> RobustDecodeResult:
     """Decode coded-FFT worker results with Byzantine workers present.
 
-    ``b``: (N, L) results, of which only rows ``recv_idx`` (k of them)
-    arrived; up to floor((k - m)/2) of those may be arbitrarily corrupted.
+    ``b``: ``(N, *shard)`` results, of which only rows ``recv_idx`` (k of
+    them) arrived; up to floor((k - m)/2) of those may be arbitrarily
+    corrupted.  Works for any MDS plan whose evaluation nodes are
+    ``mds.rs_nodes(n_workers)`` -- the syndrome math runs on rows flattened
+    per payload column, the final decode on the original shard shape.
     """
+    recv_idx = np.asarray(recv_idx, dtype=np.int64)
     nodes = np.asarray(mds.rs_nodes(strategy.n_workers, jnp.complex128))[recv_idx]
-    received = np.asarray(b, dtype=np.complex128)[recv_idx]
-    corrected = correct_errors(nodes, received, strategy.m, tol)
-    if corrected is None:
+    b_np = np.asarray(b, dtype=np.complex128)
+    received = b_np[recv_idx].reshape(recv_idx.shape[0], -1)  # (k, L_flat)
+    result = correct_errors(nodes, received, strategy.m, tol)
+    if result is None:
         return RobustDecodeResult(None, 0, np.zeros(0, np.int64), ok=False)
-    err_local = locate_errors(nodes, received, strategy.m, tol)
-    n_err = 0 if err_local is None else int(err_local.shape[0])
+    corrected, err_local = result  # one Prony pass: indices ride along
+    n_err = int(err_local.shape[0])
     # decode from the first m *clean* received rows (global indexing)
-    clean_local = [i for i in range(len(recv_idx)) if err_local is None or i not in set(err_local.tolist())]
+    err_set = set(err_local.tolist())
+    clean_local = [i for i in range(len(recv_idx)) if i not in err_set]
     use_local = np.asarray(clean_local[: strategy.m])
     subset = jnp.asarray(recv_idx[use_local])
-    b_full = np.array(b, dtype=np.complex128)
-    b_full[recv_idx] = corrected
+    b_full = b_np.copy()
+    b_full[recv_idx] = corrected.reshape((recv_idx.shape[0],) + b_np.shape[1:])
     x = strategy.decode(jnp.asarray(b_full).astype(strategy.dtype), subset=subset)
-    err_global = recv_idx[err_local] if (err_local is not None and n_err) else np.zeros(0, np.int64)
+    err_global = recv_idx[err_local] if n_err else np.zeros(0, np.int64)
     return RobustDecodeResult(np.asarray(x), n_err, err_global, ok=True)
 
 

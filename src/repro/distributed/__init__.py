@@ -1,7 +1,15 @@
 """Distribution substrate: logical sharding rules, meshes, coded runtime."""
 
 from repro.distributed.coded_runtime import DistributedCodedFFT, DistributedCodedPlan
-from repro.distributed.elastic import reshard, reshard_like
+from repro.distributed.elastic import ElasticWorkerPool, reshard, reshard_like
+from repro.distributed.faults import (
+    FAULT_KINDS,
+    FaultInjector,
+    FaultPlan,
+    RoundFaults,
+    WorkerFault,
+)
+from repro.distributed.health import WorkerHealthTracker
 from repro.distributed.mesh import test_mesh
 from repro.distributed.sharding import (
     MULTI_POD_RULES,
@@ -13,13 +21,23 @@ from repro.distributed.sharding import (
     use_rules,
 )
 from repro.distributed.straggler import StragglerModel, expected_kth_completion
+from repro.distributed.worker_runtime import MeasuredRound, MeasuredWorkerRuntime
 
 __all__ = [
     "DistributedCodedFFT",
     "DistributedCodedPlan",
+    "ElasticWorkerPool",
+    "FAULT_KINDS",
+    "FaultInjector",
+    "FaultPlan",
     "MULTI_POD_RULES",
+    "MeasuredRound",
+    "MeasuredWorkerRuntime",
+    "RoundFaults",
     "SINGLE_POD_RULES",
     "StragglerModel",
+    "WorkerFault",
+    "WorkerHealthTracker",
     "current_mesh",
     "expected_kth_completion",
     "logical_spec",

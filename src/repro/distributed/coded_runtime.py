@@ -54,6 +54,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import mds
 from repro.core.coded_fft import CodedFFT
 from repro.core.plan import batch_shape
+from repro.distributed.faults import FaultInjector, FaultPlan
 
 __all__ = ["DistributedCodedPlan", "DistributedCodedFFT"]
 
@@ -85,12 +86,25 @@ class DistributedCodedPlan:
 
     # ------------------------------------------------------------------
     def run(self, x: jax.Array, mask: Optional[jax.Array] = None,
-            *, method: str = "auto") -> jax.Array:
+            *, method: str = "auto",
+            faults: Optional[object] = None, round_idx: int = 0
+            ) -> jax.Array:
         """End-to-end coded transform of ``x`` under the mesh.
 
         ``x``: ``(*B, *input_shape)``; ``mask``: bool ``(*B, N)`` or shared
         ``(N,)`` worker availability (>= m True per request).  Default: all
         up.  Returns ``(*B, *output_shape)``.
+
+        ``faults`` (opt-in hook, DESIGN.md §12): a
+        :class:`~repro.distributed.faults.FaultPlan` or ``FaultInjector``
+        projected onto ``round_idx``.  Kills fold into the availability
+        mask host-side (a dead worker IS a masked worker); corrupt workers
+        keep their mask bit but their device rows are algebraically
+        garbled IN-TRACE before leaving the worker stage, so an unmasked
+        decode that reads them yields visibly wrong output (what the
+        Byzantine verifier exists to catch).  Delays are a no-op here: the
+        all-gather is a synchronous collective that already waits for
+        every participant.  With ``faults=None`` the trace is unchanged.
         """
         plan = self.plan
         n, m = plan.n_workers, plan.recovery_threshold
@@ -99,6 +113,16 @@ class DistributedCodedPlan:
         batch = batch_shape(x, len(plan.input_shape), "plan input")
         if mask is None:
             mask = jnp.ones(batch + (n,), bool)
+        corrupt = jnp.zeros((n,), bool)
+        if faults is not None:
+            injector = (FaultInjector(faults)
+                        if isinstance(faults, FaultPlan) else faults)
+            rf = injector.faults_for(round_idx)
+            if rf.killed:
+                dead = jnp.asarray([w in rf.killed for w in range(n)])
+                mask = jnp.asarray(mask) & ~dead
+            if rf.corrupt:
+                corrupt = jnp.asarray(injector.corrupt_flags(n, round_idx))
 
         # host-side interleave -> (B, m, payload) flat message symbols
         c = plan.message(x).reshape((-1, m, payload))
@@ -112,11 +136,11 @@ class DistributedCodedPlan:
         # worker FFT and trips its dim0-major RET_CHECK)
         @partial(
             shard_map, mesh=self.mesh,
-            in_specs=(P(), P()),
+            in_specs=(P(), P(), P()),
             out_specs=P(self.axis, None, None),
             check_rep=False,
         )
-        def workers(c_rep, mask_rep):
+        def workers(c_rep, mask_rep, corrupt_rep):
             # per-device fused encode+compute: each device forms only its
             # own coded shards from the replicated message symbols
             idx = jax.lax.axis_index(self.axis)
@@ -125,10 +149,15 @@ class DistributedCodedPlan:
             a = jnp.einsum("nm,bmp->nbp", g_rows.astype(c_rep.dtype), c_rep)
             b = plan.worker_compute(a.reshape((self.n_local, nb) + shard))
             b = b.reshape(self.n_local, nb, payload)
+            # Byzantine rows: deterministic in-trace garbage (affine warp
+            # of the true values -- "arbitrarily wrong", not just scaled,
+            # and jit-stable, unlike a traced RNG draw would be)
+            bad = jnp.take(corrupt_rep, rows)                 # (n_local,)
+            b = jnp.where(bad[:, None, None], b * (-3.7) + 11.3, b)
             alive = jnp.take(mask_rep, rows, axis=1)          # (nb, n_local)
             return jnp.where(alive.T[:, :, None], b, fill)
 
-        b = workers(c, maskf)                                 # (N, nb, payload)
+        b = workers(c, maskf, corrupt)                        # (N, nb, payload)
 
         @partial(
             shard_map, mesh=self.mesh,

@@ -1,26 +1,35 @@
-"""Elastic scaling: reshard a live training state between meshes.
+"""Elastic scaling: worker membership + resharding state between meshes.
 
-When a pod (or slice) drops out or re-joins, the job must continue on a
-different device count without losing optimizer state.  ``reshard``
-moves an arbitrary pytree from its current sharding onto the equivalent
-logical sharding over a new mesh; shapes are global, so the transfer is
-exact regardless of either mesh's layout.  Combined with the random-access
-data pipeline and deterministic schedules, a resharded run continues
-bit-exactly (tests/test_elastic.py proves 8 -> 4 -> 8 device continuity).
+Two mechanisms live here:
+
+* ``reshard`` / ``reshard_like`` move an arbitrary pytree from its current
+  sharding onto the equivalent logical sharding over a new mesh; shapes
+  are global, so the transfer is exact regardless of either mesh's layout
+  (tests/test_elastic.py proves 8 -> 4 -> 8 device continuity round-trips
+  bit-exactly, including pspecs naming dropped axes).
+* ``ElasticWorkerPool`` tracks coded-FFT worker membership between rounds:
+  workers ``join``/``leave`` live while the recovery threshold ``m`` stays
+  fixed.  The paper's MDS property makes departure a *latency event* --
+  any ``m`` of the live workers still decode -- so a leave is just a mask
+  flip.  Joins first refill departed slots (same RS evaluation node, no
+  recompilation); joins beyond capacity grow the code to ``N+1`` nodes,
+  which with root-of-unity nodes re-derives the node set, so consumers key
+  their plan/generator caches by ``pool.capacity`` (DESIGN.md §12).
 
 On real hardware this pairs with the launcher's slice-membership protocol;
-here the mechanism (global-shape transfer through host or ICI) is what we
+here the mechanism (membership state + global-shape transfer) is what we
 implement and test.
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["reshard", "reshard_like"]
+__all__ = ["ElasticWorkerPool", "reshard", "reshard_like"]
 
 
 def _resolve(spec_leaf, mesh: Mesh) -> NamedSharding:
@@ -62,3 +71,92 @@ def reshard_like(tree: Any, mesh: Mesh) -> Any:
 
     pspecs = jax.tree.map(spec_of, tree)
     return reshard(tree, mesh, pspecs)
+
+
+class ElasticWorkerPool:
+    """Live worker membership for a coded plan with fixed threshold ``m``.
+
+    The pool owns CAPACITY (the code size ``N``: how many RS evaluation
+    nodes exist) and LIVENESS (which slots currently have a worker behind
+    them).  Invariants, enforced here and tested in tests/test_faults.py:
+
+    * ``m`` never changes: recovery always needs exactly ``m`` responses.
+    * ``leave`` only flips liveness; node assignment of every other slot
+      is untouched, so in-flight plans stay valid (departed rows masked).
+    * ``join`` reuses the lowest departed slot when one exists (same node,
+      zero recompilation); otherwise it appends slot ``capacity`` and
+      grows the code by one node.  Each capacity value is a distinct code,
+      so ``capacity`` is the cache key for plans/generators -- growth
+      changes it, refills don't.
+    * ``version`` increments on every membership change; consumers snapshot
+      ``(capacity, version)`` per round to detect mid-round churn.
+    """
+
+    def __init__(self, n_workers: int, m: int):
+        if m < 1 or n_workers < m:
+            raise ValueError(f"need n_workers >= m >= 1, got N={n_workers} m={m}")
+        self.m = int(m)
+        self._alive = [True] * int(n_workers)
+        self.version = 0
+        self.joined = 0
+        self.departed = 0
+
+    # -- state ------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Code size N: number of RS evaluation nodes / worker slots."""
+        return len(self._alive)
+
+    @property
+    def n_live(self) -> int:
+        return sum(self._alive)
+
+    def mask(self) -> np.ndarray:
+        """Boolean ``(capacity,)`` liveness mask (copy; safe to keep)."""
+        return np.asarray(self._alive, dtype=bool)
+
+    def is_live(self, worker: int) -> bool:
+        return bool(self._alive[worker])
+
+    def can_decode(self) -> bool:
+        """At least m live workers: a round can still meet the threshold."""
+        return self.n_live >= self.m
+
+    # -- membership -------------------------------------------------------
+    def leave(self, worker: int) -> None:
+        """Remove a worker: mask flip only, node assignments untouched."""
+        if not 0 <= worker < self.capacity:
+            raise IndexError(f"worker {worker} out of range [0, {self.capacity})")
+        if not self._alive[worker]:
+            return
+        self._alive[worker] = False
+        self.departed += 1
+        self.version += 1
+
+    def join(self) -> int:
+        """Add a worker; returns its slot id.
+
+        Refills the lowest departed slot if any (cheap path), else appends
+        a new slot, growing ``capacity`` -- and thus the plan cache key.
+        """
+        for w, alive in enumerate(self._alive):
+            if not alive:
+                self._alive[w] = True
+                self.joined += 1
+                self.version += 1
+                return w
+        self._alive.append(True)
+        self.joined += 1
+        self.version += 1
+        return self.capacity - 1
+
+    def summary(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "n_live": self.n_live,
+            "m": self.m,
+            "version": self.version,
+            "joined": self.joined,
+            "departed": self.departed,
+            "departed_slots": [w for w, a in enumerate(self._alive) if not a],
+        }

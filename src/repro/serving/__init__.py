@@ -1,7 +1,14 @@
 from repro.serving.batching import LatencyHistogram, bucket_size, pad_requests
 from repro.serving.decode_cache import DecodeMatrixCache
 from repro.serving.engine import EngineConfig, GenerationEngine
-from repro.serving.fft_service import FFTService, FFTServiceConfig, ServiceStats
+from repro.serving.fft_service import (
+    FAILURE_REASONS,
+    DegradedResult,
+    FFTService,
+    FFTServiceConfig,
+    ServiceError,
+    ServiceStats,
+)
 from repro.serving.serve_step import make_serve_fns, sample_token
 from repro.serving.streaming import (
     AdmissionError,
@@ -9,8 +16,9 @@ from repro.serving.streaming import (
     StreamingFFTService,
 )
 
-__all__ = ["AdmissionError", "DecodeMatrixCache", "EngineConfig",
-           "GenerationEngine", "FFTService", "FFTServiceConfig",
-           "LatencyHistogram", "ServiceStats", "StreamConfig",
+__all__ = ["AdmissionError", "DecodeMatrixCache", "DegradedResult",
+           "EngineConfig", "FAILURE_REASONS", "FFTService",
+           "FFTServiceConfig", "GenerationEngine", "LatencyHistogram",
+           "ServiceError", "ServiceStats", "StreamConfig",
            "StreamingFFTService", "bucket_size", "pad_requests",
            "make_serve_fns", "sample_token"]

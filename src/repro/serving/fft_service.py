@@ -66,16 +66,81 @@ from jax.sharding import Mesh
 
 from repro.core import mds
 from repro.core.coded_fft import CodedFFT, plan_factors
+from repro.core.fault_tolerance import detect_errors, robust_decode
 from repro.core.rfft import CodedIRFFT, CodedRFFT
 from repro.core.rfftn import CodedIRFFTN, CodedRFFTN
 from repro.core.strategies import coded_fft_threshold
 from repro.distributed.coded_runtime import DistributedCodedPlan
+from repro.distributed.elastic import ElasticWorkerPool
+from repro.distributed.faults import FaultInjector, FaultPlan, RoundFaults
+from repro.distributed.health import WorkerHealthTracker
 from repro.distributed.straggler import StragglerModel
+from repro.distributed.worker_runtime import MeasuredWorkerRuntime
 from repro.kernels import autotune, ops, ref
 from repro.serving.batching import LatencyHistogram, bucket_size
 from repro.serving.decode_cache import DecodeMatrixCache
 
-__all__ = ["FFTServiceConfig", "FFTService", "ServiceStats"]
+__all__ = ["DegradedResult", "FAILURE_REASONS", "FFTService",
+           "FFTServiceConfig", "ServiceError", "ServiceStats"]
+
+# machine-readable per-request failure reasons (DESIGN.md §12)
+FAILURE_REASONS = ("insufficient_workers", "retries_exhausted",
+                   "corrupt_uncorrectable")
+
+
+class ServiceError(RuntimeError):
+    """Typed per-request failure from the fault-tolerant service path.
+
+    ``reason`` is one of :data:`FAILURE_REASONS`:
+
+    * ``insufficient_workers`` -- fewer than ``m`` live workers exist (or
+      none are healthy enough to re-dispatch to), so the MDS threshold is
+      unreachable no matter how long the master waits.
+    * ``retries_exhausted`` -- ``m`` responses never arrived inside the
+      capped retry windows (``max_retries`` x ``retry_backoff``).
+    * ``corrupt_uncorrectable`` -- the Byzantine syndrome check failed and
+      correction was impossible (``verify="detect"``, or more than
+      ``floor((k - m)/2)`` corrupt responders under ``verify="correct"``).
+
+    Surfaces as a raised exception from ``submit_batch``
+    (``on_failure="raise"``), a :class:`DegradedResult` slot
+    (``on_failure="degrade"``), and a per-request Future exception on the
+    streaming path -- never as a dead scheduler thread.
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        if reason not in FAILURE_REASONS:
+            raise ValueError(f"unknown failure reason {reason!r}")
+        super().__init__(f"request failed: {reason}"
+                         + (f" ({detail})" if detail else ""))
+        self.reason = reason
+        self.detail = detail
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedResult:
+    """Graceful-degradation slot value (``on_failure="degrade"``).
+
+    Takes the place of the transform result for a request the fault path
+    could not serve; ``reason``/``detail`` mirror :class:`ServiceError`.
+    """
+
+    reason: str
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+
+class _Launched:
+    """A launched robust bucket: device/host rows + per-row errors."""
+
+    __slots__ = ("out", "errors")
+
+    def __init__(self, out, errors):
+        self.out = out          # device array or host ndarray (verify path)
+        self.errors = errors    # per-bucket-row Optional[ServiceError]
 
 
 def _donate_ingress(fn):
@@ -130,6 +195,31 @@ class FFTServiceConfig:
     #                               (kernels/autotune.py); dispatch falls
     #                               back to the static heuristics when off
     autotune_reps: int = 3        # timing repetitions per candidate
+    # -- fault-tolerant runtime (opt-in; DESIGN.md §12) -----------------
+    faults: Optional[FaultPlan] = None  # seeded kill/delay/corrupt schedule;
+    #                               None leaves every code path byte-identical
+    #                               to the fault-free build
+    health: bool = False          # track per-worker EWMAs and derive each
+    #                               round's availability mask from a DEADLINE
+    #                               (m-th-fastest estimate + slack) instead of
+    #                               a straggler draw's k-th order statistic
+    deadline_slack: float = 0.5   # deadline = (1 + slack) * m-th-fastest
+    max_retries: int = 2          # re-dispatch rounds for missing shards
+    retry_backoff: float = 2.0    # wait-window multiplier per retry
+    verify: str = "off"           # Byzantine check on surplus responses when
+    #                               k > m arrive: "off" | "detect" | "correct"
+    #                               (paper Remark 3: detect k-m, correct
+    #                               floor((k-m)/2))
+    verify_quorum: int = 2        # measured path only: extra rows beyond m
+    #                               the master waits for when verify is on
+    #                               (k = m + q detects q, corrects q//2)
+    on_failure: str = "raise"     # "raise" ServiceError from submit_batch, or
+    #                               "degrade" to a DegradedResult slot
+    measured: bool = False        # run buckets on the thread-per-worker
+    #                               MeasuredWorkerRuntime (real wall-clock
+    #                               deadlines/retries; c2c kinds only)
+    require_all: bool = False     # measured path waits for ALL live workers
+    #                               (the uncoded baseline for the fault bench)
 
 
 @dataclasses.dataclass
@@ -158,6 +248,14 @@ class ServiceStats:
     drain_dispatches: int = 0      # ... flushed by drain()/close()
     staging_overlap_s: float = 0.0  # host staging wall time hidden behind
     #                                 a downstream bucket's device compute
+    # -- fault-tolerant runtime observables (§12) -----------------------
+    retries: int = 0               # retry rounds performed (window extensions)
+    redispatched_shards: int = 0   # shard computations re-dispatched to
+    #                                healthy workers after a missed deadline
+    degraded: int = 0              # requests that failed with a typed reason
+    detected: int = 0              # corrupt workers caught by the syndrome
+    #                                check (verify="detect"/"correct")
+    corrected: int = 0             # ... of those, corrected (verify="correct")
     latency: LatencyHistogram = dataclasses.field(
         default_factory=LatencyHistogram)  # per-request arrival->result
     tier_latency: dict = dataclasses.field(default_factory=dict)
@@ -186,6 +284,11 @@ class ServiceStats:
             "deadline_dispatches": self.deadline_dispatches,
             "drain_dispatches": self.drain_dispatches,
             "staging_overlap_s": self.staging_overlap_s,
+            "retries": self.retries,
+            "redispatched_shards": self.redispatched_shards,
+            "degraded": self.degraded,
+            "detected": self.detected,
+            "corrected": self.corrected,
             "latency": self.latency.summary(),
             "tiers": {name: hist.summary()
                       for name, hist in sorted(self.tier_latency.items())},
@@ -210,26 +313,58 @@ class FFTService:
     ND_KINDS = ("rfftn", "irfftn")
 
     def __init__(self, cfg: FFTServiceConfig, mesh: Optional[Mesh] = None,
-                 axis: str = "workers"):
+                 axis: str = "workers",
+                 pool: Optional[ElasticWorkerPool] = None):
+        if cfg.verify not in ("off", "detect", "correct"):
+            raise ValueError(
+                f'verify must be "off"|"detect"|"correct", got {cfg.verify!r}')
+        if cfg.on_failure not in ("raise", "degrade"):
+            raise ValueError(
+                f'on_failure must be "raise"|"degrade", got {cfg.on_failure!r}')
+        if pool is not None and pool.m != cfg.m:
+            raise ValueError(
+                f"pool threshold m={pool.m} must match cfg.m={cfg.m}")
         self.cfg = cfg
         self.mesh = mesh
         self.axis = axis
+        self.pool = pool
         self.rng = np.random.default_rng(cfg.seed)
         self.stats = ServiceStats()
-        # keyed by (s, m, kind); s is a scalar length for 1-D kinds and
-        # the time-domain shape tuple for the n-D kinds
+        # keyed by (s, m, kind, N); s is a scalar length for 1-D kinds and
+        # the time-domain shape tuple for the n-D kinds.  N rides in the
+        # key because an ElasticWorkerPool can GROW capacity live -- each
+        # capacity is a distinct roots-of-unity code (DESIGN.md §12)
         self._plans: dict[tuple, object] = {}
         self._runtimes: dict[tuple, DistributedCodedPlan] = {}
         self._runners: dict[tuple, object] = {}
         # ONE decode-matrix LRU for the whole service: the (N, m) generator
         # -- hence every per-mask decode matrix -- is independent of both
         # the transform length s and the bucket kind, so c2c/r2c/c2r
-        # buckets at every length share hits (DESIGN.md §7)
-        self._decode_cache: Optional[DecodeMatrixCache] = None
+        # buckets at every length share hits (DESIGN.md §7).  Keyed by N
+        # (dict) only because elastic growth changes the generator.
+        self._decode_caches: dict[int, DecodeMatrixCache] = {}
+        # -- fault-tolerant runtime state (DESIGN.md §12) ---------------
+        self._robust = (cfg.faults is not None or cfg.health
+                        or cfg.verify != "off" or cfg.measured
+                        or pool is not None)
+        self.injector = (FaultInjector(cfg.faults)
+                         if cfg.faults is not None else None)
+        self.health = (WorkerHealthTracker(
+            self._n_workers(), slack_frac=cfg.deadline_slack)
+            if self._robust else None)
+        self._measured: dict[tuple, MeasuredWorkerRuntime] = {}
+        self._round = 0                # monotone fault/health round counter
+        if self._robust and mesh is not None:
+            raise ValueError("the fault-tolerant service path is host-"
+                             "orchestrated; it does not compose with a mesh")
         # default-config plan/runtime, kept as attributes for introspection
         # (and reused by the executor cache for default-length requests)
         self.plan = self._plan_for(cfg.s)
         self.runtime = self._runtime_for(cfg.s) if mesh is not None else None
+
+    def _n_workers(self) -> int:
+        """Current code size N: pool capacity when elastic, else static."""
+        return self.pool.capacity if self.pool is not None else self.cfg.n_workers
 
     # -- plan / compiled-executor caches --------------------------------
     def _plan_for(self, s, kind: str = "c2c"):
@@ -244,7 +379,8 @@ class FFTService:
         if kind not in self.KINDS:
             raise ValueError(f"unknown bucket kind {kind!r}")
         cfg = self.cfg
-        key = (s, cfg.m, kind)
+        n = self._n_workers()
+        key = (s, cfg.m, kind, n)
         if key not in self._plans:
             if cfg.worker_fn is not None and kind != "c2c":
                 # the plug-in contract is the c2c worker (fft along the
@@ -263,10 +399,10 @@ class FFTService:
                 factors = plan_factors(shape, cfg.m, even_last_shard=True)
                 cls = CodedRFFTN if kind == "rfftn" else CodedIRFFTN
                 self._plans[key] = cls(
-                    shape=shape, factors=factors, n_workers=cfg.n_workers,
+                    shape=shape, factors=factors, n_workers=n,
                     dtype=cfg.dtype, backend=backend)
                 return self._plans[key]
-            common = dict(s=s, m=cfg.m, n_workers=cfg.n_workers,
+            common = dict(s=s, m=cfg.m, n_workers=n,
                           dtype=cfg.dtype, backend=backend)
             if kind == "r2c":
                 self._plans[key] = CodedRFFT(**common)
@@ -280,18 +416,19 @@ class FFTService:
         return self._plans[key]
 
     def _runtime_for(self, s: int, kind: str = "c2c") -> DistributedCodedPlan:
-        key = (s, self.cfg.m, kind)
+        key = (s, self.cfg.m, kind, self._n_workers())
         if key not in self._runtimes:
             self._runtimes[key] = DistributedCodedPlan(
                 self._plan_for(s, kind), self.mesh, self.axis)
         return self._runtimes[key]
 
     def _decode_cache_for(self) -> DecodeMatrixCache:
-        if self._decode_cache is None:
-            self._decode_cache = DecodeMatrixCache(
+        n = self._n_workers()
+        if n not in self._decode_caches:
+            self._decode_caches[n] = DecodeMatrixCache(
                 np.asarray(self._plan_for(self.cfg.s).generator),
                 maxsize=self.cfg.decode_cache_size)
-        return self._decode_cache
+        return self._decode_caches[n]
 
     def _kernel_path(self, s, kind: str = "c2c") -> bool:
         """Does this bucket run the fused planar kernel executor?
@@ -389,7 +526,8 @@ class FFTService:
         kernel = self._kernel_path(s, kind)
         dev = kernel and self._device_decode()
         prec = self._precision_for(s, kind) if kernel else "f32"
-        key = (s, self.cfg.m, kind, bucket, kernel, dev, prec)
+        key = (s, self.cfg.m, kind, bucket, kernel, dev, prec,
+               self._n_workers())
         if key not in self._runners:
             if dev:
                 self._runners[key] = self._make_masked_runner(s, bucket, kind)
@@ -651,6 +789,301 @@ class FFTService:
         self.stats.uncoded_latency += float(lat_sorted[:, -1].sum())
         self.stats.stragglers_tolerated += int((~mask).sum())
 
+    # -- fault-tolerant bucket path (opt-in; DESIGN.md §12) --------------
+    def _fault_arrivals(self, n_live: int, kind: str):
+        """The deadline/retry state machine for one robust bucket.
+
+        Ground truth is still a per-(request, worker) completion-time draw
+        (plus injected kill=inf / delay=+d), but the MASK is no longer "the
+        m fastest of the draw": the master only admits workers whose time
+        beats the LEARNED deadline (m-th-fastest health estimate + slack).
+        Requests below the threshold go through capped retry rounds --
+        late originals count, missing shards are re-dispatched to healthy
+        workers with fresh draws, the window backs off geometrically --
+        and requests that still miss get a typed ServiceError.
+
+        Returns ``(masks, errors, t_comp, lat, round_faults, round_idx)``.
+        """
+        cfg = self.cfg
+        n = self._n_workers()
+        if self.health.n_workers < n:
+            self.health.grow(n)       # elastic capacity growth keeps history
+        round_idx = self._round
+        self._round += 1
+        rf = (self.injector.faults_for(round_idx)
+              if self.injector is not None else RoundFaults())
+        alive = (self.pool.mask() if self.pool is not None
+                 else np.ones(n, bool))
+        scale = 0.5 if kind in self.REAL_KINDS else 1.0
+        lat = cfg.straggler.sample((n_live, n), 1.0 / cfg.m, self.rng,
+                                   payload_scale=scale)
+        if self.injector is not None:
+            lat = self.injector.perturb_latencies(lat, round_idx)
+        lat = np.where(alive[None, :], lat, np.inf)
+        errors: list = [None] * n_live
+        masks = np.zeros((n_live, n), bool)
+        t_comp = np.full(n_live, np.inf)
+
+        if int(alive.sum()) < cfg.m:
+            err = ServiceError(
+                "insufficient_workers",
+                f"{int(alive.sum())} live workers < m={cfg.m}")
+            errors = [err] * n_live
+            self.stats.degraded += n_live
+            masks[:] = True   # padding decode stays well-posed; never surfaced
+            return masks, errors, t_comp, lat, rf, round_idx
+
+        if self.health.rounds == 0:
+            # cold start: no learned estimates yet -- bootstrap from this
+            # round's own m-th order statistics
+            kth = np.sort(lat, axis=1)[:, cfg.m - 1]
+            kth = kth[np.isfinite(kth)]
+            deadline = (float(kth.max()) * (1.0 + cfg.deadline_slack)
+                        if kth.size else float("inf"))
+        else:
+            deadline = self.health.deadline(cfg.m, alive=alive)
+        masks = self.health.mask_from_times(lat, deadline) & alive[None, :]
+        met = masks.sum(axis=1) >= cfg.m
+        srt = np.sort(lat, axis=1)
+        t_comp[met] = srt[met, cfg.m - 1]
+
+        killed = np.zeros(n, bool)
+        for w in rf.killed:
+            if w < n:
+                killed[w] = True
+        healthy = alive & ~killed & ~self.health.byzantine[:n]
+        window = deadline
+        for _ in range(cfg.max_retries):
+            if met.all():
+                break
+            prev = window
+            window *= cfg.retry_backoff
+            self.stats.retries += 1
+            for i in np.flatnonzero(~met):
+                # late originals land inside the extended window
+                masks[i] |= self.health.mask_from_times(lat[i], window) & alive
+                missing = np.flatnonzero(alive & ~masks[i])
+                if missing.size and healthy.any():
+                    # re-dispatch the missing shard rows to healthy workers:
+                    # fresh work issued when the previous window closed,
+                    # racing the extension (a shard row is data, not a
+                    # worker identity -- any healthy thread recomputes it)
+                    redraw = cfg.straggler.sample(
+                        missing.size, 1.0 / cfg.m, self.rng,
+                        payload_scale=scale)
+                    masks[i, missing[prev + redraw <= window]] = True
+                    self.stats.redispatched_shards += int(missing.size)
+                if int(masks[i].sum()) >= cfg.m:
+                    met[i] = True
+                    t_comp[i] = window   # conservative: met at window close
+        for i in np.flatnonzero(~met):
+            if not healthy.any():
+                reason = "insufficient_workers"
+                detail = "no healthy workers to re-dispatch to"
+            else:
+                reason = "retries_exhausted"
+                detail = (f"{int(masks[i].sum())}/{cfg.m} shards after "
+                          f"{cfg.max_retries} retries")
+            errors[i] = ServiceError(reason, detail)
+            self.stats.degraded += 1
+            masks[i] = True
+        # feed the tracker: per-worker mean measured time this round
+        col = np.where(np.isfinite(lat), lat, np.nan)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", category=RuntimeWarning)
+            col_mean = np.nanmean(col, axis=0)
+        self.health.observe_round(np.where(np.isnan(col_mean), np.inf,
+                                           col_mean))
+        return masks, errors, t_comp, lat, rf, round_idx
+
+    def _account_robust(self, t_comp: np.ndarray, lat: np.ndarray,
+                        masks: np.ndarray, errors: list) -> None:
+        self.stats.requests += int(t_comp.shape[0])
+        finite = lat[np.isfinite(lat)]
+        cap = float(finite.max()) if finite.size else 0.0
+        coded = np.where(np.isfinite(t_comp), t_comp, cap)
+        self.stats.coded_latency += float(coded.sum())
+        unc = np.where(np.isfinite(lat), lat, cap).max(axis=1)
+        self.stats.uncoded_latency += float(unc.sum())
+        ok = np.array([e is None for e in errors], bool)
+        if ok.any():
+            self.stats.stragglers_tolerated += int((~masks[ok]).sum())
+
+    def _robust_launch(self, s, bucket: int, kind: str, xb: np.ndarray,
+                       n_live: int) -> "_Launched":
+        """Launch one staged bucket through the fault-tolerant path."""
+        cfg = self.cfg
+        n = self._n_workers()
+        if cfg.measured:
+            if kind != "c2c":
+                raise ValueError(
+                    "measured=True serves c2c buckets only "
+                    "(MeasuredWorkerRuntime is a 1-D c2c runtime)")
+            return self._measured_launch(s, bucket, xb, n_live)
+        masks, errors, t_comp, lat, rf, round_idx = \
+            self._fault_arrivals(n_live, kind)
+        self._account_robust(t_comp, lat, masks, errors)
+        full = np.ones((bucket, n), bool)
+        full[:n_live] = masks
+        errors = errors + [None] * (bucket - n_live)
+        live_corrupt = [w for w in sorted(rf.corrupt) if w < n]
+        if cfg.verify == "off" and not live_corrupt:
+            # fault-free data path: reuse the jitted bucket executor with
+            # the deadline-derived masks
+            out = self._runner_for(s, bucket, kind)(
+                *self._bucket_args(s, kind, xb, full))
+            return _Launched(out, errors)
+        # instrumented path: corruption must land in real worker rows and
+        # verification must see them, so execute host-visibly
+        rows, errors = self._verify_execute(s, kind, xb, full, errors,
+                                            round_idx, rf, n_live)
+        return _Launched(rows, errors)
+
+    def _verify_execute(self, s, kind: str, xb: np.ndarray,
+                        masks: np.ndarray, errors: list, round_idx: int,
+                        rf: RoundFaults, n_live: int) -> tuple[np.ndarray, list]:
+        """Instrumented bucket execution: real worker rows, injected
+        corruption, per-request Byzantine verification + decode."""
+        plan = self._plan_for(s, kind)
+        b = np.asarray(
+            plan.worker_compute(plan.encode(jnp.asarray(xb))), np.complex128)
+        live_corrupt = [w for w in sorted(rf.corrupt) if w < plan.n_workers]
+        if live_corrupt and self.injector is not None:
+            b = self.injector.corrupt_array(b, live_corrupt, round_idx,
+                                            worker_axis=1)
+        return self._decode_collected(s, kind, b, masks, errors, n_live)
+
+    def _decode_collected(self, s, kind: str, b: np.ndarray,
+                          masks: np.ndarray, errors: list, n_live: int
+                          ) -> tuple[np.ndarray, list]:
+        """Per-request decode of collected worker rows ``(bucket, N, ...)``,
+        with the configured Byzantine check on surplus responses.
+
+        ``verify="detect"``: k > m responses run the generalized-RS
+        syndrome check (catches up to k - m liars); a hit fails the request
+        (detection cannot say WHO lied with that budget).
+        ``verify="correct"``: Prony error location corrects up to
+        floor((k - m)/2) corrupt rows, flags the offenders into the health
+        tracker (excluded from future re-dispatch), and decodes from clean
+        rows -- bit-identical to the same-subset clean decode.
+        """
+        cfg = self.cfg
+        plan = self._plan_for(s, kind)
+        m, n = plan.m, plan.n_workers
+        bucket = b.shape[0]
+        nodes_all = np.asarray(mds.rs_nodes(n, jnp.complex128))
+        rows: list = [None] * bucket
+        for i in range(min(bucket, n_live)):   # padding rows never decode
+            if errors[i] is not None:
+                continue
+            recv = np.flatnonzero(masks[i])
+            k = int(recv.size)
+            if cfg.verify != "off" and k > m:
+                if cfg.verify == "detect":
+                    flat = b[i][recv].reshape(k, -1)
+                    if detect_errors(nodes_all[recv], flat, m):
+                        self.stats.detected += 1
+                        self.stats.degraded += 1
+                        errors[i] = ServiceError(
+                            "corrupt_uncorrectable",
+                            f"syndrome check failed over {k} responses "
+                            f'(verify="detect" cannot correct)')
+                        continue
+                    y = plan.decode(jnp.asarray(b[i]).astype(plan.dtype),
+                                    subset=jnp.asarray(recv[:m]))
+                else:
+                    res = robust_decode(plan, b[i], recv)
+                    if not res.ok:
+                        self.stats.detected += 1
+                        self.stats.degraded += 1
+                        errors[i] = ServiceError(
+                            "corrupt_uncorrectable",
+                            f"more than {(k - m) // 2} corrupt rows among "
+                            f"{k} responses")
+                        continue
+                    if res.n_errors_corrected:
+                        self.stats.detected += res.n_errors_corrected
+                        self.stats.corrected += res.n_errors_corrected
+                        for w in np.asarray(
+                                res.error_worker_indices).tolist():
+                            self.health.flag_byzantine(int(w))
+                    y = res.output
+            else:
+                y = plan.decode(jnp.asarray(b[i]).astype(plan.dtype),
+                                mask=jnp.asarray(masks[i]))
+            rows[i] = np.asarray(y)
+        zero = self._zero_row(s, kind)
+        out = np.stack([zero if r is None else r for r in rows])
+        return out, errors
+
+    def _zero_row(self, s, kind: str) -> np.ndarray:
+        """All-zeros result row (the slot value under a per-row error)."""
+        plan = self._plan_for(s, kind)
+        cdt = np.dtype(self.cfg.dtype)
+        rdt = np.real(np.zeros(1, cdt)).dtype
+        dt = rdt if kind in ("c2r", "irfftn") else cdt
+        return np.zeros(tuple(plan.output_shape), dt)
+
+    def _measured_for(self, s: int) -> MeasuredWorkerRuntime:
+        cfg = self.cfg
+        key = (s, self._n_workers())
+        if key not in self._measured:
+            self._measured[key] = MeasuredWorkerRuntime(
+                self._plan_for(s, "c2c"), self.health,
+                injector=self.injector, max_retries=cfg.max_retries,
+                retry_backoff=cfg.retry_backoff,
+                require_all=cfg.require_all,
+                threshold_extra=(0 if cfg.verify == "off"
+                                 else cfg.verify_quorum))
+        return self._measured[key]
+
+    def _measured_launch(self, s: int, bucket: int, xb: np.ndarray,
+                         n_live: int) -> "_Launched":
+        """Run one bucket on the thread-per-worker measured runtime."""
+        cfg = self.cfg
+        n = self._n_workers()
+        rt = self._measured_for(s)
+        round_idx = self._round
+        self._round += 1
+        alive = self.pool.mask() if self.pool is not None else None
+        res = rt.round(np.asarray(xb, np.complex128), round_idx, alive)
+        self.stats.retries += res.retries
+        self.stats.redispatched_shards += res.redispatched
+        self.stats.requests += n_live
+        t_last = res.t_last if np.isfinite(res.t_last) else 0.0
+        self.stats.uncoded_latency += t_last * n_live
+        errors: list = [None] * bucket
+        if not res.ok:
+            err = ServiceError(res.reason, f"measured round {round_idx}")
+            for i in range(n_live):
+                errors[i] = err
+            self.stats.degraded += n_live
+            self.stats.coded_latency += t_last * n_live
+            rows = np.stack([self._zero_row(s, "c2c")] * bucket)
+            return _Launched(rows, errors)
+        self.stats.coded_latency += float(res.t_met) * n_live
+        alive_arr = np.ones(n, bool) if alive is None else alive
+        self.stats.stragglers_tolerated += \
+            int((alive_arr & ~res.mask).sum()) * n_live
+        masks = np.ones((bucket, n), bool)
+        masks[:n_live] = res.mask[None, :]
+        # corruption was already injected by the worker threads inside
+        # res.b, so the shared decode/verify step runs as-is
+        return _Launched(*self._decode_collected(s, "c2c", res.b, masks,
+                                                 errors, n_live))
+
+    def fetch_bucket(self, out) -> tuple[np.ndarray, Optional[list]]:
+        """Host rows + per-row errors for one launched bucket.
+
+        The streaming syncer calls this instead of ``jax.device_get`` so
+        the robust path's per-row :class:`ServiceError` objects never go
+        through a device transfer (host rows pass straight through)."""
+        if isinstance(out, _Launched):
+            rows = (out.out if isinstance(out.out, np.ndarray)
+                    else jax.device_get(out.out))
+            return rows, out.errors
+        return jax.device_get(out), None
+
     # ------------------------------------------------------------------
     def submit(self, x: jax.Array) -> np.ndarray:
         """One request: returns F{x}, never waiting for stragglers."""
@@ -728,13 +1161,24 @@ class FFTService:
         self.stats.dispatch_s += time.perf_counter() - t0
 
         # phase 2 -- sync: ONE device->host transfer for the whole call
+        # (robust _Launched buckets contribute their device/host rows;
+        # numpy rows pass through device_get unchanged)
         t0 = time.perf_counter()
-        fetched = jax.device_get([out for _, out in pending])
+        fetched = jax.device_get(
+            [out.out if isinstance(out, _Launched) else out
+             for _, out in pending])
         self.stats.host_transfers += 1
         self.stats.sync_s += time.perf_counter() - t0
-        for (chunk, _), rows in zip(pending, fetched):
+        for (chunk, out), rows in zip(pending, fetched):
+            errors = out.errors if isinstance(out, _Launched) else None
             for row, i in enumerate(chunk):
-                results[i] = rows[row]
+                err = errors[row] if errors is not None else None
+                if err is not None:
+                    if cfg.on_failure == "raise":
+                        raise err
+                    results[i] = DegradedResult(err.reason, err.detail)
+                else:
+                    results[i] = rows[row]
         return results  # type: ignore[return-value]
 
     def warmup(self, lengths: Optional[Sequence[int]] = None,
@@ -780,7 +1224,7 @@ class FFTService:
                     autotune.ensure_fourstep(
                         ell, mode=mode, reps=cfg.autotune_reps)
                     autotune.ensure_bucket(
-                        kind_keys[k], s, cfg.m, cfg.n_workers, q=qmax,
+                        kind_keys[k], s, cfg.m, self._n_workers(), q=qmax,
                         mode=mode, reps=cfg.autotune_reps)
         outs = []
         for s in lengths:
@@ -791,7 +1235,10 @@ class FFTService:
                     continue        # scalar<->1-D, tuple<->n-D only
                 for b in sorted(set(buckets)):
                     xb = self._bucket_buffer(s, b, k)
-                    masks = np.ones((b, cfg.n_workers), bool)
+                    masks = np.ones((b, self._n_workers()), bool)
+                    # always the FAST executors: the robust path reuses
+                    # them whenever no corruption/verification is in play,
+                    # so precompiling here serves both modes
                     outs.append(self._runner_for(s, b, k)(
                         *self._bucket_args(s, k, xb, masks)))
         jax.block_until_ready(outs)
@@ -877,8 +1324,6 @@ class FFTService:
         cfg = self.cfg
         n_live = len(reqs)
         bucket = bucket_size(n_live, cfg.max_batch)
-        lat, mask = self._simulate_arrivals(n_live, kind)
-        self._account(lat, mask)
         self.stats.batches += 1
 
         xb = self._bucket_buffer(s, bucket, kind)
@@ -886,6 +1331,14 @@ class FFTService:
         for row, x in enumerate(reqs):
             x = np.asarray(x)
             xb[row] = x.real if real_in and np.iscomplexobj(x) else x
+        if self._robust:
+            # fault path: masks are derived at LAUNCH time -- the deadline/
+            # retry state machine mutates health + round state, which the
+            # launch step owns (stager-thread-confined on the streaming
+            # path, exactly like the non-robust service internals)
+            return bucket, (xb, n_live)
+        lat, mask = self._simulate_arrivals(n_live, kind)
+        self._account(lat, mask)
         # padded rows: every worker "responds" so decode stays well-posed
         masks = np.ones((bucket, cfg.n_workers), bool)
         masks[:n_live] = mask
@@ -896,8 +1349,14 @@ class FFTService:
         """Launch one staged bucket; returns the UNSYNCED device result.
 
         The jitted call returns immediately (async dispatch), so callers
-        can launch every bucket before blocking once on all of them.
+        can launch every bucket before blocking once on all of them.  On
+        the fault-tolerant path the return value is a :class:`_Launched`
+        (device/host rows + per-row errors); fetch it with
+        :meth:`fetch_bucket` rather than ``jax.device_get``.
         """
+        if self._robust:
+            xb, n_live = args
+            return self._robust_launch(s, bucket, kind, xb, n_live)
         return self._runner_for(s, bucket, kind)(*args)
 
     def _dispatch_bucket(self, s, idxs: list[int], xs,

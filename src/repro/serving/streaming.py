@@ -505,7 +505,10 @@ class StreamingFFTService:
             plan, out = item
             t0 = time.perf_counter()
             try:
-                rows = jax.device_get(out)
+                # fetch_bucket (not a bare device_get): the fault-tolerant
+                # path returns host rows plus per-row ServiceErrors, which
+                # must become per-request Future exceptions
+                rows, row_errors = self.service.fetch_bucket(out)
             except Exception as e:                # noqa: BLE001
                 self._sync_q.task_done()
                 with self._lock:
@@ -521,7 +524,7 @@ class StreamingFFTService:
                 self.stats.host_transfers += 1
                 self._record_compute_locked(
                     (plan.s, plan.kind), plan.stage_s + dt)
-            self._resolve(plan, rows=rows)
+            self._resolve(plan, rows=rows, row_errors=row_errors)
 
     def _stage_and_sync(self, plan: _BucketPlan) -> None:
         """The unpipelined baseline: stage, launch, and block, serially
@@ -533,17 +536,18 @@ class StreamingFFTService:
             self._resolve(plan, error=e)
             return
         t1 = time.perf_counter()
-        rows = jax.device_get(out)
+        rows, row_errors = self.service.fetch_bucket(out)
         t2 = time.perf_counter()
         with self._lock:
             self.stats.dispatch_s += t1 - t0
             self.stats.sync_s += t2 - t1
             self.stats.host_transfers += 1
             self._record_compute_locked((plan.s, plan.kind), t2 - t0)
-        self._resolve(plan, rows=rows)
+        self._resolve(plan, rows=rows, row_errors=row_errors)
 
     def _resolve(self, plan: _BucketPlan, rows=None,
-                 error: Optional[Exception] = None) -> None:
+                 error: Optional[Exception] = None,
+                 row_errors: Optional[list] = None) -> None:
         now = time.perf_counter()
         with self._cv:
             for req in plan.reqs:
@@ -563,8 +567,13 @@ class StreamingFFTService:
             if not req.future.set_running_or_notify_cancel():
                 cancelled += 1
                 continue
-            if error is not None:
-                req.future.set_exception(error)
+            # a bucket-wide error beats per-row errors; a per-row
+            # ServiceError (fault path) fails ONLY its own request --
+            # the rest of the bucket resolves normally
+            err = error if error is not None else (
+                row_errors[row] if row_errors is not None else None)
+            if err is not None:
+                req.future.set_exception(err)
             else:
                 req.future.set_result(rows[row])
         if cancelled:

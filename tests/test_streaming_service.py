@@ -439,6 +439,125 @@ def test_scheduler_stress_random_cancels_and_flushes():
     assert time.perf_counter() - t_start < 60.0, "wall-clock guard"
 
 
+# ------------------------------------------------- fault-injected streaming
+def test_streaming_kill_fault_recovers_transparently():
+    """One persistently dead worker is a latency event, not a failure:
+    re-dispatch fills the missing shard rows and every future resolves to
+    the true transform."""
+    from repro.distributed import FaultPlan
+
+    svc = FFTService(_cfg(faults=FaultPlan().kill(2, rounds=999)))
+    with StreamingFFTService(svc, StreamConfig(slack_s=30.0)) as stream:
+        xs = _reqs(8, seed=21)
+        futs = [stream.submit(x) for x in xs]
+        for x, f in zip(xs, futs):
+            assert np.abs(f.result(timeout=120) - np.fft.fft(x)).max() < 1e-2
+    assert svc.stats.degraded == 0
+    assert not any(t.is_alive() for t in stream._threads)
+
+
+def test_streaming_fault_failures_are_typed_future_exceptions():
+    """An unservable round (5 dead workers, zero retries) surfaces as a
+    typed ServiceError on EACH future -- and the scheduler/stager/syncer
+    threads survive to serve the next submission."""
+    from repro.distributed import FaultPlan
+    from repro.serving import ServiceError
+
+    plan = FaultPlan()
+    for w in range(5):
+        plan = plan.kill(w, rounds=999)
+    svc = FFTService(_cfg(faults=plan, max_retries=0))
+    with StreamingFFTService(svc, StreamConfig(slack_s=30.0)) as stream:
+        futs = [stream.submit(x) for x in _reqs(4, seed=22)]
+        for f in futs:
+            with pytest.raises(ServiceError) as ei:
+                f.result(timeout=120)
+            assert ei.value.reason == "retries_exhausted"
+        # the pipeline is still alive: a second wave gets the same
+        # typed answer instead of a hang or a dead-thread timeout
+        assert all(t.is_alive() for t in stream._threads)
+        f2 = stream.submit(_reqs(1, seed=23)[0])
+        with pytest.raises(ServiceError):
+            f2.result(timeout=120)
+    assert svc.stats.degraded >= 5
+    assert not any(t.is_alive() for t in stream._threads)
+
+
+def test_streaming_corrupt_fault_detected_as_future_exception():
+    """A Byzantine worker under verify="detect": the syndrome check turns
+    silent corruption into a typed corrupt_uncorrectable Future exception
+    (and under verify="off" it would have been silently wrong)."""
+    from repro.distributed import FaultPlan, StragglerModel
+    from repro.serving import ServiceError
+
+    tight = StragglerModel(t0=1.0, mu=1e6)  # all workers arrive -> k = 8
+    svc = FFTService(_cfg(straggler=tight,
+                          faults=FaultPlan(seed=3).corrupt(1, rounds=999),
+                          verify="detect"))
+    with StreamingFFTService(svc, StreamConfig(slack_s=30.0)) as stream:
+        f = stream.submit(_reqs(1, seed=24)[0])
+        with pytest.raises(ServiceError) as ei:
+            f.result(timeout=120)
+        assert ei.value.reason == "corrupt_uncorrectable"
+    assert svc.stats.detected >= 1
+    assert not any(t.is_alive() for t in stream._threads)
+
+
+def test_scheduler_stress_with_fault_injection():
+    """The PR-8 lifecycle stress under a random kill/delay/corrupt storm
+    with Byzantine correction on: every non-cancelled future either holds
+    the true transform or raises a TYPED ServiceError -- no untyped
+    exceptions, no lost futures, no dead pipeline threads."""
+    from repro.distributed import FaultPlan, StragglerModel
+    from repro.serving import FAILURE_REASONS, ServiceError
+
+    t_start = time.perf_counter()
+    plan = FaultPlan.random(8, rate=0.25, horizon=256, seed=20)
+    svc = FFTService(_cfg(s=64, max_batch=4, faults=plan, verify="correct",
+                          straggler=StragglerModel(t0=1.0, mu=50.0)))
+    scfg = StreamConfig(
+        tiers={"interactive": 0.002, "standard": 0.01, "batch": 0.05},
+        max_queue=10_000)
+    rng = np.random.default_rng(25)
+    xs = _reqs(8, s=64, seed=25)
+    stream = StreamingFFTService(svc, scfg)
+    futs, cancelled = [], 0
+    for i in range(200):
+        tier = ("interactive", "standard", "batch")[int(rng.integers(3))]
+        f = stream.submit(xs[i % len(xs)], tier=tier)
+        futs.append((xs[i % len(xs)], f))
+        if rng.random() < 0.2 and f.cancel():
+            cancelled += 1
+        if i % 41 == 40:
+            stream.flush()
+    assert stream.drain(timeout=90.0), "scheduler deadlocked under faults"
+    stream.close()
+    assert all(f.done() for _, f in futs)
+    served = failed = 0
+    for x, f in futs:
+        if f.cancelled():
+            continue
+        try:
+            y = f.result(timeout=1)
+        except ServiceError as e:
+            assert e.reason in FAILURE_REASONS    # typed, never raw
+            failed += 1
+        else:
+            assert np.abs(y - np.fft.fft(x)).max() < 1e-2
+            served += 1
+    assert served + failed == 200 - cancelled
+    assert served > 0                             # the storm never won outright
+    st = svc.stats.summary()
+    assert st["cancelled"] == cancelled
+    assert st["degraded"] >= failed               # cancelled rows still ride
+    #                                               the bucket and may degrade
+    # the fault machinery demonstrably engaged
+    assert (st["retries"] + st["redispatched_shards"]
+            + st["detected"] + st["corrected"]) > 0
+    assert not any(t.is_alive() for t in stream._threads)
+    assert time.perf_counter() - t_start < 90.0, "wall-clock guard"
+
+
 def test_latency_histogram_percentiles():
     h = LatencyHistogram()
     for v in [0.001] * 90 + [1.0] * 10:
