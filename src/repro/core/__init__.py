@@ -53,8 +53,14 @@ from repro.core.rfftn import (
     split_packed_nd,
 )
 from repro.core.strategies import (
+    REGISTRY,
+    CodedCommEffFFT,
+    CodedPartialFFT,
+    StrategyEntry,
     UncodedRepetitionFFT,
     coded_fft_threshold,
+    make_strategy,
+    register_strategy,
     repetition_threshold,
     short_dot_threshold,
 )
@@ -104,6 +110,12 @@ __all__ = [
     "dft_matrix",
     "twiddle",
     "UncodedRepetitionFFT",
+    "CodedPartialFFT",
+    "CodedCommEffFFT",
+    "StrategyEntry",
+    "REGISTRY",
+    "register_strategy",
+    "make_strategy",
     "coded_fft_threshold",
     "repetition_threshold",
     "short_dot_threshold",

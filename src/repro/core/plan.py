@@ -33,6 +33,7 @@ from typing import Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import mds
 from repro.kernels import ops
@@ -162,6 +163,33 @@ class MDSPlanBase:
     def _postdecode1(self, c_hat: jax.Array) -> jax.Array:
         raise NotImplementedError
 
+    # -- decode-system hooks (DESIGN.md §13) ---------------------------------
+    # For the plain MDS plans the decode system IS the encode system: the
+    # (N, m) generator, solvable from any m responders.  Beyond-MDS
+    # strategies reuse the whole batched decode machinery below by
+    # overriding just these two: the communication-efficient plan's fold
+    # makes each worker a row of the WIDER (N, m*q) code, so it decodes
+    # against a different generator than it encodes with.
+    @property
+    def decode_generator(self) -> jax.Array:
+        """Generator of the linear system decode solves (default: the
+        encode generator)."""
+        return self.generator
+
+    @property
+    def decode_width(self) -> int:
+        """Number of responder rows decode needs -- the column count of
+        ``decode_generator`` (default: ``m``)."""
+        return self.m
+
+    def decodable(self, mask=None) -> bool:
+        """Host-side check: can the master finish from these responders?
+        For (any-subset-decodable) MDS-style codes this is a pure count
+        against ``recovery_threshold``."""
+        if mask is None:
+            return self.n_workers >= self.recovery_threshold
+        return int(np.asarray(mask).sum()) >= self.recovery_threshold
+
     # -- backend dispatch ----------------------------------------------------
     @property
     def resolved_backend(self) -> str:
@@ -267,7 +295,7 @@ class MDSPlanBase:
         """
         if subset is not None and mask is not None:
             raise ValueError("pass at most one of subset / mask")
-        m = self.m
+        m = self.decode_width
         core = 1 + len(self.worker_shard_shape)
         batch = batch_shape(b, core, "worker results")
         use_kernel = self.resolved_backend == "kernel"
@@ -325,10 +353,11 @@ class MDSPlanBase:
             # subset are never read (straggler garbage stays out).
             rows = jnp.take(b, subset, axis=0)
             dmat = mds.subset_decode_matrix(
-                self.generator, subset).astype(self.dtype)
+                self.decode_generator, subset).astype(self.dtype)
             c_hat = ops.mds_apply(dmat, rows)
             return self._postdecode1(c_hat)
-        c_hat = mds.decode_auto(self.generator, b, subset, method=method)
+        c_hat = mds.decode_auto(self.decode_generator, b, subset,
+                                method=method)
         return self._postdecode1(c_hat)
 
     def run(

@@ -29,16 +29,25 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
-from typing import Iterable, Optional
+from typing import Callable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.coded_fft import CodedFFT
+from repro.core.comm_efficient import CodedCommEffFFT
+from repro.core.partial import CodedPartialFFT
 from repro.core.plan import batch_shape
 
 __all__ = [
     "UncodedRepetitionFFT",
+    "CodedPartialFFT",
+    "CodedCommEffFFT",
+    "StrategyEntry",
+    "REGISTRY",
+    "register_strategy",
+    "make_strategy",
     "coded_fft_threshold",
     "repetition_threshold",
     "short_dot_threshold",
@@ -217,3 +226,116 @@ class UncodedRepetitionFFT:
             if not self.decodable(mask):
                 return False
         return True
+
+
+# -- strategy registry (DESIGN.md §13) ----------------------------------------
+#
+# One name -> (factory, applicability) table for every computation strategy,
+# so new plans auto-enroll everywhere a strategy choice exists: the
+# registry-parametrized property suite differentially verifies each entry
+# against numpy.fft under drawn configs/masks with zero new test code,
+# `FFTService(strategy=...)` resolves its bucket plans here, and the
+# benchmarks race whatever is registered.
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyEntry:
+    """One computation strategy the runtime can execute.
+
+    ``factory(s, m, n_workers, *, dtype, backend, param)`` builds the plan
+    (``param`` is the strategy's own knob -- ``r`` fragments for partial,
+    ``q`` fold for comm-efficient -- ``None`` means the entry's default).
+    ``applicable(s, m, n_workers, param)`` is the cheap per-(s, m, N)
+    predicate the service's bucket selection and the test parametrization
+    filter on; the factory's own ValueError stays the authoritative (and
+    explanatory) gate.
+    """
+
+    name: str
+    factory: Callable
+    applicable: Callable[[int, int, int, Optional[int]], bool]
+    default_param: Optional[int] = None
+    kernel_ok: bool = False
+    mesh_ok: bool = True
+    description: str = ""
+
+    def build(self, s: int, m: int, n_workers: int, *,
+              dtype=jnp.complex64, backend: str = "reference",
+              param: Optional[int] = None):
+        return self.factory(s, m, n_workers, dtype=dtype, backend=backend,
+                            param=self.default_param if param is None
+                            else param)
+
+
+REGISTRY: dict[str, StrategyEntry] = {}
+
+
+def register_strategy(entry: StrategyEntry) -> StrategyEntry:
+    if entry.name in REGISTRY:
+        raise ValueError(f"strategy {entry.name!r} already registered")
+    REGISTRY[entry.name] = entry
+    return entry
+
+
+def make_strategy(name: str, s: int, m: int, n_workers: int, *,
+                  dtype=jnp.complex64, backend: str = "reference",
+                  param: Optional[int] = None):
+    """Build a registered strategy's plan; raises KeyError on unknown
+    names and the plan's own ValueError on inapplicable (s, m, N)."""
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown strategy {name!r}; registered: {sorted(REGISTRY)}")
+    return REGISTRY[name].build(s, m, n_workers, dtype=dtype,
+                                backend=backend, param=param)
+
+
+register_strategy(StrategyEntry(
+    name="mds",
+    factory=lambda s, m, n, *, dtype, backend, param: CodedFFT(
+        s, m, n, dtype=dtype, backend=backend),
+    applicable=lambda s, m, n, param: s % m == 0 and n >= m,
+    kernel_ok=True,
+    mesh_ok=True,
+    description="the paper's (N, m) MDS code: threshold m (optimal), "
+                "full s/m payload per worker",
+))
+
+register_strategy(StrategyEntry(
+    name="partial",
+    factory=lambda s, m, n, *, dtype, backend, param: CodedPartialFFT(
+        s, m, n, r=param, dtype=dtype, backend=backend),
+    applicable=lambda s, m, n, param:
+        s % (m * (param or 2)) == 0 and n >= m,
+    default_param=2,
+    kernel_ok=False,
+    mesh_ok=True,
+    description="Wang et al. 1804.09791: r sequentially-useful fragments "
+                "per worker, decode from any m*r fragments -- slow-but-"
+                "alive workers contribute prefixes",
+))
+
+register_strategy(StrategyEntry(
+    name="comm_efficient",
+    factory=lambda s, m, n, *, dtype, backend, param: CodedCommEffFFT(
+        s, m, n, q=param, dtype=dtype, backend=backend),
+    applicable=lambda s, m, n, param:
+        s % m == 0 and (s // m) % (param or 2) == 0
+        and n >= m * (param or 2),
+    default_param=2,
+    kernel_ok=False,
+    mesh_ok=True,
+    description="Jeong et al. 1805.09891: ship a 1/q folded payload "
+                "(payload_scale 1/q) at threshold m*q -- wins when the "
+                "wire dominates",
+))
+
+register_strategy(StrategyEntry(
+    name="repetition",
+    factory=lambda s, m, n, *, dtype, backend, param: UncodedRepetitionFFT(
+        s, m, n, dtype=dtype),
+    applicable=lambda s, m, n, param: s % m == 0 and n % (m * m) == 0,
+    kernel_ok=False,
+    mesh_ok=False,
+    description="Remark-4 uncoded baseline: block-partitioned DFT with "
+                "replication, worst-case threshold N - N/m^2 + 1",
+))

@@ -86,14 +86,29 @@ class DistributedCodedPlan:
 
     # ------------------------------------------------------------------
     def run(self, x: jax.Array, mask: Optional[jax.Array] = None,
-            *, method: str = "auto",
+            *, fragment_mask: Optional[jax.Array] = None,
+            method: str = "auto",
             faults: Optional[object] = None, round_idx: int = 0
             ) -> jax.Array:
         """End-to-end coded transform of ``x`` under the mesh.
 
         ``x``: ``(*B, *input_shape)``; ``mask``: bool ``(*B, N)`` or shared
-        ``(N,)`` worker availability (>= m True per request).  Default: all
-        up.  Returns ``(*B, *output_shape)``.
+        ``(N,)`` worker availability.  Default: all up.  Returns
+        ``(*B, *output_shape)``.
+
+        ``fragment_mask`` (plans with ``fragments > 1``, DESIGN.md §13):
+        bool ``(*B, N, F)`` / ``(N, F)`` per-fragment availability -- a
+        slow-but-alive worker contributes its finished prefix.  Combines
+        with ``mask`` (a masked worker loses all its fragments).
+
+        The strategy hooks (all optional, the base MDS plans use none):
+        ``worker_encode_tensor`` ``(N, F, W)`` replaces per-worker
+        generator rows, ``stored_shard_shape`` sizes the per-device
+        buffer when a plan ships less than it stores, ``worker_compute_
+        rows`` is the worker-index-aware compute (the comm-efficient
+        fold), and ``decode_generator`` is the (possibly wider) system
+        the master solves -- the gathered ``(N, F)`` results flatten to
+        its ``N*F`` rows in ``f*N + w`` order.
 
         ``faults`` (opt-in hook, DESIGN.md §12): a
         :class:`~repro.distributed.faults.FaultPlan` or ``FaultInjector``
@@ -107,9 +122,24 @@ class DistributedCodedPlan:
         every participant.  With ``faults=None`` the trace is unchanged.
         """
         plan = self.plan
-        n, m = plan.n_workers, plan.recovery_threshold
-        shard = tuple(plan.worker_shard_shape)
-        payload = math.prod(shard)
+        n = plan.n_workers
+        nf = getattr(plan, "fragments", 1)
+        out_shard = tuple(plan.worker_shard_shape)
+        stored = tuple(getattr(plan, "stored_shard_shape", out_shard))
+        # what one decoded row / shipped fragment carries
+        post_shard = out_shard[1:] if nf > 1 else out_shard
+        payload = math.prod(post_shard)
+        enc_t = getattr(plan, "worker_encode_tensor", None)
+        if enc_t is None:
+            enc_t = plan.generator[:, None, :]                # (N, 1, m)
+        width = enc_t.shape[2]
+        dec_g = getattr(plan, "decode_generator", None)
+        if dec_g is None:
+            dec_g = plan.generator
+        k = dec_g.shape[1]
+        n_rows = n * nf
+        wc_rows = getattr(plan, "worker_compute_rows", None)
+
         batch = batch_shape(x, len(plan.input_shape), "plan input")
         if mask is None:
             mask = jnp.ones(batch + (n,), bool)
@@ -124,10 +154,16 @@ class DistributedCodedPlan:
             if rf.corrupt:
                 corrupt = jnp.asarray(injector.corrupt_flags(n, round_idx))
 
-        # host-side interleave -> (B, m, payload) flat message symbols
-        c = plan.message(x).reshape((-1, m, payload))
+        # host-side interleave -> (B, W, payload) flat message symbols
+        c = plan.message(x).reshape((-1, width, math.prod(stored) // nf))
         nb = c.shape[0]
-        maskf = jnp.broadcast_to(jnp.asarray(mask), batch + (n,)).reshape(nb, n)
+        wmask = jnp.broadcast_to(jnp.asarray(mask), batch + (n,)).reshape(nb, n)
+        if fragment_mask is None:
+            fmask = jnp.broadcast_to(wmask[:, :, None], (nb, n, nf))
+        else:
+            fmask = jnp.broadcast_to(
+                jnp.asarray(fragment_mask), batch + (n, nf)
+            ).reshape(nb, n, nf) & wmask[:, :, None]
         fill = jnp.asarray(self.masked_fill, c.dtype)
 
         # the worker axis stays LEADING through both shard_map stages: the
@@ -137,74 +173,88 @@ class DistributedCodedPlan:
         @partial(
             shard_map, mesh=self.mesh,
             in_specs=(P(), P(), P()),
-            out_specs=P(self.axis, None, None),
+            out_specs=P(self.axis, None, None, None),
             check_rep=False,
         )
-        def workers(c_rep, mask_rep, corrupt_rep):
+        def workers(c_rep, fmask_rep, corrupt_rep):
             # per-device fused encode+compute: each device forms only its
             # own coded shards from the replicated message symbols
             idx = jax.lax.axis_index(self.axis)
             rows = idx * self.n_local + jnp.arange(self.n_local)
-            g_rows = jnp.take(plan.generator, rows, axis=0)  # (n_local, m)
-            a = jnp.einsum("nm,bmp->nbp", g_rows.astype(c_rep.dtype), c_rep)
-            b = plan.worker_compute(a.reshape((self.n_local, nb) + shard))
-            b = b.reshape(self.n_local, nb, payload)
+            g_rows = jnp.take(enc_t, rows, axis=0)        # (n_local, F, W)
+            a = jnp.einsum("nfw,bwp->nbfp", g_rows.astype(c_rep.dtype),
+                           c_rep)
+            a = a.reshape((self.n_local, nb) + stored)
+            if wc_rows is not None:
+                # worker-index-aware compute (the comm-efficient fold
+                # weights depend on k): its contract puts the row axis at
+                # -2 over the trailing 1-D shard
+                b = jnp.moveaxis(
+                    wc_rows(jnp.moveaxis(a, 0, -2), rows), -2, 0)
+            else:
+                b = plan.worker_compute(a)
+            b = b.reshape(self.n_local, nb, nf, payload)
             # Byzantine rows: deterministic in-trace garbage (affine warp
             # of the true values -- "arbitrarily wrong", not just scaled,
             # and jit-stable, unlike a traced RNG draw would be)
             bad = jnp.take(corrupt_rep, rows)                 # (n_local,)
-            b = jnp.where(bad[:, None, None], b * (-3.7) + 11.3, b)
-            alive = jnp.take(mask_rep, rows, axis=1)          # (nb, n_local)
-            return jnp.where(alive.T[:, :, None], b, fill)
+            b = jnp.where(bad[:, None, None, None], b * (-3.7) + 11.3, b)
+            alive = jnp.take(fmask_rep, rows, axis=1)     # (nb, n_local, F)
+            return jnp.where(
+                jnp.moveaxis(alive, 0, 1)[:, :, :, None], b, fill)
 
-        b = workers(c, maskf, corrupt)                        # (N, nb, payload)
+        b = workers(c, fmask, corrupt)                    # (N, nb, F, payload)
 
         @partial(
             shard_map, mesh=self.mesh,
-            in_specs=(P(self.axis, None, None), P()),
+            in_specs=(P(self.axis, None, None, None), P()),
             out_specs=P(),
             check_rep=False,
         )
-        def master(b_local, mask_rep):
-            # the paper's fan-in: gather the coded results to the master
+        def master(b_local, fmask_rep):
+            # the paper's fan-in: gather the coded results to the master,
+            # then flatten fragments into decode-system row order f*N + w
             b_all = jax.lax.all_gather(b_local, self.axis, tiled=True)
-            b_all = jnp.swapaxes(b_all, 0, 1)                 # (nb, N, payload)
+            b_all = jnp.moveaxis(b_all, 0, 2)             # (nb, F, N, p)
+            b_all = b_all.reshape(nb, n_rows, payload)
+            rmask = jnp.swapaxes(fmask_rep, 1, 2).reshape(nb, n_rows)
 
             def decode1(bi, mk, mth):
-                subset = mds.first_available(mk, m)
-                c_hat = mds.decode_auto(
-                    plan.generator, bi, subset, method=mth)
-                return plan.postdecode(c_hat.reshape((m,) + shard))
+                subset = mds.first_available(mk, k)
+                c_hat = mds.decode_auto(dec_g, bi, subset, method=mth)
+                return plan.postdecode(c_hat.reshape((k,) + post_shard))
 
             if nb == 1:
                 # single request: decode_auto's lax.cond stays a real branch
-                return decode1(b_all[0], mask_rep[0], method)[None]
-            if method == "auto" and m <= mds.LAGRANGE_MAX_M:
+                return decode1(b_all[0], rmask[0], method)[None]
+            if method == "auto" and k <= mds.LAGRANGE_MAX_M:
                 # batched mask-to-weights (DESIGN.md §8): per-request
                 # decode matrices from the closed-form Lagrange inversion,
                 # built in-trace -- no vmapped linalg.solve, no host work
-                # per novel mask.  The m responder rows are GATHERED before
+                # per novel mask.  The k responder rows are GATHERED before
                 # the contraction, so the masked_fill rows (NaN in tests)
                 # are provably never read.
                 subsets = jax.vmap(
-                    lambda mk: mds.first_available(mk, m))(mask_rep)
+                    lambda mk: mds.first_available(mk, k))(rmask)
                 inv = jax.vmap(
-                    lambda sub: mds.lagrange_inverse(sub, n, b_all.dtype)
+                    lambda sub: mds.lagrange_inverse(sub, n_rows,
+                                                     b_all.dtype)
                 )(subsets)
                 rows = jnp.take_along_axis(
                     b_all, subsets[:, :, None], axis=1)
-                c_hat = inv @ rows                        # (nb, m, payload)
+                c_hat = inv @ rows                        # (nb, k, payload)
                 return jax.vmap(
-                    lambda ch: plan.postdecode(ch.reshape((m,) + shard))
+                    lambda ch: plan.postdecode(
+                        ch.reshape((k,) + post_shard))
                 )(c_hat)
             # batched, pinned method: under vmap decode_auto's cond would
             # select-execute BOTH decode paths per request -- resolve auto
             # to the solve instead
             mth = "solve" if method == "auto" else method
             return jax.vmap(lambda bi, mk: decode1(bi, mk, mth))(
-                b_all, mask_rep)
+                b_all, rmask)
 
-        out = master(b, maskf)                                # (nb, *out_shape)
+        out = master(b, fmask)                                # (nb, *out_shape)
         if not batch:
             return out[0]
         return out.reshape(batch + tuple(plan.output_shape))

@@ -155,6 +155,23 @@ class WorkerHealthTracker:
         with np.errstate(invalid="ignore"):
             return np.where(np.isfinite(times), times <= deadline, False)
 
+    def fragment_mask_from_times(self, times: np.ndarray, deadline: float,
+                                 fractions: Sequence[float]) -> np.ndarray:
+        """Per-fragment availability for partial-work plans (DESIGN.md §13).
+
+        A partial-work worker emits fragment ``f`` at ``times * fractions
+        [f]`` of its full-shard completion (fragments are sequential, so
+        ``fractions`` is increasing, e.g. ``(f+1)/r``).  The deadline then
+        gates each fragment separately: a worker that misses the round
+        deadline overall still lands the prefix of fragments whose scaled
+        times beat it -- "missed deadline" becomes per-fragment, not
+        per-worker.  ``times``: ``(..., N)`` -> mask ``(..., N, F)``.
+        """
+        times = np.asarray(times, dtype=np.float64)
+        ft = times[..., None] * np.asarray(fractions, dtype=np.float64)
+        with np.errstate(invalid="ignore"):
+            return np.where(np.isfinite(ft), ft <= deadline, False)
+
     # -- calibration ------------------------------------------------------
     def calibrate(self, workload: float = 1.0, *,
                   wire_frac: float = 0.0) -> StragglerModel:

@@ -69,7 +69,7 @@ from repro.core.coded_fft import CodedFFT, plan_factors
 from repro.core.fault_tolerance import detect_errors, robust_decode
 from repro.core.rfft import CodedIRFFT, CodedRFFT
 from repro.core.rfftn import CodedIRFFTN, CodedRFFTN
-from repro.core.strategies import coded_fft_threshold
+from repro.core.strategies import REGISTRY, make_strategy
 from repro.distributed.coded_runtime import DistributedCodedPlan
 from repro.distributed.elastic import ElasticWorkerPool
 from repro.distributed.faults import FaultInjector, FaultPlan, RoundFaults
@@ -220,6 +220,18 @@ class FFTServiceConfig:
     #                               deadlines/retries; c2c kinds only)
     require_all: bool = False     # measured path waits for ALL live workers
     #                               (the uncoded baseline for the fault bench)
+    # -- computation strategy (DESIGN.md §13) ---------------------------
+    strategy: str = "mds"         # registered strategy serving the c2c
+    #                               buckets: "mds" (the paper's code),
+    #                               "partial" (Wang 1804.09791: r fragments
+    #                               per worker, decode from any m*r),
+    #                               "comm_efficient" (Jeong 1805.09891:
+    #                               1/q payload at threshold m*q), or
+    #                               "repetition".  Non-"mds" strategies are
+    #                               c2c-only and run the jnp executor.
+    strategy_param: Optional[int] = None  # the strategy's own knob (r for
+    #                               partial, q for comm_efficient); None
+    #                               means the registry entry's default
 
 
 @dataclasses.dataclass
@@ -321,6 +333,32 @@ class FFTService:
         if cfg.on_failure not in ("raise", "degrade"):
             raise ValueError(
                 f'on_failure must be "raise"|"degrade", got {cfg.on_failure!r}')
+        if cfg.strategy not in REGISTRY:
+            raise ValueError(
+                f"unknown strategy {cfg.strategy!r}; "
+                f"registered: {sorted(REGISTRY)}")
+        if cfg.strategy != "mds":
+            # the Byzantine verifier and the measured runtime speak the
+            # (N, m) MDS row code; the worker plug-in contract is the MDS
+            # c2c worker
+            if cfg.verify != "off" or cfg.measured:
+                raise ValueError(
+                    f"strategy {cfg.strategy!r} does not compose with "
+                    f"verify/measured (MDS-row machinery)")
+            if cfg.worker_fn is not None:
+                raise ValueError(
+                    f"worker_fn plug-ins apply to the mds strategy only, "
+                    f"got strategy {cfg.strategy!r}")
+            if cfg.strategy == "repetition":
+                # its replication decode is host-side block assembly, not
+                # the jittable masked-subset protocol the bucket executors
+                # speak; it stays a Remark-4 benchmark baseline
+                raise ValueError(
+                    "the repetition baseline is bench-only; the service "
+                    "serves subset-decodable strategies")
+        if mesh is not None and not REGISTRY[cfg.strategy].mesh_ok:
+            raise ValueError(
+                f"strategy {cfg.strategy!r} does not compose with a mesh")
         if pool is not None and pool.m != cfg.m:
             raise ValueError(
                 f"pool threshold m={pool.m} must match cfg.m={cfg.m}")
@@ -382,6 +420,25 @@ class FFTService:
         n = self._n_workers()
         key = (s, cfg.m, kind, n)
         if key not in self._plans:
+            if cfg.strategy != "mds":
+                if kind != "c2c":
+                    # the real/n-D pipelines (pair packing, Hermitian
+                    # recombine) are built on the (N, m) MDS row code
+                    raise ValueError(
+                        f"strategy {cfg.strategy!r} serves c2c buckets "
+                        f"only; got a {kind!r} request")
+                ent = REGISTRY[cfg.strategy]
+                if not ent.applicable(s, cfg.m, n, cfg.strategy_param):
+                    raise ValueError(
+                        f"strategy {cfg.strategy!r} is not applicable at "
+                        f"(s={s}, m={cfg.m}, N={n}, "
+                        f"param={cfg.strategy_param})")
+                # always the jnp executor: the fused planar bucket kernels
+                # are (N, m) MDS layouts (StrategyEntry.kernel_ok)
+                self._plans[key] = make_strategy(
+                    cfg.strategy, s, cfg.m, n, dtype=cfg.dtype,
+                    backend="reference", param=cfg.strategy_param)
+                return self._plans[key]
             if cfg.worker_fn is not None and kind != "c2c":
                 # the plug-in contract is the c2c worker (fft along the
                 # last axis); silently serving real-kind traffic without
@@ -443,6 +500,7 @@ class FFTService:
         """
         cfg = self.cfg
         return (kind not in self.ND_KINDS
+                and cfg.strategy == "mds"
                 and self.mesh is None
                 and not cfg.use_reference
                 and cfg.worker_fn is None
@@ -535,12 +593,25 @@ class FFTService:
                 self._runners[key] = self._make_kernel_runner(s, bucket, kind)
             else:
                 method = self.cfg.decode_method
+                nf = int(getattr(self._plan_for(s, kind), "fragments", 1))
                 if self.mesh is not None:
                     runtime = self._runtime_for(s, kind)
-                    fn = lambda xb, masks: runtime.run(xb, masks, method=method)
+                    if nf > 1:
+                        fn = lambda xb, masks: runtime.run(
+                            xb, fragment_mask=masks, method=method)
+                    else:
+                        fn = lambda xb, masks: runtime.run(
+                            xb, masks, method=method)
                 else:
                     plan = self._plan_for(s, kind)
-                    fn = lambda xb, masks: plan.run(xb, mask=masks, method=method)
+                    if nf > 1:
+                        # partial-work strategy: the staged masks are
+                        # per-fragment (bucket, N, r)
+                        fn = lambda xb, masks: plan.run(
+                            xb, fragment_mask=masks, method=method)
+                    else:
+                        fn = lambda xb, masks: plan.run(
+                            xb, mask=masks, method=method)
                 self._runners[key] = jax.jit(fn)
         return self._runners[key]
 
@@ -760,6 +831,15 @@ class FFTService:
         return jax.jit(fn)
 
     # ------------------------------------------------------------------
+    def _wire_scale(self, kind: str) -> float:
+        """Per-shard wire payload relative to the c2c MDS shard.
+
+        Real-kind shards (r2c/c2r, mds-only) ship HALF the c2c payload
+        (pair packing, DESIGN.md §7); non-mds strategies charge their own
+        ``payload_scale`` (1/q for comm_efficient, 1 for partial)."""
+        base = 0.5 if kind in self.REAL_KINDS else 1.0
+        return base * float(getattr(self.plan, "payload_scale", 1.0))
+
     def _simulate_arrivals(self, n_requests: int, kind: str = "c2c"
                            ) -> tuple[np.ndarray, np.ndarray]:
         """Per-request worker latencies + availability masks at decode time.
@@ -768,26 +848,48 @@ class FFTService:
         more host time than the whole decode at service bucket sizes.
         Real-kind shards (r2c/c2r) ship HALF the c2c wire payload
         (DESIGN.md §7), so their wire-time share is charged at
-        ``payload_scale=0.5``.
+        ``payload_scale=0.5``; the comm_efficient strategy's folded shards
+        at 1/q.  The mds/comm_efficient mask admits the k-th-order-statistic
+        responders (k = the plan's recovery threshold); the partial strategy
+        returns a per-FRAGMENT mask ``(n, N, r)`` admitting fragments until
+        the coverage condition (m*r finished fragments) is met.
         """
         cfg = self.cfg
-        k = coded_fft_threshold(cfg.n_workers, cfg.m)
-        scale = 0.5 if kind in self.REAL_KINDS else 1.0
+        plan = self.plan
+        k = int(getattr(plan, "recovery_threshold", cfg.m))
         lat = cfg.straggler.sample(
             (n_requests, cfg.n_workers), 1.0 / cfg.m, self.rng,
-            payload_scale=scale)
+            payload_scale=self._wire_scale(kind))
+        if int(getattr(plan, "fragments", 1)) > 1:
+            # fragment f of worker w lands at lat * fractions[f]; admit
+            # fragments until m*r (across all workers) have arrived
+            ft = lat[:, :, None] * np.asarray(plan.fragment_fractions)
+            need = int(plan.fragments_needed)
+            t_done = np.sort(ft.reshape(n_requests, -1), -1)[:, need - 1]
+            return lat, ft <= t_done[:, None, None]
         t_done = np.sort(lat, axis=-1)[:, k - 1]
         mask = lat <= t_done[:, None]
         return lat, mask
 
     def _account(self, lat: np.ndarray, mask: np.ndarray) -> None:
         cfg = self.cfg
-        k = coded_fft_threshold(cfg.n_workers, cfg.m)
+        plan = self.plan
         lat_sorted = np.sort(lat, axis=-1)
         self.stats.requests += lat.shape[0]
-        self.stats.coded_latency += float(lat_sorted[:, k - 1].sum())
+        if mask.ndim == 3:
+            # partial strategy: coded latency = fragment-coverage time;
+            # a tolerated straggler = a worker whose LAST fragment the
+            # master did not wait for
+            ft = lat[:, :, None] * np.asarray(plan.fragment_fractions)
+            need = int(plan.fragments_needed)
+            t_cov = np.sort(ft.reshape(lat.shape[0], -1), -1)[:, need - 1]
+            self.stats.coded_latency += float(t_cov.sum())
+            self.stats.stragglers_tolerated += int((~mask[..., -1]).sum())
+        else:
+            k = int(getattr(plan, "recovery_threshold", cfg.m))
+            self.stats.coded_latency += float(lat_sorted[:, k - 1].sum())
+            self.stats.stragglers_tolerated += int((~mask).sum())
         self.stats.uncoded_latency += float(lat_sorted[:, -1].sum())
-        self.stats.stragglers_tolerated += int((~mask).sum())
 
     # -- fault-tolerant bucket path (opt-in; DESIGN.md §12) --------------
     def _fault_arrivals(self, n_live: int, kind: str):
@@ -803,9 +905,25 @@ class FFTService:
         and requests that still miss get a typed ServiceError.
 
         Returns ``(masks, errors, t_comp, lat, round_faults, round_idx)``.
+
+        Strategy-generic (DESIGN.md §13): the worker-count threshold and
+        wire payload come from the configured plan (``m`` for mds,
+        ``m*q`` for comm_efficient), and the partial strategy swaps the
+        per-worker masks for per-FRAGMENT masks ``(n_live, N, r)`` --
+        the deadline gates each fragment separately
+        (:meth:`WorkerHealthTracker.fragment_mask_from_times`), ``met``
+        counts fragments against the m*r coverage condition, and a
+        re-dispatched shard lands all r fragments at once.
         """
         cfg = self.cfg
         n = self._n_workers()
+        plan = self.plan
+        need = int(getattr(plan, "recovery_threshold", cfg.m))
+        nf = int(getattr(plan, "fragments", 1))
+        frac = (np.asarray(plan.fragment_fractions, np.float64)
+                if nf > 1 else None)
+        # fragments needed for decode; in worker units it is `need`
+        need_units = int(getattr(plan, "fragments_needed", need))
         if self.health.n_workers < n:
             self.health.grow(n)       # elastic capacity growth keeps history
         round_idx = self._round
@@ -814,20 +932,41 @@ class FFTService:
               if self.injector is not None else RoundFaults())
         alive = (self.pool.mask() if self.pool is not None
                  else np.ones(n, bool))
-        scale = 0.5 if kind in self.REAL_KINDS else 1.0
+        scale = self._wire_scale(kind)
         lat = cfg.straggler.sample((n_live, n), 1.0 / cfg.m, self.rng,
                                    payload_scale=scale)
         if self.injector is not None:
             lat = self.injector.perturb_latencies(lat, round_idx)
         lat = np.where(alive[None, :], lat, np.inf)
         errors: list = [None] * n_live
-        masks = np.zeros((n_live, n), bool)
+        mshape = (n_live, n) if nf == 1 else (n_live, n, nf)
+        masks = np.zeros(mshape, bool)
         t_comp = np.full(n_live, np.inf)
 
-        if int(alive.sum()) < cfg.m:
+        def units(mk):
+            """Decodable-progress count for ONE request's mask."""
+            return int(mk.sum())
+
+        def admit(times, window):
+            """Per-worker (or per-fragment) arrivals inside ``window``."""
+            if nf > 1:
+                return (self.health.fragment_mask_from_times(
+                    times, window, frac) & alive[..., :, None])
+            return self.health.mask_from_times(times, window) & alive
+
+        def coverage_time(lat_rows):
+            """Per-request completion: need-th worker (need_units-th
+            fragment for partial) order statistic."""
+            if nf > 1:
+                ft = np.sort((lat_rows[:, :, None] * frac)
+                             .reshape(lat_rows.shape[0], -1), axis=1)
+                return ft[:, need_units - 1]
+            return np.sort(lat_rows, axis=1)[:, need - 1]
+
+        if int(alive.sum()) < need:
             err = ServiceError(
                 "insufficient_workers",
-                f"{int(alive.sum())} live workers < m={cfg.m}")
+                f"{int(alive.sum())} live workers < threshold {need}")
             errors = [err] * n_live
             self.stats.degraded += n_live
             masks[:] = True   # padding decode stays well-posed; never surfaced
@@ -835,17 +974,16 @@ class FFTService:
 
         if self.health.rounds == 0:
             # cold start: no learned estimates yet -- bootstrap from this
-            # round's own m-th order statistics
-            kth = np.sort(lat, axis=1)[:, cfg.m - 1]
+            # round's own threshold-order statistics
+            kth = coverage_time(lat)
             kth = kth[np.isfinite(kth)]
             deadline = (float(kth.max()) * (1.0 + cfg.deadline_slack)
                         if kth.size else float("inf"))
         else:
-            deadline = self.health.deadline(cfg.m, alive=alive)
-        masks = self.health.mask_from_times(lat, deadline) & alive[None, :]
-        met = masks.sum(axis=1) >= cfg.m
-        srt = np.sort(lat, axis=1)
-        t_comp[met] = srt[met, cfg.m - 1]
+            deadline = self.health.deadline(need, alive=alive)
+        masks = admit(lat, deadline)
+        met = masks.reshape(n_live, -1).sum(axis=1) >= need_units
+        t_comp[met] = coverage_time(lat)[met]
 
         killed = np.zeros(n, bool)
         for w in rf.killed:
@@ -860,9 +998,11 @@ class FFTService:
             window *= cfg.retry_backoff
             self.stats.retries += 1
             for i in np.flatnonzero(~met):
-                # late originals land inside the extended window
-                masks[i] |= self.health.mask_from_times(lat[i], window) & alive
-                missing = np.flatnonzero(alive & ~masks[i])
+                # late originals land inside the extended window (for
+                # partial: the late worker's finished fragment PREFIX)
+                masks[i] |= admit(lat[i], window)
+                done = masks[i] if nf == 1 else masks[i].all(axis=-1)
+                missing = np.flatnonzero(alive & ~done)
                 if missing.size and healthy.any():
                     # re-dispatch the missing shard rows to healthy workers:
                     # fresh work issued when the previous window closed,
@@ -871,9 +1011,9 @@ class FFTService:
                     redraw = cfg.straggler.sample(
                         missing.size, 1.0 / cfg.m, self.rng,
                         payload_scale=scale)
-                    masks[i, missing[prev + redraw <= window]] = True
+                    masks[i][missing[prev + redraw <= window]] = True
                     self.stats.redispatched_shards += int(missing.size)
-                if int(masks[i].sum()) >= cfg.m:
+                if units(masks[i]) >= need_units:
                     met[i] = True
                     t_comp[i] = window   # conservative: met at window close
         for i in np.flatnonzero(~met):
@@ -881,9 +1021,10 @@ class FFTService:
                 reason = "insufficient_workers"
                 detail = "no healthy workers to re-dispatch to"
             else:
-                reason = "retries_exhausted"
-                detail = (f"{int(masks[i].sum())}/{cfg.m} shards after "
+                unit = "fragments" if nf > 1 else "shards"
+                detail = (f"{units(masks[i])}/{need_units} {unit} after "
                           f"{cfg.max_retries} retries")
+                reason = "retries_exhausted"
             errors[i] = ServiceError(reason, detail)
             self.stats.degraded += 1
             masks[i] = True
@@ -923,7 +1064,7 @@ class FFTService:
         masks, errors, t_comp, lat, rf, round_idx = \
             self._fault_arrivals(n_live, kind)
         self._account_robust(t_comp, lat, masks, errors)
-        full = np.ones((bucket, n), bool)
+        full = np.ones((bucket,) + masks.shape[1:], bool)
         full[:n_live] = masks
         errors = errors + [None] * (bucket - n_live)
         live_corrupt = [w for w in sorted(rf.corrupt) if w < n]
@@ -1008,6 +1149,9 @@ class FFTService:
                                 res.error_worker_indices).tolist():
                             self.health.flag_byzantine(int(w))
                     y = res.output
+            elif int(getattr(plan, "fragments", 1)) > 1:
+                y = plan.decode(jnp.asarray(b[i]).astype(plan.dtype),
+                                fragment_mask=jnp.asarray(masks[i]))
             else:
                 y = plan.decode(jnp.asarray(b[i]).astype(plan.dtype),
                                 mask=jnp.asarray(masks[i]))
@@ -1235,7 +1379,7 @@ class FFTService:
                     continue        # scalar<->1-D, tuple<->n-D only
                 for b in sorted(set(buckets)):
                     xb = self._bucket_buffer(s, b, k)
-                    masks = np.ones((b, self._n_workers()), bool)
+                    masks = self._full_masks(s, k, b)
                     # always the FAST executors: the robust path reuses
                     # them whenever no corruption/verification is in play,
                     # so precompiling here serves both modes
@@ -1263,6 +1407,14 @@ class FFTService:
         # allocate in the service dtype (NOT the first request's dtype --
         # a real-valued request must not narrow the whole bucket's buffer)
         return np.zeros((bucket, s), dtype=cdt)
+
+    def _full_masks(self, s, kind: str, bucket: int) -> np.ndarray:
+        """All-responders mask block for one bucket: ``(bucket, N)``, or
+        ``(bucket, N, r)`` per-fragment for partial-work strategies."""
+        plan = self._plan_for(s, kind)
+        nf = int(getattr(plan, "fragments", 1))
+        shape = (bucket, self._n_workers()) + ((nf,) if nf > 1 else ())
+        return np.ones(shape, bool)
 
     def _bucket_args(self, s: int, kind: str, xb: np.ndarray,
                      masks: np.ndarray) -> tuple:
@@ -1340,7 +1492,7 @@ class FFTService:
         lat, mask = self._simulate_arrivals(n_live, kind)
         self._account(lat, mask)
         # padded rows: every worker "responds" so decode stays well-posed
-        masks = np.ones((bucket, cfg.n_workers), bool)
+        masks = self._full_masks(s, kind, bucket)
         masks[:n_live] = mask
         return bucket, self._bucket_args(s, kind, xb, masks)
 

@@ -1,0 +1,128 @@
+"""The documented real-kind ``2m | s`` ValueError, per kind and entry point.
+
+Every real kind (r2c, c2r, rfftn, irfftn) pair-packs its interleave
+shards along the halved axis, so the shard length there must be even.
+The contract (README "supported kinds", DESIGN.md §9): an odd-shard
+config raises a ``ValueError`` whose message contains the literal
+constraint string ``"2m | s"`` -- at PLAN construction, at the kernel
+packing op, and from the SERVICE entry points -- never an opaque reshape
+error deeper in the pipeline.
+
+The irfftn service entry is the one place the error is unreachable BY
+CONSTRUCTION: a c2r bucket's last axis is ``2*(h-1)`` (always even) and
+``plan_factors(..., even_last_shard=True)`` only returns factors with
+``2*f | s`` -- so that entry gets a structural-guarantee test instead.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CodedIRFFT, CodedIRFFTN, CodedRFFT, CodedRFFTN
+from repro.core.coded_fft import plan_factors
+from repro.core.rfft import require_even_shards
+from repro.kernels import ops
+from repro.serving.fft_service import FFTService, FFTServiceConfig
+
+# s = 18, m = 2: m | s holds (shards of 9) but 2m = 4 does not -- the
+# exact gap the named check exists for (a plain m | s validation would
+# accept it).  m must be EVEN to exhibit the gap at an even s, which the
+# c2r entry point needs (its bucket length 2*(h-1) is always even).
+ODD_S, ODD_M = 18, 2
+
+
+def test_require_even_shards_is_the_named_contract():
+    require_even_shards(24, 3)           # 2m | s: fine
+    assert ODD_S % ODD_M == 0            # the gap: m | s ...
+    assert ODD_S % (2 * ODD_M) != 0      # ... but 2m does not
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        require_even_shards(ODD_S, ODD_M)
+    with pytest.raises(ValueError, match=r"axis 1"):
+        require_even_shards(ODD_S, ODD_M, axis=1)
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        require_even_shards(0, 1)        # s must be positive too
+
+
+@pytest.mark.parametrize("cls", [CodedRFFT, CodedIRFFT])
+def test_1d_real_plans_raise_named_error(cls):
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        cls(s=ODD_S, m=ODD_M, n_workers=6)
+
+
+@pytest.mark.parametrize("cls", [CodedRFFTN, CodedIRFFTN])
+def test_nd_real_plans_raise_named_error(cls):
+    # the halved (last) axis carries the odd shard: 18 / 2 = 9
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        cls(shape=(4, ODD_S), factors=(1, ODD_M), n_workers=6)
+
+
+def test_plan_factors_even_last_requires_even_axis():
+    # even_last_shard placement serves any shape with a valid real-kind
+    # factorization -- but an ODD last axis can never pack
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        plan_factors((4, 27), 3, even_last_shard=True)
+
+
+def test_kernel_pack_real_planes_raises_named_error():
+    xb = jnp.zeros((2, ODD_S), jnp.float32)
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        ops.pack_real_planes(xb, ODD_M)
+
+
+@pytest.mark.parametrize("kind", ["r2c", "c2r", "rfftn"])
+def test_service_submit_raises_named_error(kind):
+    """Each reachable real-kind service entry point surfaces the
+    constraint (the bucket plan construction runs inside submit)."""
+    svc = FFTService(FFTServiceConfig(s=48, m=ODD_M, n_workers=6,
+                                      use_reference=True))
+    if kind == "r2c":
+        bad = np.zeros(ODD_S, np.float32)
+        call = lambda: svc.submit_rfft(bad)
+    elif kind == "c2r":
+        # a c2r request of h bins lands in the s = 2*(h-1) bucket;
+        # h = 10 -> s = 18, odd shards at m = 2
+        bad = np.zeros(ODD_S // 2 + 1, np.complex64)
+        call = lambda: svc.submit_irfft(bad)
+    else:
+        # odd LAST axis: no even_last_shard placement can exist
+        bad = np.zeros((4, 27), np.float32)
+        call = lambda: svc.submit_rfftn(bad)
+    with pytest.raises(ValueError, match=r"2m \| s"):
+        call()
+
+
+def test_irfftn_entry_is_structurally_even():
+    """The irfftn bucket's last axis is 2*(h-1) -- always even -- and
+    even_last_shard factor placement guarantees ``2*f | s``: the shape
+    whose LAST axis would trap a naive placement (18 = 2*9, so the
+    factor 2 must land on axis 0) still serves, matching numpy."""
+    svc = FFTService(FFTServiceConfig(s=48, m=ODD_M, n_workers=6,
+                                      use_reference=True))
+    assert plan_factors((4, ODD_S), ODD_M, even_last_shard=True) == (2, 1)
+    rng = np.random.default_rng(7)
+    t = rng.standard_normal((4, ODD_S)).astype(np.float32)
+    yn = np.fft.rfftn(t).astype(np.complex64)
+    np.testing.assert_allclose(svc.submit_irfftn(yn),
+                               np.fft.irfftn(yn, s=(4, ODD_S), axes=(0, 1)),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_even_config_still_serves_every_real_kind():
+    """The guard rejects exactly the odd-shard configs: the even twin of
+    the same (s, m) serves all four kinds."""
+    svc = FFTService(FFTServiceConfig(s=48, m=ODD_M, n_workers=6,
+                                      use_reference=True))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(48).astype(np.float32)
+    np.testing.assert_allclose(svc.submit_rfft(x), np.fft.rfft(x),
+                               rtol=2e-4, atol=2e-4)
+    y = np.fft.rfft(x).astype(np.complex64)
+    np.testing.assert_allclose(svc.submit_irfft(y), np.fft.irfft(y, n=48),
+                               rtol=2e-4, atol=2e-4)
+    t = rng.standard_normal((4, 48)).astype(np.float32)
+    np.testing.assert_allclose(svc.submit_rfftn(t), np.fft.rfftn(t),
+                               rtol=2e-3, atol=2e-3)
+    yn = np.fft.rfftn(t).astype(np.complex64)
+    np.testing.assert_allclose(svc.submit_irfftn(yn),
+                               np.fft.irfftn(yn, s=(4, 48), axes=(0, 1)),
+                               rtol=2e-3, atol=2e-3)

@@ -26,12 +26,14 @@ import pytest
 from _hypothesis_shim import HAVE_HYPOTHESIS, given, prop_settings, st
 
 from repro.core import (
+    REGISTRY,
     CodedFFT,
     CodedFFTMultiInput,
     CodedFFTND,
     CodedIFFT,
     CodedIRFFT,
     CodedIRFFTN,
+    CodedPartialFFT,
     CodedRFFT,
     CodedRFFTN,
     UncodedRepetitionFFT,
@@ -116,11 +118,22 @@ def _rand(shape, seed, *, dtype):
     return jnp.asarray(data.astype(dtype))
 
 
-def _poisoned_run(plan, x, mask):
-    """encode -> worker -> NaN-poison stragglers -> masked decode."""
+def _poisoned_run(plan, x, mask, *, fragment_mask=None):
+    """encode -> worker -> NaN-poison stragglers -> masked decode.
+
+    With ``fragment_mask`` (partial-work plans, DESIGN.md §13) the poison
+    is per-FRAGMENT: an unfinished fragment row holds NaN even when other
+    fragments of the same worker are live, proving decode reads exactly
+    the claimed coverage set.
+    """
     b = plan.worker_compute(plan.encode(x))
+    if fragment_mask is not None:
+        fm = jnp.asarray(fragment_mask)
+        shield = fm.reshape(fm.shape + (1,) * (b.ndim - fm.ndim))
+        b = jnp.where(shield, b, jnp.nan)
+        return plan.decode(b, fragment_mask=fm)
     mk = jnp.asarray(mask)
-    shield = mk.reshape(mk.shape + (1,) * len(plan.worker_shard_shape))
+    shield = mk.reshape(mk.shape + (1,) * (b.ndim - mk.ndim))
     b = jnp.where(shield, b, jnp.nan)
     return plan.decode(b, mask=mk)
 
@@ -278,6 +291,83 @@ def test_multi_input_matches_numpy(cfg, tier, batch, seed):
     _check(_poisoned_run(plan, t, mask),
            np.fft.fftn(np.asarray(t, np.complex128),
                        axes=tuple(range(-len(shape), 0))), rtol, cfg)
+
+
+# ----------------------------------------------------- strategy registry
+# Every registered strategy (core.strategies.REGISTRY) runs the SAME
+# differential harness: applicability-filtered configs, its OWN recovery
+# threshold, NaN-poisoned straggler draws.  A new strategy registered with
+# a factory + applicability predicate is verified here with zero new test
+# code (DESIGN.md §13).
+
+# extend the 1-D pool so the repetition entry (m^2 | N) draws non-trivial
+# configs too
+CONFIGS_REGISTRY = CONFIGS_1D + [(32, 2, 8), (64, 2, 4), (48, 2, 12)]
+
+
+def _fragment_masks(n: int, r: int, need: int, batch: int,
+                    seed: int) -> np.ndarray:
+    """Random sequential-prefix fragment patterns meeting the coverage
+    condition: worker w finished ``p_w`` fragments (0..r), total >= need."""
+    rng = np.random.default_rng(seed)
+    rows = max(batch, 1)
+    out = np.zeros((rows, n, r), bool)
+    for b in range(rows):
+        prefix = rng.integers(0, r + 1, size=n)
+        while prefix.sum() < need:
+            w = int(rng.integers(n))
+            prefix[w] = min(r, prefix[w] + 1)
+        for w, p in enumerate(prefix):
+            out[b, w, :p] = True
+    return out if batch else out[0]
+
+
+@prop_settings(max_examples=MAX_EXAMPLES)
+@given(name=st.sampled_from(sorted(REGISTRY)),
+       cfg=st.sampled_from(CONFIGS_REGISTRY), tier=st.sampled_from(TIERS),
+       batch=st.sampled_from(BATCHES), seed=st.integers(0, 10**6))
+def test_registry_strategy_matches_numpy(name, cfg, tier, batch, seed):
+    """Differential-vs-numpy over the whole strategy registry, worker-mask
+    draws at each strategy's own threshold (m for mds/partial, m*q for
+    comm_efficient, N - N/m^2 + 1 for repetition)."""
+    s, m, n = cfg
+    backend, dtype, rtol = tier
+    ent = REGISTRY[name]
+    if not ent.applicable(s, m, n, None):
+        return          # the registry's own applicability filter
+    if not ent.kernel_ok:
+        backend = "reference"   # the planar kernels are (N, m) MDS layouts
+    plan = ent.build(s, m, n, dtype=dtype, backend=backend)
+    if name == "repetition" and batch:
+        batch = 0       # the baseline's host-side decode is checked 1-D
+    shape = ((batch, s) if batch else (s,))
+    x = _rand(shape, seed, dtype=dtype)
+    mask = _masks(n, int(plan.recovery_threshold), batch, seed)
+    _check(_poisoned_run(plan, x, mask),
+           np.fft.fft(np.asarray(x, np.complex128), axis=-1), rtol,
+           (name, cfg))
+
+
+@prop_settings(max_examples=MAX_EXAMPLES)
+@given(cfg=st.sampled_from(CONFIGS_REGISTRY), r=st.sampled_from([2, 3]),
+       tier=st.sampled_from(TIERS), batch=st.sampled_from(BATCHES),
+       seed=st.integers(0, 10**6))
+def test_partial_fragment_prefixes_match_numpy(cfg, r, tier, batch, seed):
+    """Partial-work decode from RAGGED fragment prefixes: random per-worker
+    progress 0..r meeting the m*r coverage condition, unfinished fragment
+    rows NaN-poisoned -- stragglers contribute prefixes, not holes."""
+    s, m, n = cfg
+    backend, dtype, rtol = tier
+    if s % (m * r) or m * r > 8:
+        return          # keep the decode width inside the tier rtols
+    plan = CodedPartialFFT(s=s, m=m, n_workers=n, r=r, dtype=dtype,
+                           backend="reference")
+    shape = ((batch, s) if batch else (s,))
+    x = _rand(shape, seed, dtype=dtype)
+    fmask = _fragment_masks(n, r, plan.fragments_needed, batch, seed)
+    _check(_poisoned_run(plan, x, None, fragment_mask=fmask),
+           np.fft.fft(np.asarray(x, np.complex128), axis=-1), rtol,
+           (cfg, r))
 
 
 # -------------------------------------------------------- non-MDS baseline

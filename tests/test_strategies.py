@@ -79,3 +79,127 @@ def test_coded_fft_empirical_threshold_beats_baselines():
     # same N, m: repetition needs 7 of 8 in the worst case
     rep = UncodedRepetitionFFT(s=s, m=m, n_workers=n, dtype=C128)
     assert rep.worst_case_threshold() == 7 > coded.recovery_threshold == 2
+
+
+# -- exhaustive per-strategy threshold verification (DESIGN.md §13) ----------
+#
+# For every registered strategy at a small (N, m): enumerate EVERY responder
+# subset (and, for the partial strategy, every sequential fragment pattern)
+# and assert ``decodable()`` holds iff the claimed recovery condition is met
+# -- then spot-check that a boundary set actually decodes to numpy's answer.
+
+from repro.core import (  # noqa: E402
+    REGISTRY,
+    CodedCommEffFFT,
+    CodedPartialFFT,
+    make_strategy,
+)
+
+# per-strategy small configs: (s, m, n_workers, param)
+EXHAUSTIVE_CFGS = [
+    ("mds", 16, 2, 4, None),
+    ("mds", 24, 3, 5, None),
+    ("partial", 16, 2, 4, 2),
+    ("partial", 24, 2, 3, 3),
+    ("comm_efficient", 16, 2, 5, 2),
+    ("comm_efficient", 24, 2, 6, 3),
+    ("repetition", 16, 2, 8, None),
+]
+
+
+def _subset_mask(n, sub):
+    mask = np.zeros(n, bool)
+    mask[list(sub)] = True
+    return mask
+
+
+@pytest.mark.parametrize("name,s,m,n,param", EXHAUSTIVE_CFGS)
+def test_registry_entries_registered_and_applicable(name, s, m, n, param):
+    ent = REGISTRY[name]
+    assert ent.applicable(s, m, n, param), (name, s, m, n, param)
+    plan = make_strategy(name, s, m, n, dtype=C128, param=param)
+    assert plan.recovery_threshold >= 1
+
+
+@pytest.mark.parametrize("name,s,m,n,param", EXHAUSTIVE_CFGS)
+def test_exhaustive_worker_subsets_decodable_iff_threshold(name, s, m, n,
+                                                           param):
+    """Every one of the 2^N responder subsets: decodable() iff the
+    strategy's claimed worker-count condition holds."""
+    plan = make_strategy(name, s, m, n, dtype=C128, param=param)
+    for size in range(n + 1):
+        for sub in itertools.combinations(range(n), size):
+            mask = _subset_mask(n, sub)
+            if name == "repetition":
+                # replication is NOT count-decodable: the claim is only
+                # that every subset >= threshold works and SOME smaller
+                # subset fails (worst case) -- asserted per-subset here
+                want = all(
+                    any(plan.block_of_worker(w) == (i, j)
+                        for w in sub)
+                    for i in range(plan.m) for j in range(plan.m))
+            else:
+                want = size >= plan.recovery_threshold
+            assert plan.decodable(mask) == want, (name, sub)
+
+
+@pytest.mark.parametrize("name,s,m,n,param", EXHAUSTIVE_CFGS)
+def test_boundary_subsets_actually_decode(name, s, m, n, param):
+    """Claimed-threshold subsets don't just SAY decodable -- they decode
+    to numpy's transform (every exactly-threshold subset)."""
+    plan = make_strategy(name, s, m, n, dtype=C128, param=param)
+    x = _rand(s, seed=7)
+    want = np.fft.fft(np.asarray(x))
+    b = plan.worker_compute(plan.encode(x))
+    k = int(plan.recovery_threshold)
+    for sub in itertools.combinations(range(n), k):
+        mask = _subset_mask(n, sub)
+        if not plan.decodable(mask):
+            continue    # repetition: only block-covering subsets decode
+        got = plan.decode(b, mask=jnp.asarray(mask))
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-6,
+                                   err_msg=f"{name} {sub}")
+
+
+def test_partial_exhaustive_fragment_patterns():
+    """Every sequential fragment pattern at small (N, r): decodable iff
+    total finished fragments >= m*r, and decode is exact at the boundary."""
+    s, m, n, r = 16, 2, 3, 2
+    plan = CodedPartialFFT(s=s, m=m, n_workers=n, r=r, dtype=C128)
+    need = plan.fragments_needed
+    x = _rand(s, seed=8)
+    want = np.fft.fft(np.asarray(x))
+    b = plan.worker_compute(plan.encode(x))
+    bn = np.asarray(b)
+    for prefixes in itertools.product(range(r + 1), repeat=n):
+        fmask = np.zeros((n, r), bool)
+        for w, p in enumerate(prefixes):
+            fmask[w, :p] = True
+        want_dec = sum(prefixes) >= need
+        assert plan.decodable(fragment_mask=fmask) == want_dec, prefixes
+        if want_dec:
+            # poison the unfinished fragments: decode must not read them
+            poisoned = bn.copy()
+            poisoned[~fmask] = np.nan
+            got = plan.decode(jnp.asarray(poisoned),
+                              fragment_mask=jnp.asarray(fmask))
+            np.testing.assert_allclose(np.asarray(got), want, atol=1e-6,
+                                       err_msg=str(prefixes))
+
+
+def test_comm_efficient_payload_is_folded():
+    """The comm-efficient worker ships 1/q of the MDS shard -- the wire
+    saving the m*q threshold buys (Jeong et al. 1805.09891)."""
+    s, m, n, q = 32, 2, 6, 2
+    plan = CodedCommEffFFT(s=s, m=m, n_workers=n, q=q, dtype=C128)
+    assert plan.worker_shard_shape == (s // m // q,)
+    assert plan.stored_shard_shape == (s // m,)
+    assert plan.payload_scale == 1.0 / q
+    assert plan.recovery_threshold == m * q
+    x = _rand(s, seed=9)
+    b = plan.worker_compute(plan.encode(x))
+    assert b.shape == (n, s // m // q)
+    # below-threshold masks refuse
+    assert not plan.decodable(np.arange(n) < m * q - 1)
+    with pytest.raises(ValueError):
+        plan.decode(b, subset=jnp.arange(m * q - 1))

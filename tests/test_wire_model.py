@@ -1,0 +1,118 @@
+"""Wire-model regression: payload_scale charging across strategies.
+
+The StragglerModel splits ``t0`` into compute and wire shares
+(``wire_frac``), and every per-draw ``payload_scale`` scales only the
+wire share: ``t0_eff = t0 * (1 - wire_frac + wire_frac * ps)``.  The
+service must charge each bucket family its TRUE per-shard payload:
+
+* c2c mds shards ship the full s/m payload      -> payload_scale 1
+* r2c/c2r pair-packed shards ship half          -> payload_scale 0.5
+* comm_efficient folded shards ship 1/q         -> payload_scale 1/q
+* partial fragments reship the full shard total -> payload_scale 1
+
+and the modeled round times must show the Jeong et al. (1805.09891)
+trade: the folded payload WINS when the wire dominates and LOSES when
+compute dominates (the m*q-th order statistic costs more than the m-th).
+"""
+
+import numpy as np
+import pytest
+
+from repro.distributed.straggler import StragglerModel
+from repro.serving.fft_service import FFTService, FFTServiceConfig
+
+S, M, N, Q = 256, 2, 8, 2
+
+
+def _svc(strategy, wire_frac=0.5, **kw):
+    return FFTService(FFTServiceConfig(
+        s=S, m=M, n_workers=N, strategy=strategy, use_reference=True,
+        straggler=StragglerModel(t0=1.0, mu=1.0, wire_frac=wire_frac), **kw))
+
+
+def test_t0_eff_payload_scaling():
+    """payload_scale scales ONLY the wire share of t0."""
+    sm = StragglerModel(t0=2.0, mu=1.0, wire_frac=0.25)
+    assert sm._t0_eff(1.0) == pytest.approx(2.0)        # inert at ps=1
+    assert sm._t0_eff(0.5) == pytest.approx(2.0 * (0.75 + 0.25 * 0.5))
+    assert sm._t0_eff(0.0) == pytest.approx(1.5)        # wire share gone
+    # no wire split -> payload_scale is inert entirely
+    assert StragglerModel(t0=2.0, mu=1.0, wire_frac=0.0)._t0_eff(0.1) == 2.0
+
+
+def test_service_charges_per_strategy_payload():
+    """The service's wire scale per bucket family (DESIGN.md §13)."""
+    mds = _svc("mds")
+    assert mds._wire_scale("c2c") == 1.0
+    assert mds._wire_scale("r2c") == 0.5      # pair-packed half payload
+    assert mds._wire_scale("c2r") == 0.5
+    assert mds._wire_scale("rfftn") == 0.5
+    assert _svc("comm_efficient")._wire_scale("c2c") == pytest.approx(1 / Q)
+    assert _svc("comm_efficient", strategy_param=4)._wire_scale("c2c") \
+        == pytest.approx(0.25)
+    assert _svc("partial")._wire_scale("c2c") == 1.0
+
+
+def test_sampled_latencies_shift_by_wire_share():
+    """Same seed => identical exponential noise, so the drawn latencies
+    differ between payload scales by EXACTLY the deterministic wire-share
+    shift ``workload * t0 * wire_frac * (1 - ps)``."""
+    wf = 0.6
+    sm = StragglerModel(t0=1.0, mu=1.0, wire_frac=wf)
+    full = sm.sample((4, N), 1.0 / M, np.random.default_rng(3))
+    half = sm.sample((4, N), 1.0 / M, np.random.default_rng(3),
+                     payload_scale=0.5)
+    fold = sm.sample((4, N), 1.0 / M, np.random.default_rng(3),
+                     payload_scale=1.0 / Q)
+    np.testing.assert_allclose(full - half, (1.0 / M) * wf * 0.5, rtol=1e-12)
+    np.testing.assert_allclose(full - fold, (1.0 / M) * wf * (1 - 1.0 / Q),
+                               rtol=1e-12)
+
+
+def test_simulate_arrivals_use_strategy_payload():
+    """End-to-end: two same-seed services draw the same noise; the
+    comm_efficient one's latencies sit EXACTLY the folded wire share
+    below the mds one's."""
+    wf = 0.8
+    mds = _svc("mds", wire_frac=wf, seed=11)
+    ce = _svc("comm_efficient", wire_frac=wf, seed=11)
+    lat_mds, _ = mds._simulate_arrivals(5, "c2c")
+    lat_ce, _ = ce._simulate_arrivals(5, "c2c")
+    np.testing.assert_allclose(
+        lat_mds - lat_ce, (1.0 / M) * wf * (1 - 1.0 / Q), rtol=1e-12)
+
+
+def test_modeled_rounds_show_comm_efficient_crossover():
+    """Modeled expected round times (harmonic closed form): the folded
+    payload beats plain MDS when the wire dominates and loses when
+    compute does -- the trade the bench race demonstrates empirically."""
+    def round_time(wire_frac, strategy):
+        sm = StragglerModel(t0=1.0, mu=4.0, wire_frac=wire_frac)
+        if strategy == "mds":
+            return sm.expected_kth(N, M, 1.0 / M)
+        return sm.expected_kth(N, M * Q, 1.0 / M, payload_scale=1.0 / Q)
+
+    assert round_time(0.8, "comm_efficient") < round_time(0.8, "mds")
+    assert round_time(0.0, "comm_efficient") > round_time(0.0, "mds")
+    # threshold m*q must fit in N or the round never completes
+    sm = StragglerModel(t0=1.0, mu=1.0)
+    assert sm.expected_kth(M * Q - 1, M * Q, 1.0 / M) == float("inf")
+
+
+def test_partial_coverage_beats_mds_with_slow_but_alive_fleet():
+    """The partial-work win (Wang 1804.09791): with some workers slowed
+    (but alive), the m*r-th FRAGMENT arrives before the m-th full shard
+    -- prefixes from the slow workers count."""
+    rng = np.random.default_rng(5)
+    sm = StragglerModel(t0=1.0, mu=1.0, wire_frac=0.0)
+    r, rounds = 4, 300
+    slow = np.ones(N)
+    slow[: N // 2] = 3.0     # half the fleet 3x slow -- but ALIVE
+    frac = np.arange(1, r + 1) / r
+    t_mds = t_part = 0.0
+    for _ in range(rounds):
+        lat = sm.sample(N, 1.0 / M, rng) * slow
+        t_mds += np.sort(lat)[M - 1]
+        ft = np.sort((lat[:, None] * frac).ravel())
+        t_part += ft[M * r - 1]
+    assert t_part < t_mds
